@@ -1,0 +1,32 @@
+"""Full dry-run campaign: every (arch x shape x mesh), JSONs incrementally."""
+import json, pathlib, time, traceback, sys
+
+ORDER = ["qwen3-0.6b", "xlstm-1.3b", "zamba2-1.2b", "qwen2.5-3b",
+         "phi-3-vision-4.2b", "whisper-large-v3", "deepseek-7b",
+         "mixtral-8x7b", "deepseek-v2-lite-16b", "nemotron-4-340b"]
+SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+def main():
+    from repro.launch.dryrun import dryrun_one
+    outdir = pathlib.Path("results/dryrun")
+    outdir.mkdir(parents=True, exist_ok=True)
+    for arch in ORDER:
+        for shape in SHAPES:
+            for mp in (False, True):
+                tag = f"{arch}__{shape}__{'2pod' if mp else '1pod'}"
+                f = outdir / f"{tag}.json"
+                if f.exists() and json.loads(f.read_text()).get("status") in ("ok", "skipped"):
+                    print(f"{tag}: cached", flush=True)
+                    continue
+                t0 = time.time()
+                try:
+                    rec = dryrun_one(arch, shape, multi_pod=mp, verbose=False)
+                except Exception as e:
+                    traceback.print_exc(limit=5)
+                    rec = {"arch": arch, "shape": shape, "multi_pod": mp,
+                           "status": "error", "error": f"{type(e).__name__}: {str(e)[:500]}"}
+                f.write_text(json.dumps(rec, indent=1))
+                print(f"{tag}: {rec['status']} ({time.time()-t0:.0f}s)", flush=True)
+
+if __name__ == "__main__":
+    main()

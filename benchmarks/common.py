@@ -1,0 +1,25 @@
+"""Shared helpers for the benchmark suite."""
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+
+def lm_batch(cfg, b, s, seed=1):
+    tok = jax.random.randint(jax.random.key(seed), (b, s), 0, cfg.vocab_size)
+    return {"tokens": tok, "labels": jnp.roll(tok, -1, 1),
+            "global_tokens": jnp.float32(b * s)}
+
+
+def timeit(fn, *args, repeats=3):
+    fn(*args)  # warm
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / repeats
+
+
+def csv(name, us, derived=""):
+    print(f"{name},{us:.1f},{derived}")

@@ -1,0 +1,61 @@
+"""Paper Section 8.3 — eviction strategy ablation: CPU<->device chunk
+traffic for OPT (tracer-guided Belady) vs LRU vs FIFO across budgets."""
+
+from benchmarks.common import csv, lm_batch
+from repro.configs import get_config, model_class
+from repro.core.engine import PatrickStarEngine
+
+
+def run(policy, budget):
+    cfg = get_config("gpt2-paper-1b", smoke=True).replace(
+        num_layers=4, param_dtype="float32", compute_dtype="float32")
+    eng = PatrickStarEngine(model_class(cfg), cfg,
+                            device_memory_bytes=budget, policy=policy,
+                            device_aware_placement=False)
+    batch = lm_batch(cfg, 4, 64)
+    eng.step(batch)
+    m = eng.step(batch)
+    return m.moved_bytes
+
+
+def adversarial_microbench():
+    """LM fwd/bwd sweeps are LRU-friendly (reverse scans), so the engine
+    numbers tie; the mechanism win shows on cyclic reference patterns —
+    the manager-level Belady demonstration."""
+    from repro.core.chunk import TensorSpec, build_chunk_map
+    from repro.core.manager import ChunkManager
+    from repro.core.state import TensorState
+
+    specs = [TensorSpec(f"t{i}", (64,)) for i in range(8)]
+    cmap = build_chunk_map(specs, 64)
+    pattern = [0, 1, 2, 3] * 16
+    out = {}
+    for policy in ("opt", "lru", "fifo"):
+        mgr = ChunkManager(cmap, device_capacity_bytes=3 * 64 * 4,
+                           policy=policy)
+        moments = {}
+        for m, t in enumerate(pattern):
+            moments.setdefault(t, []).append(m)
+        mgr.register_moments(moments)
+        for m, t in enumerate(pattern):
+            mgr.set_moment(m)
+            mgr.access_tensor(f"t{t}")
+            mgr.release_tensor(f"t{t}", TensorState.HOLD_AFTER_FWD)
+        out[policy] = mgr.stats.total_bytes
+    return out
+
+
+def main():
+    for budget in (2_500_000, 4_000_000, 6_000_000):
+        vals = {p: run(p, budget) for p in ("opt", "lru", "fifo")}
+        csv(f"eviction/budget{budget//1_000_000}MB", 0.0,
+            f"opt={vals['opt']};lru={vals['lru']};fifo={vals['fifo']}")
+        assert vals["opt"] <= vals["lru"], vals
+    mb = adversarial_microbench()
+    csv("eviction/cyclic_microbench", 0.0,
+        f"opt={mb['opt']};lru={mb['lru']};fifo={mb['fifo']}")
+    assert mb["opt"] < mb["lru"]
+
+
+if __name__ == "__main__":
+    main()

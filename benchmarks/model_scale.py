@@ -1,0 +1,89 @@
+"""Paper Fig. 13 — maximal trainable model scale per system.
+
+Empirical miniature: with a fixed simulated device budget (and unbounded
+host), find the largest GPT-ladder depth each strategy trains:
+
+  patrickstar   chunked, dynamic eviction (the engine)
+  static        ZeRO-Offload-style: ALL OS on host, params must fit the
+                device working set statically (engine with eviction
+                disabled-ish: device budget must hold ALL param chunks)
+  device-only   PyTorch-style: all 4 streams resident on device
+
+Analytic extrapolation to the paper's testbeds is printed alongside
+(model data = 14M chunked vs 18M static; GPU must hold param fp16 +
+peak non-model for static)."""
+
+import jax
+import numpy as np
+
+from benchmarks.common import csv, lm_batch
+from repro.configs import get_config, model_class
+from repro.core.engine import PatrickStarEngine
+from repro.core.manager import OutOfMemory
+
+
+def _try_train(num_layers, device_bytes, mode):
+    cfg = get_config("gpt2-paper-1b", smoke=True).replace(
+        num_layers=num_layers, param_dtype="float32", compute_dtype="float32")
+    try:
+        if mode == "patrickstar":
+            eng = PatrickStarEngine(model_class(cfg), cfg,
+                                    device_memory_bytes=device_bytes)
+        elif mode == "static":
+            # all OS pinned host; params must ALL fit on device at once
+            eng = PatrickStarEngine(model_class(cfg), cfg,
+                                    device_memory_bytes=device_bytes,
+                                    device_aware_placement=False)
+            need = eng.cmap.capacity * 4
+            if need > device_bytes * 0.8:  # 20% headroom for non-model
+                raise OutOfMemory("static partition: params exceed device")
+        else:  # device-only
+            eng = PatrickStarEngine(model_class(cfg), cfg,
+                                    device_memory_bytes=device_bytes)
+            need = eng.cmap.capacity * 4 * 4  # all four streams
+            if need > device_bytes:
+                raise OutOfMemory("all streams exceed device")
+        eng.step(lm_batch(cfg, 2, 32))
+        return True
+    except OutOfMemory:
+        return False
+
+
+def max_layers(device_bytes, mode):
+    best = 0
+    for layers in (1, 2, 4, 6, 8, 12, 16, 24, 32):
+        if _try_train(layers, device_bytes, mode):
+            best = layers
+        else:
+            break
+    return best
+
+
+def main():
+    budget = 3_000_000  # simulated device bytes
+    results = {m: max_layers(budget, m) for m in
+               ("patrickstar", "static", "device-only")}
+    for mode, layers in results.items():
+        csv(f"model_scale/{mode}", 0.0, f"max_layers={layers}")
+    assert results["patrickstar"] >= results["static"] >= results["device-only"]
+    # analytic paper-testbed reproduction (YARD: 8x32GB V100 + 240GB CPU).
+    # Paper Sec. 9.2.1: chunkable space = 32*20%*8 + 240 = 291.2 GB at 86%
+    # utilization over 14 bytes/param -> 18B, the reported maximum.
+    gpu, cpu, n_gpu = 32.0, 240.0, 8
+    chunkable = gpu * 0.2 * n_gpu + cpu
+    ps_params = chunkable * 0.86 / 14
+    csv("model_scale/analytic_patrickstar_B", 0.0,
+        f"params={ps_params:.1f}B (paper measured: 18B on YARD)")
+    # ZeRO-Offload-style static partition: OS+grads (16 bytes/param) must
+    # fit CPU *and* param fp16 + peak non-model must fit each GPU; the
+    # paper measures 4B for DeepSpeed-DP on 8 GPUs (framework buffers).
+    static_theoretical = cpu / 16
+    csv("model_scale/analytic_static_B", 0.0,
+        f"params={static_theoretical:.1f}B theoretical; paper measured 4B")
+    csv("model_scale/analytic_ratio", 0.0,
+        f"x{ps_params/4:.2f} vs measured DeepSpeed-DP "
+        f"(paper: 3x DP / 2.25x vs +MP)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""§Perf hillclimb: three pairs, hypothesis-driven option ladder.
+
+Each iteration re-lowers + compiles the production-mesh step and records
+memory_analysis + HLO collectives + analytical terms."""
+import json, pathlib, time, traceback
+
+PAIRS = {
+    # worst memory / useful-ratio pair
+    "xlstm-1.3b__train_4k": [
+        ("baseline", {}),
+        ("inner_remat", {"inner_remat": True}),
+        ("inner_remat+accum8", {"inner_remat": True, "accum_steps": 8}),
+        ("inner_remat+accum8+xent2k", {"inner_remat": True, "accum_steps": 8,
+                                       "xent_block": 2048}),
+        ("inner_remat+accum16+xent2k", {"inner_remat": True,
+                                        "accum_steps": 16,
+                                        "xent_block": 2048}),
+    ],
+    # most collective-bound pair (EP MoE psum payloads)
+    "deepseek-v2-lite-16b__train_4k": [
+        ("baseline", {}),
+        ("combine_first", {"moe_combine_first": True}),
+        ("combine_first+accum8", {"moe_combine_first": True, "accum_steps": 8,
+                                  "inner_remat": True}),
+        ("cf+accum8+xent2k", {"moe_combine_first": True, "accum_steps": 8,
+                              "inner_remat": True, "xent_block": 2048}),
+    ],
+    # paper-representative dense pair
+    "deepseek-7b__train_4k": [
+        ("baseline", {}),
+        ("accum8", {"accum_steps": 8, "inner_remat": True}),
+        ("accum8+xent2k", {"accum_steps": 8, "inner_remat": True,
+                           "xent_block": 2048}),
+        ("accum8+xent2k+dots", {"accum_steps": 8, "inner_remat": True,
+                                "xent_block": 2048, "remat": "dots"}),
+    ],
+}
+
+def main():
+    from repro.launch.dryrun import dryrun_one
+    from repro.runtime.step import RuntimeOptions
+    out = pathlib.Path("results/perf"); out.mkdir(parents=True, exist_ok=True)
+    for pair, ladder in PAIRS.items():
+        arch, shape = pair.split("__")
+        for tag, kw in ladder:
+            f = out / f"{pair}__{tag}.json"
+            if f.exists() and json.loads(f.read_text()).get("status") == "ok":
+                print(f"{pair} {tag}: cached", flush=True); continue
+            t0 = time.time()
+            try:
+                rec = dryrun_one(arch, shape, multi_pod=False,
+                                 options=RuntimeOptions(**kw), verbose=False)
+                rec["perf_tag"] = tag
+                rec["options"] = kw
+            except Exception as e:
+                traceback.print_exc(limit=4)
+                rec = {"status": "error", "error": f"{type(e).__name__}: {str(e)[:400]}",
+                       "perf_tag": tag}
+            f.write_text(json.dumps(rec, indent=1))
+            print(f"{pair} {tag}: {rec['status']} ({time.time()-t0:.0f}s) "
+                  f"perdev={rec.get('per_device_bytes',0)/1e9:.2f}GB "
+                  f"coll={rec.get('collective_link_bytes',0):.3g}", flush=True)
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""Benchmark suite runner: one module per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV lines."""
+
+# The comm-volume benchmark compiles a dp=2 x tp=2 step, so the bench
+# process uses 4 host devices (NOT the dry-run's 512 — that stays local
+# to repro/launch/dryrun.py).
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=4 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+import sys
+import traceback
+
+MODULES = [
+    "benchmarks.model_scale",     # Fig. 13
+    "benchmarks.throughput",      # Fig. 14/15
+    "benchmarks.breakdown",       # Fig. 16
+    "benchmarks.comm_volume",     # Sec. 7 / Table 5
+    "benchmarks.chunk_search",    # Table 3 / Fig. 12
+    "benchmarks.eviction",        # Sec. 8.3
+    "benchmarks.tracer_bench",    # Fig. 2 / Sec. 8.1
+]
+
+
+def main() -> None:
+    import importlib
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for mod in MODULES:
+        try:
+            importlib.import_module(mod).main()
+        except Exception:  # noqa: BLE001
+            failures += 1
+            traceback.print_exc()
+            print(f"{mod},0.0,ERROR")
+    if failures:
+        sys.exit(f"{failures} benchmark modules failed")
+
+
+if __name__ == "__main__":
+    main()

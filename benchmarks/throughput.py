@@ -1,0 +1,41 @@
+"""Paper Fig. 14/15 — iteration throughput across model sizes and
+strategies (engine, simulated device, CPU wall-clock; relative numbers
+are the signal, as the paper's Tflops are hardware-bound)."""
+
+import time
+
+from benchmarks.common import csv, lm_batch
+from repro.configs import get_config, model_class
+from repro.core.engine import PatrickStarEngine
+
+
+def run(layers, policy, device_bytes, placement=True):
+    cfg = get_config("gpt2-paper-1b", smoke=True).replace(
+        num_layers=layers, param_dtype="float32", compute_dtype="float32")
+    eng = PatrickStarEngine(model_class(cfg), cfg,
+                            device_memory_bytes=device_bytes, policy=policy,
+                            device_aware_placement=placement)
+    batch = lm_batch(cfg, 4, 64)
+    eng.step(batch)  # warm-up iteration (traces)
+    t0 = time.perf_counter()
+    n = 3
+    moved = 0
+    for _ in range(n):
+        m = eng.step(batch)
+        moved += m.moved_bytes
+    dt = (time.perf_counter() - t0) / n
+    # model flops per iteration ~ 6*N*D
+    n_params = eng.cmap.total_numel
+    flops = 6 * n_params * 4 * 64
+    return dt, flops / dt / 1e9, moved / n
+
+
+def main():
+    for layers in (2, 4, 8):
+        dt, gflops, moved = run(layers, "opt", 6_000_000)
+        csv(f"throughput/L{layers}", dt * 1e6,
+            f"gflops={gflops:.2f};moved_MB={moved/1e6:.1f}")
+
+
+if __name__ == "__main__":
+    main()

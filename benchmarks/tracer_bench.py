@@ -1,0 +1,30 @@
+"""Paper Fig. 2 / Section 8.1 — the warm-up memory tracer: non-model
+footprint across moments, peak, margin space, and the chunkable budget it
+unlocks vs the static 20% partition."""
+
+from benchmarks.common import csv, lm_batch
+from repro.configs import get_config, model_class
+from repro.core.engine import PatrickStarEngine
+
+
+def main():
+    cfg = get_config("gpt2-paper-1b", smoke=True).replace(
+        num_layers=4, param_dtype="float32", compute_dtype="float32")
+    eng = PatrickStarEngine(model_class(cfg), cfg,
+                            device_memory_bytes=8_000_000)
+    eng.step(lm_batch(cfg, 4, 64))
+    tr = eng.tracer
+    nm = [m.nonmodel_bytes for m in tr.moments]
+    static_budget = int(0.2 * tr.device_total_bytes)
+    dynamic_min = min(tr.chunkable_memory(i) for i in range(len(nm)))
+    csv("tracer/moments", 0.0, f"n={len(nm)}")
+    csv("tracer/peak_nonmodel_MB", 0.0, f"{tr.peak_nonmodel_bytes/1e6:.2f}")
+    csv("tracer/chunkable_min_MB", 0.0, f"{dynamic_min/1e6:.2f}")
+    csv("tracer/static20_MB", 0.0, f"{static_budget/1e6:.2f}")
+    csv("tracer/unlocked_vs_static", 0.0,
+        f"x{dynamic_min/max(static_budget,1):.2f}")
+    assert dynamic_min > static_budget  # the tracer buys real budget
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,248 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+Hardware constants (TPU v5e-class, per chip):
+
+  peak bf16 compute   197 TFLOP/s
+  HBM bandwidth       819 GB/s
+  ICI per link        ~50 GB/s
+
+Three terms per (arch, shape, mesh), all in seconds **per device** (the
+compiled SPMD module is the per-device program, so ``cost_analysis()``
+flops/bytes are per-device):
+
+  compute    = HLO_FLOPs / 197e12
+  memory     = HLO_bytes_accessed / 819e9
+  collective = sum over collective ops of ring link-bytes / 50e9
+
+Collective bytes are NOT in cost_analysis; we parse the optimized HLO
+(``compiled.as_text()``): for each all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute we take the op's
+per-device buffer size and apply the ring cost factor
+((p-1)/p for AG/RS, 2(p-1)/p for AR, 1 for A2A/permute) with p = the
+op's replica-group size.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # bytes/s
+ICI_BW = 50e9  # bytes/s/link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "e4m3": 1, "e5m2": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """bytes of 'bf16[2,4,8]{...}' or a (tuple, of, shapes)."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+_GROUPS_RE = re.compile(r"replica_groups=\{(\{[^}]*\})")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:  # iota format [n_groups,group_size]<=[...]
+        return int(m.group(2))
+    m = _GROUPS_RE.search(line)
+    if m:
+        inner = m.group(1).strip("{}")
+        if not inner:
+            return 1
+        return inner.count(",") + 1
+    return 1
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    # per op kind: (count, buffer_bytes, link_bytes)
+    by_kind: dict
+    link_bytes_total: float
+
+    def summary(self) -> str:
+        parts = [f"{k}:n={v[0]},buf={v[1]:.3g},link={v[2]:.3g}"
+                 for k, v in sorted(self.by_kind.items())]
+        return " ".join(parts) if parts else "none"
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    by_kind: dict = defaultdict(lambda: [0, 0.0, 0.0])
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if "=" not in s:
+            continue
+        # opname appears right after the result shape: `%x = bf16[..] all-gather(...)`
+        head, _, rest = s.partition("=")
+        rest = rest.strip()
+        kind = None
+        for c in _COLLECTIVES:
+            # match `all-gather(`, `all-gather-start(`, `all-gather-done(`
+            if re.match(rf"\(?[\w\[\],{{}}:\s]*{c}(-start)?\(", rest):
+                kind = c
+                break
+        if kind is None:
+            continue
+        if f"{kind}-done" in rest:
+            continue  # counted at -start
+        shape_part = rest.split(kind)[0]
+        buf = _shape_bytes(shape_part)
+        if buf == 0:
+            continue
+        p = _group_size(s)
+        frac = (p - 1) / p if p > 1 else 0.0
+        if kind == "all-gather":
+            link = frac * buf  # result is the gathered (per-device) buffer
+        elif kind == "reduce-scatter":
+            link = frac * buf * p  # result is the scattered shard
+        elif kind == "all-reduce":
+            link = 2.0 * frac * buf
+        elif kind == "all-to-all":
+            link = frac * buf
+        else:  # collective-permute
+            link = float(buf)
+        rec = by_kind[kind]
+        rec[0] += 1
+        rec[1] += buf
+        rec[2] += link
+    total = sum(v[2] for v in by_kind.values())
+    return CollectiveStats(by_kind=dict(by_kind), link_bytes_total=total)
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float
+    hbm_bytes: float
+    collective_link_bytes: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops: float
+    useful_ratio: float  # MODEL_FLOPS / HLO_FLOPs (per device)
+    collectives: CollectiveStats
+    memory_stats: dict
+
+    def row(self) -> dict:
+        return {
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s, "dominant": self.dominant,
+            "useful_ratio": self.useful_ratio,
+        }
+
+
+def analyze(compiled, *, model_flops_per_device: float) -> Roofline:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):  # some versions return [dict]
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0))
+    hbm = float(cost.get("bytes accessed", 0.0))
+    txt = compiled.as_text()
+    coll = parse_collectives(txt)
+    compute_s = flops / PEAK_FLOPS
+    memory_s = hbm / HBM_BW
+    collective_s = coll.link_bytes_total / ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    ma = compiled.memory_analysis()
+    mem = {
+        "argument_bytes": ma.argument_size_in_bytes,
+        "output_bytes": ma.output_size_in_bytes,
+        "temp_bytes": ma.temp_size_in_bytes,
+        "alias_bytes": ma.alias_size_in_bytes,
+    }
+    return Roofline(
+        flops=flops, hbm_bytes=hbm, collective_link_bytes=coll.link_bytes_total,
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        dominant=dominant, model_flops=model_flops_per_device,
+        useful_ratio=(model_flops_per_device / flops) if flops else 0.0,
+        collectives=coll, memory_stats=mem,
+    )
+
+
+# ---------------------------------------------------------------------------
+# MODEL_FLOPS = 6*N*D (dense) / 6*N_active*D (MoE)
+# ---------------------------------------------------------------------------
+
+
+def count_params(rt) -> tuple[float, float]:
+    """(N_total, N_active) global params from the runtime's layouts.
+
+    Layout payloads are TP-local; sharded leaves scale by tp.  We count
+    from tp_axes to know which leaves are replicated.  MoE expert FFN
+    params scale by top_k/n_experts (+ shared experts) for N_active.
+    """
+    import jax
+    import numpy as np
+
+    cfg = rt.cfg
+    tp = rt.ctx.tp
+    specs = rt.model.param_specs()
+    axes = rt.tp_axes
+
+    def tree_count(spec_tree, axes_tree, scale_expert=False):
+        total = 0.0
+        active = 0.0
+        leaves_s = jax.tree_util.tree_flatten_with_path(spec_tree)[0]
+        leaves_a = jax.tree.leaves(
+            jax.tree.map(lambda x: x, axes_tree,
+                         is_leaf=lambda x: x is None or isinstance(x, int)),
+            is_leaf=lambda x: x is None or isinstance(x, int))
+        for (path, leaf), ax in zip(leaves_s, leaves_a):
+            n = float(np.prod(leaf.shape))
+            if ax is not None:
+                n *= tp
+            total += n
+            name = jax.tree_util.keystr(path)
+            if scale_expert and ("w_gate" in name or "w_up" in name
+                                 or "w_down" in name) and "shared" not in name:
+                active += n * cfg.top_k / cfg.n_experts
+            else:
+                active += n
+        return total, active
+
+    tot, act = tree_count(specs["stem"], axes["stem"])
+    for g in rt.model.groups():
+        ga = axes["groups"][g.name]
+        one = jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape[1:], s.dtype),
+                           specs["groups"][g.name])
+        is_moe = cfg.arch_type == "moe" and g.name == "moe_layers"
+        t1, a1 = tree_count(one, ga, scale_expert=is_moe)
+        tot += t1 * g.length
+        act += a1 * g.length
+    return tot, act
+
+
+def model_flops(rt, shape, n_total: float, n_active: float) -> float:
+    """Global MODEL_FLOPS for one step of this input shape."""
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * shape.global_batch

@@ -1,0 +1,130 @@
+"""Chunk-granular checkpointing.
+
+The chunk store IS the checkpoint format: each (stream, store) pair is
+one .npy per host plus a JSON manifest recording the chunk layouts, so a
+restore can remap chunks onto a different ZeRO degree (re-chunking via
+``zero.unflatten -> flatten`` with the target layout).  Optimizer state
+(p32/m/v) rides along, preserving exact training state.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import zero
+
+
+def _manifest(rt) -> dict:
+    return {
+        "cfg": dataclasses.asdict(rt.cfg),
+        "layouts": {
+            name: {
+                "chunk_size": lay.chunk_size,
+                "nproc": lay.nproc,
+                "num_groups": lay.num_groups,
+                "names": list(lay.names),
+                "shapes": [list(s) for s in lay.shapes],
+            }
+            for name, lay in rt.layouts.items()
+        },
+        "mesh": {k: int(v) for k, v in rt.mesh.shape.items()},
+        "step": None,
+    }
+
+
+def _np_save(path: pathlib.Path, arr) -> str:
+    """numpy lacks bfloat16: persist as a uint16 view + dtype tag."""
+    raw = np.asarray(jax.device_get(arr))
+    if raw.dtype == jnp.bfloat16:
+        np.save(path, raw.view(np.uint16))
+        return "bfloat16"
+    np.save(path, raw)
+    return str(raw.dtype)
+
+
+def _np_load(path: pathlib.Path, dtype_tag: str):
+    raw = np.load(path)
+    if dtype_tag == "bfloat16":
+        return raw.view(jnp.bfloat16)
+    return raw
+
+
+def save(rt, pstores, osstores, path: str, *, step: int = 0) -> None:
+    p = pathlib.Path(path)
+    p.mkdir(parents=True, exist_ok=True)
+    man = _manifest(rt)
+    man["step"] = step
+    dtypes = {}
+    for name, arr in pstores.items():
+        dtypes[f"param__{name}"] = _np_save(p / f"param__{name}.npy", arr)
+    for name, streams in osstores.items():
+        for sname, parts in streams.items():
+            for part, arr in parts.items():
+                fn = f"os__{name}__{sname}__{part}"
+                dtypes[fn] = _np_save(p / f"{fn}.npy", arr)
+    man["dtypes"] = dtypes
+    (p / "manifest.json").write_text(json.dumps(man, indent=1, default=str))
+
+
+def restore(rt, path: str):
+    """Load stores saved by :func:`save`; layouts must match (same-mesh
+    restore).  Returns (pstores, osstores, step)."""
+    p = pathlib.Path(path)
+    man = json.loads((p / "manifest.json").read_text())
+    for name, lay in rt.layouts.items():
+        m = man["layouts"][name]
+        if m["chunk_size"] != lay.chunk_size or m["nproc"] != lay.nproc:
+            raise ValueError(
+                f"layout mismatch for {name}: checkpoint "
+                f"(S={m['chunk_size']},p={m['nproc']}) vs runtime "
+                f"(S={lay.chunk_size},p={lay.nproc}); use reshard()")
+    from repro.runtime import driver
+
+    psh = driver.param_shardings(rt)
+    ossh = driver.os_shardings(rt)
+    dt = man.get("dtypes", {})
+    pstores = {
+        name: jax.device_put(
+            _np_load(p / f"param__{name}.npy", dt.get(f"param__{name}", "")),
+            psh[name])
+        for name in rt.layouts
+    }
+    osstores = {}
+    for name in rt.layouts:
+        osstores[name] = {}
+        for sname in ("p32", "m", "v"):
+            osstores[name][sname] = {
+                part: jax.device_put(
+                    _np_load(p / f"os__{name}__{sname}__{part}.npy",
+                             dt.get(f"os__{name}__{sname}__{part}", "")),
+                    ossh[name][sname][part])
+                for part in ("dev", "host")
+            }
+    return pstores, osstores, man["step"]
+
+
+def to_param_tree(rt, pstores) -> Any:
+    """Unpack chunk stores into a logical (TP-stacked) parameter pytree —
+    the export path toward framework-agnostic weights."""
+    out = {"stem": [], "groups": {}}
+    stem = np.asarray(jax.device_get(pstores["stem"]))
+    for r in range(stem.shape[0]):
+        out["stem"].append(zero.unflatten_from_flat(
+            rt.layouts["stem"], jnp.asarray(stem[r]).reshape(-1)))
+    for g in rt.model.groups():
+        arr = np.asarray(jax.device_get(pstores[g.name]))
+        per_rank = []
+        for r in range(arr.shape[0]):
+            flat = jnp.asarray(arr[r]).reshape(arr.shape[1], -1)
+            per_rank.append(jax.vmap(
+                lambda f, _l=rt.layouts[g.name]: zero.unflatten_from_flat(_l, f)
+            )(flat))
+        out["groups"][g.name] = per_rank
+    return out

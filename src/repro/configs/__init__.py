@@ -1,0 +1,57 @@
+"""Architecture config registry (``--arch <id>``)."""
+
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import INPUT_SHAPES, BaseConfig, InputShape
+
+ARCH_IDS = [
+    "deepseek-v2-lite-16b",
+    "qwen3-0.6b",
+    "deepseek-7b",
+    "zamba2-1.2b",
+    "xlstm-1.3b",
+    "nemotron-4-340b",
+    "phi-3-vision-4.2b",
+    "qwen2.5-3b",
+    "whisper-large-v3",
+    "mixtral-8x7b",
+    # the paper's own workload family (GPT-2-like ladder, Table 2)
+    "gpt2-paper-1b",
+    "gpt2-paper-4b",
+]
+
+
+def _module(arch_id: str) -> str:
+    return "repro.configs." + arch_id.replace("-", "_").replace(".", "_")
+
+
+def get_config(arch_id: str, *, smoke: bool = False) -> BaseConfig:
+    if arch_id not in ARCH_IDS:
+        raise KeyError(f"unknown arch {arch_id!r}; choose from {ARCH_IDS}")
+    mod = importlib.import_module(_module(arch_id))
+    return mod.SMOKE_CONFIG if smoke else mod.CONFIG
+
+
+def model_class(cfg: BaseConfig):
+    """Map a config to its Model class."""
+    if cfg.arch_type == "dense":
+        from repro.models.transformer import TransformerLM
+        return TransformerLM
+    if cfg.arch_type == "moe":
+        from repro.models.moe_lm import MoELM
+        return MoELM
+    if cfg.arch_type == "ssm":
+        from repro.models.xlstm_lm import XLSTMLM
+        return XLSTMLM
+    if cfg.arch_type == "hybrid":
+        from repro.models.zamba import ZambaLM
+        return ZambaLM
+    if cfg.arch_type == "vlm":
+        from repro.models.vlm import VLMBackbone
+        return VLMBackbone
+    if cfg.arch_type == "audio":
+        from repro.models.whisper import WhisperBackbone
+        return WhisperBackbone
+    raise KeyError(cfg.arch_type)

@@ -1,0 +1,245 @@
+"""Chunk / tensor->chunk mapping schema (PatrickStar Section 6.1).
+
+Model-data tensors are packed append-style into fixed-size chunks, in the
+order the model defines them (the N-ary storage model): the first tensor
+starts at offset 0 of chunk 0; each following tensor is placed right after
+the previous one; a tensor that does not fit in the remaining space of the
+current chunk opens a new chunk (tensors never straddle chunks).
+
+The same layout is shared by the four model-data streams (param fp16,
+param fp32, momentum, variance), so the offset of a parameter's OS tensors
+equals the offset of its fp16 tensor — "the offsets in the chunk list of
+param fp16, param fp32, momentum, and variance tensors of the same
+parameter are consistent", which keeps ADAM fully local under ZeRO.
+
+Grad fp16 has *no* chunk list: gradients reuse the param-fp16 chunk space
+(Section 6.2).
+
+For the data-parallel runtime, the chunk count is padded up to a multiple
+of ``nproc`` so chunks divide evenly into communication groups of
+``nproc`` chunks (Section 7).  ``group_boundaries`` optionally force the
+packer to close the current group before specific tensors, so that a
+scanned layer stack starts on a communication-group boundary (this is the
+TPU adaptation that makes per-layer all-gather inside ``lax.scan``
+possible).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Iterable, Mapping, Sequence
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class TensorSpec:
+    """A logical model-data tensor to be packed into chunks."""
+
+    name: str
+    shape: tuple[int, ...]
+
+    @property
+    def numel(self) -> int:
+        return int(np.prod(self.shape)) if self.shape else 1
+
+
+@dataclasses.dataclass(frozen=True)
+class TensorPlacement:
+    """Where a tensor lives inside the chunk list."""
+
+    name: str
+    shape: tuple[int, ...]
+    chunk_id: int
+    offset: int  # element offset inside the chunk
+
+    @property
+    def numel(self) -> int:
+        return int(np.prod(self.shape)) if self.shape else 1
+
+
+class ChunkMapError(ValueError):
+    pass
+
+
+@dataclasses.dataclass(frozen=True)
+class ChunkTensorMap:
+    """The chunk<->tensor mapping schema produced by the preprocessing stage."""
+
+    chunk_size: int  # elements per chunk
+    placements: tuple[TensorPlacement, ...]
+    num_chunks: int  # padded to a multiple of nproc
+    num_payload_chunks: int  # chunks actually containing tensors
+    nproc: int
+
+    # ---------------------------------------------------------------- lookup
+    def placement(self, name: str) -> TensorPlacement:
+        return self._by_name()[name]
+
+    def _by_name(self) -> dict[str, TensorPlacement]:
+        if not hasattr(self, "_by_name_cache"):
+            object.__setattr__(
+                self, "_by_name_cache", {p.name: p for p in self.placements}
+            )
+        return self._by_name_cache  # type: ignore[attr-defined]
+
+    def chunk_tensors(self, chunk_id: int) -> list[TensorPlacement]:
+        return [p for p in self.placements if p.chunk_id == chunk_id]
+
+    # ------------------------------------------------------------ statistics
+    @property
+    def total_numel(self) -> int:
+        return sum(p.numel for p in self.placements)
+
+    @property
+    def capacity(self) -> int:
+        return self.num_chunks * self.chunk_size
+
+    @property
+    def utilization(self) -> float:
+        """Fraction of chunk capacity that holds real tensor data."""
+        return self.total_numel / self.capacity if self.capacity else 1.0
+
+    @property
+    def fragmentation(self) -> float:
+        return 1.0 - self.utilization
+
+    @property
+    def num_comm_groups(self) -> int:
+        return self.num_chunks // self.nproc
+
+    def comm_group(self, chunk_id: int) -> int:
+        return chunk_id // self.nproc
+
+    def comm_group_chunk_ids(self, group: int) -> range:
+        return range(group * self.nproc, (group + 1) * self.nproc)
+
+    def owner_rank(self, chunk_id: int) -> int:
+        """Process that owns this chunk under the ZeRO split (Section 7)."""
+        return chunk_id % self.nproc
+
+    def local_chunk_ids(self, rank: int) -> list[int]:
+        return [c for c in range(self.num_chunks) if c % self.nproc == rank]
+
+
+def build_chunk_map(
+    tensors: Sequence[TensorSpec],
+    chunk_size: int,
+    *,
+    nproc: int = 1,
+    group_boundaries: Iterable[str] = (),
+) -> ChunkTensorMap:
+    """Pack ``tensors`` (in order) into chunks of ``chunk_size`` elements.
+
+    ``group_boundaries``: names of tensors before which the packer pads to
+    the next *communication-group* boundary (a multiple of ``nproc``
+    chunks).  Tensors larger than ``chunk_size`` are rejected — the paper's
+    schema never splits a tensor across chunks (the chunk-size search is
+    responsible for picking a feasible size).
+    """
+    if chunk_size <= 0:
+        raise ChunkMapError(f"chunk_size must be positive, got {chunk_size}")
+    boundaries = set(group_boundaries)
+    placements: list[TensorPlacement] = []
+    chunk_id = 0
+    offset = 0
+    started = False
+    for t in tensors:
+        if t.numel > chunk_size:
+            raise ChunkMapError(
+                f"tensor {t.name} ({t.numel} elems) exceeds chunk size {chunk_size}"
+            )
+        if t.name in boundaries and started and not (offset == 0 and chunk_id % nproc == 0):
+            # close the current communication group
+            chunk_id = ((chunk_id + (1 if offset > 0 else 0) + nproc - 1) // nproc) * nproc
+            offset = 0
+        if offset + t.numel > chunk_size:
+            chunk_id += 1
+            offset = 0
+        placements.append(
+            TensorPlacement(name=t.name, shape=t.shape, chunk_id=chunk_id, offset=offset)
+        )
+        offset += t.numel
+        started = True
+    num_payload = chunk_id + (1 if offset > 0 else 0)
+    num_payload = max(num_payload, 1)
+    num_chunks = ((num_payload + nproc - 1) // nproc) * nproc
+    return ChunkTensorMap(
+        chunk_size=chunk_size,
+        placements=tuple(placements),
+        num_chunks=num_chunks,
+        num_payload_chunks=num_payload,
+        nproc=nproc,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Chunk-size search (Section 9.1, Table 3)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ChunkSizeSearchResult:
+    chunk_size: int
+    utilization: float
+    num_chunks: int
+    candidates: tuple[tuple[int, float], ...]  # (size, utilization) per feasible size
+
+
+def search_chunk_size(
+    tensors: Sequence[TensorSpec],
+    *,
+    nproc: int = 1,
+    group_boundaries: Iterable[str] = (),
+    search_range: Sequence[int] | None = None,
+    memory_budget_elems: int | None = None,
+    align: int = 1,
+) -> ChunkSizeSearchResult:
+    """Offline search for the chunk size with minimal fragmentation.
+
+    Mirrors the paper's lightweight pre-training search: it never allocates
+    payloads, only runs the mapping schema for each candidate size and
+    scores utilization.  ``memory_budget_elems`` rejects sizes whose padded
+    capacity exceeds the heterogeneous memory budget (the "some chunk size
+    settings do not work" effect in Fig. 12).  ``align`` forces candidate
+    sizes to a hardware alignment (we use 1024 = 8*128 on TPU so chunk
+    payloads tile cleanly into (8,128) vregs).
+
+    The paper searches 128..512 in "model units" (i.e. scaled by hidden
+    size); callers pass an explicit element range instead.
+    """
+    largest = max((t.numel for t in tensors), default=1)
+    if search_range is None:
+        lo = max(largest, 1)
+        search_range = [lo + k * max(lo // 8, align) for k in range(0, 13)]
+    candidates: list[tuple[int, float]] = []
+    best: tuple[float, int, ChunkTensorMap] | None = None
+    for raw in search_range:
+        size = int(math.ceil(raw / align) * align)
+        if size < largest:
+            continue
+        try:
+            cmap = build_chunk_map(
+                tensors, size, nproc=nproc, group_boundaries=group_boundaries
+            )
+        except ChunkMapError:
+            continue
+        if memory_budget_elems is not None and cmap.capacity > memory_budget_elems:
+            continue  # infeasible on this budget
+        candidates.append((size, cmap.utilization))
+        key = (cmap.utilization, -size)
+        if best is None or key > (best[0], -best[1]):
+            best = (cmap.utilization, size, cmap)
+    if best is None:
+        raise ChunkMapError(
+            "no feasible chunk size in search range "
+            f"(largest tensor {largest} elems, budget {memory_budget_elems})"
+        )
+    util, size, cmap = best
+    return ChunkSizeSearchResult(
+        chunk_size=size,
+        utilization=util,
+        num_chunks=cmap.num_chunks,
+        candidates=tuple(candidates),
+    )

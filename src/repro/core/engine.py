@@ -1,0 +1,359 @@
+"""PatrickStarEngine — the paper's runtime, eagerly executed.
+
+This is the faithful single-device system of Sections 6 and 8: chunked
+model data managed over a bounded two-tier (device/host) memory space by
+the :class:`~repro.core.manager.ChunkManager`, with
+
+  * the tensor state machine driving chunk movement (Table 1, Fig. 7),
+  * grad-fp16 chunks REUSING param-fp16 chunk payloads (Fig. 6),
+  * a warm-up iteration feeding the RuntimeMemoryTracer (Section 8.1),
+  * OPT/Belady chunk eviction from the traced moment schedule (8.3),
+  * device-aware OS placement in GPU margin space + embedding kept on
+    host (Section 8.2),
+  * block-granular activation checkpointing (inputs saved, fwd recomputed
+    inside jax.vjp during BWD — the re-COMPUTE transitions that make
+    HOLD_AFTER_FWD/BWD states necessary).
+
+On this container the "device" tier is simulated: payloads are numpy
+buffers tagged device/host with byte-capacity enforcement and full
+transfer accounting, so eviction-policy quality and data-movement volume
+are measured exactly as the paper measures them.  Compute runs through
+jax on CPU.  The API mirrors the paper's Listing 1.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import defaultdict
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import dtype_of
+from repro.core.chunk import TensorSpec, build_chunk_map, search_chunk_size
+from repro.core.manager import ChunkManager
+from repro.core.placement import PlacementPlan, plan_placement
+from repro.core.state import TensorState
+from repro.core.tracer import RuntimeMemoryTracer
+from repro.models.api import Model
+from repro.models.layers import AxisCtx
+
+
+def _leaves_with_names(tree, prefix: str):
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return [(prefix + jax.tree_util.keystr(path), leaf) for path, leaf in flat]
+
+
+@dataclasses.dataclass
+class EngineMetrics:
+    fwd_s: float = 0.0
+    bwd_s: float = 0.0
+    adam_s: float = 0.0
+    loss: float = 0.0
+    h2d_bytes: int = 0
+    d2h_bytes: int = 0
+    adam_h2d_bytes: int = 0
+    adam_d2h_bytes: int = 0
+
+    @property
+    def total_s(self) -> float:
+        return self.fwd_s + self.bwd_s + self.adam_s
+
+    @property
+    def moved_bytes(self) -> int:
+        return self.h2d_bytes + self.d2h_bytes + self.adam_h2d_bytes + self.adam_d2h_bytes
+
+
+class PatrickStarEngine:
+    def __init__(
+        self,
+        model_cls,
+        cfg,
+        *,
+        device_memory_bytes: int,
+        host_memory_bytes: int | None = None,
+        policy: str = "opt",
+        chunk_size: int | None = None,
+        warmup_chunk_fraction: float = 0.2,
+        lr: float = 1e-3,
+        betas: tuple[float, float] = (0.9, 0.95),
+        eps: float = 1e-8,
+        seed: int = 0,
+        device_aware_placement: bool = True,
+        embedding_on_host: bool = True,
+    ) -> None:
+        self.cfg = cfg
+        self.ctx = AxisCtx()  # single device, no mesh axes
+        self.model: Model = model_cls(cfg, self.ctx)
+        self.lr, self.betas, self.eps = lr, betas, eps
+        self.device_aware_placement = device_aware_placement
+        self.policy = policy
+
+        params = self.model.init_params(jax.random.key(seed))
+        # paper 8.2: embedding params are NOT chunk-managed
+        self._stem_np = jax.tree.map(np.asarray, params["stem"])
+        self.embedding_on_host = embedding_on_host
+
+        # ---- chunk stream over all block-group tensors, model order -----
+        named: list[tuple[str, np.ndarray]] = []
+        self._group_tensor_names: dict[str, list[list[str]]] = {}
+        for g in self.model.groups():
+            stacked = params["groups"][g.name]
+            per_layer: list[list[str]] = []
+            for i in range(g.length):
+                layer_tree = jax.tree.map(lambda t: np.asarray(t[i]), stacked)
+                pairs = _leaves_with_names(layer_tree, f"{g.name}.{i}")
+                per_layer.append([n for n, _ in pairs])
+                named.extend(pairs)
+            self._group_tensor_names[g.name] = per_layer
+        self._layer_trees = {
+            g.name: jax.tree_util.tree_structure(
+                jax.tree.map(lambda t: t[0], params["groups"][g.name]))
+            for g in self.model.groups()
+        }
+
+        specs = [TensorSpec(n, tuple(v.shape)) for n, v in named]
+        if chunk_size is None:
+            res = search_chunk_size(specs, nproc=1, align=256)
+            chunk_size = res.chunk_size
+        self.cmap = build_chunk_map(specs, chunk_size, nproc=1)
+
+        # ---- two-tier managers: params(fp16-stream, grads reuse) + OS ----
+        self.params_mgr = ChunkManager(
+            self.cmap, dtype=np.float32, policy=policy, name="param",
+            device_capacity_bytes=device_memory_bytes,
+            host_capacity_bytes=host_memory_bytes)
+        self.os_mgrs = {
+            name: ChunkManager(self.cmap, dtype=np.float32, policy=policy,
+                               name=name, device_capacity_bytes=device_memory_bytes,
+                               host_capacity_bytes=host_memory_bytes)
+            for name in ("p32", "m", "v")
+        }
+        # tracer over the simulated device
+        self.tracer = RuntimeMemoryTracer(
+            device_memory_bytes, warmup_chunk_fraction=warmup_chunk_fraction)
+        # the chunkable budget must never drop below one operator's working
+        # set (its chunks are all COMPUTE-pinned and cannot be evicted)
+        max_layer_chunks = max(
+            len({self.cmap.placement(n).chunk_id for n in layer})
+            for layers in self._group_tensor_names.values() for layer in layers)
+        floor = (max_layer_chunks + 1) * self.params_mgr.chunk_bytes
+        for mgr in [self.params_mgr, *self.os_mgrs.values()]:
+            mgr.set_chunkable_memory_fn(
+                lambda: max(self.tracer.chunkable_memory(), floor))
+
+        # initialize payloads: param fp16 stream + param fp32 copies (host)
+        for name, val in named:
+            view = self.params_mgr.access_tensor(name, "host")
+            view[...] = np.asarray(val, np.float32)
+            self.params_mgr.release_tensor(name, TensorState.HOLD)
+            p32 = self.os_mgrs["p32"].access_tensor(name, "host")
+            p32[...] = np.asarray(val, np.float32)
+            self.os_mgrs["p32"].release_tensor(name, TensorState.HOLD)
+            for s in ("m", "v"):
+                self.os_mgrs[s].access_tensor(name, "host")
+                self.os_mgrs[s].release_tensor(name, TensorState.HOLD)
+
+        self.step_count = 0
+        self.placement: PlacementPlan | None = None
+        self._live_activation_bytes = 0
+        self._moment_of_op: dict[str, int] = {}
+
+    # ------------------------------------------------------------------ utils
+    def _moment(self, op: str, phase: str) -> None:
+        m = self.tracer.record_moment(op, phase, self._live_activation_bytes)
+        for mgr in [self.params_mgr, *self.os_mgrs.values()]:
+            mgr.set_moment(m)
+
+    def _access_layer(self, gname: str, layer: int, mgr: ChunkManager,
+                      dev: str, record: bool = True):
+        names = self._group_tensor_names[gname][layer]
+        arrs = []
+        for n in names:
+            if record and self.tracer.warmup:
+                self.tracer.record_chunk_use(self.cmap.placement(n).chunk_id)
+            # COPY at the numpy->jax boundary: jnp.asarray on CPU may be
+            # zero-copy, and grad-fp16 reuse later overwrites this chunk
+            # payload in place (Fig. 6) — an alias would corrupt captured
+            # parameter values mid-backward.
+            arrs.append(jnp.array(mgr.access_tensor(n, dev), copy=True))
+        tree = jax.tree_util.tree_unflatten(self._layer_trees[gname], arrs)
+        return names, tree
+
+    def _release_layer(self, names, mgr: ChunkManager, state: TensorState):
+        for n in names:
+            mgr.release_tensor(n, state)
+
+    # ------------------------------------------------------------------ step
+    def step(self, batch: dict) -> EngineMetrics:
+        met = EngineMetrics()
+        mgr = self.params_mgr
+        base = mgr.stats.total_bytes
+        h2d0, d2h0 = mgr.stats.h2d_bytes, mgr.stats.d2h_bytes
+        self.tracer.begin_iteration()
+        cdtype = dtype_of(self.cfg.compute_dtype)
+
+        # ---------------------------------------------------------- forward
+        t0 = time.perf_counter()
+        stem = jax.tree.map(jnp.asarray, self._stem_np)
+        x, extras = self.model.embed(stem, batch)
+        self._live_activation_bytes += x.size * x.dtype.itemsize
+        saved: list[tuple[str, int, Any]] = []  # (group, layer, input x)
+        for g in self.model.groups():
+            x, extras = self.model.between_groups(g.name, x, extras, stem, batch)
+            for i in range(g.length):
+                self._moment(f"{g.name}.{i}", "FWD")
+                names, ptree = self._access_layer(g.name, i, mgr, "device")
+                saved.append((g.name, i, x))
+                x, _aux = g.apply(ptree, x, extras, self.ctx)
+                self._live_activation_bytes += x.size * x.dtype.itemsize
+                self._release_layer(names, mgr, TensorState.HOLD_AFTER_FWD)
+                self._moment(f"{g.name}.{i}.end", "FWD")
+        met.fwd_s = time.perf_counter() - t0
+
+        # --------------------------------------------------------- backward
+        t0 = time.perf_counter()
+        # reset param states to HOLD before BWD (Section 6.2)
+        mgr.reset_states(TensorState.HOLD)
+        loss, head_vjp = jax.vjp(
+            lambda s, xx: self.model.head_loss(s, xx, batch), stem, x)
+        met.loss = float(loss)
+        stem_grad, gx = head_vjp(jnp.float32(1.0))
+        grads_np: dict[str, np.ndarray] = {}
+        groups = list(self.model.groups())
+        for g, i, x_in in reversed(saved):
+            grp = next(gg for gg in groups if gg.name == g)
+            self._moment(f"{g}.{i}", "BWD")
+            names, ptree = self._access_layer(g, i, mgr, "device")
+            # activation checkpointing: recompute fwd inside vjp
+            _, vjp_fn = jax.vjp(
+                lambda p, xx: grp.apply(p, xx, extras, self.ctx)[0], ptree, x_in)
+            gp, gx = vjp_fn(gx)
+            # grad fp16 reuses the param fp16 chunk payload (Fig. 6):
+            # after BWD of this operator the param values are overwritten.
+            for n, gleaf in _leaves_with_names(gp, f"{g}.{i}"):
+                view = mgr.tensor_view(n)
+                view[...] = np.asarray(gleaf, np.float32)
+            self._release_layer(names, mgr, TensorState.HOLD_AFTER_BWD)
+            self._live_activation_bytes -= max(x_in.size * x_in.dtype.itemsize, 0)
+            self._moment(f"{g}.{i}.end", "BWD")
+        met.bwd_s = time.perf_counter() - t0
+        met.h2d_bytes = mgr.stats.h2d_bytes - h2d0
+        met.d2h_bytes = mgr.stats.d2h_bytes - d2h0
+
+        # ------------------------------------------------------------- ADAM
+        t0 = time.perf_counter()
+        a_h2d0 = sum(m.stats.h2d_bytes for m in self.os_mgrs.values())
+        a_d2h0 = sum(m.stats.d2h_bytes for m in self.os_mgrs.values())
+        self._adam(stem_grad)
+        met.adam_h2d_bytes = sum(m.stats.h2d_bytes for m in self.os_mgrs.values()) - a_h2d0
+        met.adam_d2h_bytes = sum(m.stats.d2h_bytes for m in self.os_mgrs.values()) - a_d2h0
+        met.adam_s = time.perf_counter() - t0
+
+        # ------------------------------------------------- end of iteration
+        self._live_activation_bytes = 0
+        if self.tracer.warmup:
+            self.tracer.end_warmup()
+            sched = self.tracer.schedule()
+            self.params_mgr.register_moments(sched)
+            for m in self.os_mgrs.values():
+                m.register_moments(sched)
+            self._plan_placement()
+        self.step_count += 1
+        return met
+
+    # ------------------------------------------------------------------ adam
+    def _adam(self, stem_grad) -> None:
+        b1, b2 = self.betas
+        t = self.step_count + 1
+        bc1 = 1.0 - b1**t
+        bc2 = 1.0 - b2**t
+        dev_groups = self.placement.os_device_groups if self.placement else 0
+        for g_idx in range(self.cmap.num_comm_groups):
+            # device-aware operator placement: first `dev_groups` OS chunk
+            # groups update on device (margin space), the rest on host
+            comp_dev = "device" if g_idx < dev_groups else "host"
+            for chunk_id in self.cmap.comm_group_chunk_ids(g_idx):
+                tensors = self.cmap.chunk_tensors(chunk_id)
+                if not tensors:
+                    continue
+                self._moment(f"adam.{chunk_id}", "ADAM")
+                # grad chunk (reusing param chunk payload) converted fp32
+                # on the fly on the computing device
+                grad_payload = self.params_mgr.prepare_payload(chunk_id, comp_dev)
+                p32 = self.os_mgrs["p32"].prepare_payload(chunk_id, comp_dev)
+                m = self.os_mgrs["m"].prepare_payload(chunk_id, comp_dev)
+                v = self.os_mgrs["v"].prepare_payload(chunk_id, comp_dev)
+                g = grad_payload
+                m[...] = b1 * m + (1 - b1) * g
+                v[...] = b2 * v + (1 - b2) * g * g
+                upd = (m / bc1) / (np.sqrt(v / bc2) + self.eps)
+                p32[...] = p32 - self.lr * upd
+                # updated param fp32 copied back into the param chunk
+                grad_payload[...] = p32
+                for tn in tensors:
+                    self.params_mgr._tensor_state[tn.name] = TensorState.HOLD
+        # stem (embedding + norms) updates in place on its own device
+        self._stem_np = jax.tree.map(
+            lambda p, g: np.asarray(p - self.lr * np.asarray(g, np.float32)),
+            self._stem_np, stem_grad)
+
+    # -------------------------------------------------------------- placement
+    def _plan_placement(self) -> None:
+        if not self.device_aware_placement:
+            self.placement = None
+            return
+        layer0 = self._group_tensor_names[self.model.groups()[0].name][0]
+        working = sum(
+            int(np.prod(self.cmap.placement(n).shape)) * 4 for n in layer0)
+        margin = self.tracer.margin_space(working * 2)
+        self.placement = plan_placement(
+            margin_bytes=margin,
+            num_local_groups=self.cmap.num_comm_groups,
+            chunk_size_elems=self.cmap.chunk_size,
+            param_fp16_local_bytes=self.cmap.capacity * 4,
+            device_total_bytes=self.tracer.device_total_bytes,
+            peak_nonmodel_bytes=self.tracer.peak_nonmodel_bytes,
+            vocab_size=self.cfg.vocab_size, hidden=self.cfg.d_model,
+            batch_tokens=0,
+        )
+
+
+def initialize_engine(model_func: Callable[[], tuple], config: dict):
+    """Paper Listing 1:  model, optimizer = initialize_engine(...)
+
+    ``model_func`` returns (model_cls, cfg); ``config`` carries the
+    memory/optimizer settings.  The returned engine exposes the familiar
+    loop surface: ``loss = model(batch); model.backward(loss);
+    optimizer.step()`` — internally one fused :meth:`PatrickStarEngine.step`.
+    """
+    model_cls, cfg = model_func()
+    engine = PatrickStarEngine(model_cls, cfg, **config)
+
+    class _ModelFacade:
+        def __init__(self, eng):
+            self._eng = eng
+            self._pending = None
+
+        def __call__(self, batch):
+            self._pending = batch
+            return self  # loss proxy; materialized in backward()
+
+        def backward(self, _loss_proxy):
+            self._metrics = self._eng.step(self._pending)
+            self.loss = self._metrics.loss
+
+    class _OptimizerFacade:
+        def __init__(self, eng):
+            self._eng = eng
+
+        def zero_grad(self):
+            pass  # grads live in reused chunks; nothing to zero
+
+        def step(self):
+            pass  # fused into engine.step (ADAM stage)
+
+    return _ModelFacade(engine), _OptimizerFacade(engine)

@@ -1,0 +1,332 @@
+"""Runtime chunk manager: heterogeneous placement, pinning, eviction.
+
+This is the paper's runtime module (Sections 6.2, 8.3).  It owns the
+payloads of all chunks of one *stream* group (param fp16 / param fp32 /
+momentum / variance share a layout but have independent payloads) and
+moves them between a bounded **device** tier (GPU in the paper, TPU HBM on
+the target) and a **host** tier (CPU DRAM).
+
+On this CPU-only container the two tiers are simulated faithfully:
+payloads are numpy buffers tagged with their tier, tier capacities are
+enforced in bytes, and every cross-tier move is accounted (bytes + count)
+— so eviction-policy quality is measurable exactly the way the paper
+measures it (CPU<->GPU data-movement volume).
+
+Eviction (Section 8.3): when the device tier cannot host an incoming
+chunk, evict a HOLD-like, unpinned chunk.  Policies:
+
+  "opt"   Belady's OPT using the *future* reference moments collected by
+          the runtime memory tracer in the warm-up iteration — evict the
+          chunk whose next use is farthest in the future (the paper's
+          choice).
+  "lru"   least recently used (classic; no future knowledge).
+  "fifo"  first-in-first-out.
+
+Chunks in COMPUTE state or explicitly pinned (collective communication in
+flight, Algorithm 1 lines 12/18) are never evicted.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Literal
+
+import numpy as np
+
+from repro.core.chunk import ChunkTensorMap
+from repro.core.state import (
+    ChunkState,
+    TensorState,
+    check_transition,
+    derive_chunk_state,
+)
+
+Device = Literal["device", "host"]
+EvictionPolicy = Literal["opt", "lru", "fifo"]
+
+
+class OutOfMemory(RuntimeError):
+    """Neither tier can host the chunk (the DeepSpeed failure mode, Fig. 10)."""
+
+
+@dataclasses.dataclass
+class TransferStats:
+    h2d_bytes: int = 0
+    d2h_bytes: int = 0
+    h2d_count: int = 0
+    d2h_count: int = 0
+
+    @property
+    def total_bytes(self) -> int:
+        return self.h2d_bytes + self.d2h_bytes
+
+    def reset(self) -> None:
+        self.h2d_bytes = self.d2h_bytes = 0
+        self.h2d_count = self.d2h_count = 0
+
+
+@dataclasses.dataclass
+class _ChunkRecord:
+    chunk_id: int
+    payload: np.ndarray | None  # None <=> all tensors FREE, space released
+    location: Device | None
+    pinned: int = 0  # pin refcount
+    last_use: int = -1  # for LRU
+    arrival: int = -1  # for FIFO
+
+
+class ChunkManager:
+    """Manages payloads of one chunk stream over a two-tier memory space."""
+
+    def __init__(
+        self,
+        cmap: ChunkTensorMap,
+        *,
+        dtype: np.dtype = np.dtype(np.float32),
+        device_capacity_bytes: int | None = None,
+        host_capacity_bytes: int | None = None,
+        policy: EvictionPolicy = "opt",
+        name: str = "chunks",
+    ) -> None:
+        self.cmap = cmap
+        self.dtype = np.dtype(dtype)
+        self.chunk_bytes = cmap.chunk_size * self.dtype.itemsize
+        self.device_capacity = device_capacity_bytes
+        self.host_capacity = host_capacity_bytes
+        self.policy: EvictionPolicy = policy
+        self.name = name
+        self.stats = TransferStats()
+
+        self._records = [
+            _ChunkRecord(chunk_id=c, payload=None, location=None)
+            for c in range(cmap.num_chunks)
+        ]
+        self._tensor_state: dict[str, TensorState] = {
+            p.name: TensorState.FREE for p in cmap.placements
+        }
+        # clock advances on every access; used by LRU/FIFO and as the
+        # "moment" cursor for OPT when no tracer moments are registered.
+        self._clock = 0
+        # OPT future-reference schedule: chunk_id -> sorted list of moments
+        # at which this chunk is used (from the memory tracer's warm-up).
+        self._moments: dict[int, list[int]] = {}
+        self._current_moment = 0
+        # optional callback letting the tracer shrink the device tier by
+        # the live non-model footprint at the current moment.
+        self._chunkable_device_bytes: Callable[[], int | None] | None = None
+
+    # ------------------------------------------------------------ accounting
+    def device_bytes_used(self) -> int:
+        return sum(
+            self.chunk_bytes
+            for r in self._records
+            if r.payload is not None and r.location == "device"
+        )
+
+    def host_bytes_used(self) -> int:
+        return sum(
+            self.chunk_bytes
+            for r in self._records
+            if r.payload is not None and r.location == "host"
+        )
+
+    def location(self, chunk_id: int) -> Device | None:
+        return self._records[chunk_id].location
+
+    def tensor_state(self, name: str) -> TensorState:
+        return self._tensor_state[name]
+
+    def chunk_state(self, chunk_id: int) -> ChunkState:
+        names = [p.name for p in self.cmap.chunk_tensors(chunk_id)]
+        return derive_chunk_state(self._tensor_state[n] for n in names)
+
+    # -------------------------------------------------------------- schedule
+    def register_moments(self, moments: dict[int, list[int]]) -> None:
+        """Install the warm-up reference schedule used by OPT eviction."""
+        self._moments = {c: sorted(ms) for c, ms in moments.items()}
+
+    def set_moment(self, moment: int) -> None:
+        self._current_moment = moment
+
+    def set_chunkable_memory_fn(self, fn: Callable[[], int | None]) -> None:
+        """Tracer hook: returns the device bytes currently usable for chunks."""
+        self._chunkable_device_bytes = fn
+
+    def _device_budget(self) -> int | None:
+        budget = self.device_capacity
+        if self._chunkable_device_bytes is not None:
+            dyn = self._chunkable_device_bytes()
+            if dyn is not None:
+                budget = dyn if budget is None else min(budget, dyn)
+        return budget
+
+    # ------------------------------------------------------------- tensor API
+    def access_tensor(self, name: str, comp_dev: Device = "device") -> np.ndarray:
+        """Algorithm 1 (single-process part): bring the tensor's chunk to
+        ``comp_dev``, mark the tensor COMPUTE, return a view of its payload."""
+        p = self.cmap.placement(name)
+        rec = self._ensure_on(p.chunk_id, comp_dev)
+        old = self._tensor_state[name]
+        check_transition(old, TensorState.COMPUTE)
+        self._tensor_state[name] = TensorState.COMPUTE
+        view = rec.payload[p.offset : p.offset + p.numel]
+        if old is TensorState.FREE:
+            view[...] = 0  # Algorithm 1 line 31
+        return view.reshape(p.shape)
+
+    def release_tensor(self, name: str, target_state: TensorState) -> None:
+        """Algorithm 2 (single-process part)."""
+        old = self._tensor_state[name]
+        check_transition(old, target_state)
+        self._tensor_state[name] = target_state
+        if target_state is TensorState.FREE:
+            self._maybe_release_chunk(self.cmap.placement(name).chunk_id)
+
+    def reset_states(self, target: TensorState = TensorState.HOLD) -> None:
+        """Reset all non-FREE tensors (e.g. to HOLD before BWD, Section 6.2)."""
+        for name, s in self._tensor_state.items():
+            if s is not TensorState.FREE:
+                check_transition(s, target)
+                self._tensor_state[name] = target
+
+    def tensor_view(self, name: str) -> np.ndarray:
+        """Read-only style access without a state change (debug/checkpoint)."""
+        p = self.cmap.placement(name)
+        rec = self._records[p.chunk_id]
+        if rec.payload is None:
+            raise KeyError(f"tensor {name}: chunk {p.chunk_id} has no payload")
+        return rec.payload[p.offset : p.offset + p.numel].reshape(p.shape)
+
+    # -------------------------------------------------------------- chunk API
+    def pin(self, chunk_id: int) -> None:
+        self._records[chunk_id].pinned += 1
+
+    def unpin(self, chunk_id: int) -> None:
+        rec = self._records[chunk_id]
+        if rec.pinned <= 0:
+            raise RuntimeError(f"chunk {chunk_id} is not pinned")
+        rec.pinned -= 1
+
+    def prepare_payload(self, chunk_id: int, comp_dev: Device = "device") -> np.ndarray:
+        """Materialize (if FREE) and move a chunk to ``comp_dev``."""
+        return self._ensure_on(chunk_id, comp_dev).payload
+
+    def ensure_on(self, chunk_id: int, dev: Device) -> np.ndarray:
+        return self._ensure_on(chunk_id, dev).payload
+
+    def free_chunk(self, chunk_id: int) -> None:
+        """Drop a chunk's payload, forcing all its tensors to FREE."""
+        for p in self.cmap.chunk_tensors(chunk_id):
+            self._tensor_state[p.name] = TensorState.FREE
+        rec = self._records[chunk_id]
+        rec.payload = None
+        rec.location = None
+
+    # --------------------------------------------------------------- internals
+    def _maybe_release_chunk(self, chunk_id: int) -> None:
+        if self.chunk_state(chunk_id) is ChunkState.FREE:
+            rec = self._records[chunk_id]
+            rec.payload = None
+            rec.location = None
+
+    def _tick(self) -> int:
+        self._clock += 1
+        return self._clock
+
+    def _ensure_on(self, chunk_id: int, dev: Device) -> _ChunkRecord:
+        rec = self._records[chunk_id]
+        now = self._tick()
+        rec.last_use = now
+        if rec.payload is None:
+            self._make_room(dev, exclude=chunk_id)
+            rec.payload = np.zeros(self.cmap.chunk_size, dtype=self.dtype)
+            rec.location = dev
+            rec.arrival = now
+            return rec
+        if rec.location != dev:
+            self._make_room(dev, exclude=chunk_id)
+            if dev == "device":
+                self.stats.h2d_bytes += self.chunk_bytes
+                self.stats.h2d_count += 1
+            else:
+                self.stats.d2h_bytes += self.chunk_bytes
+                self.stats.d2h_count += 1
+            rec.location = dev
+            rec.arrival = now
+        return rec
+
+    def _capacity(self, dev: Device) -> int | None:
+        return self._device_budget() if dev == "device" else self.host_capacity
+
+    def _used(self, dev: Device) -> int:
+        return self.device_bytes_used() if dev == "device" else self.host_bytes_used()
+
+    def _make_room(self, dev: Device, *, exclude: int) -> None:
+        cap = self._capacity(dev)
+        if cap is None:
+            return
+        while self._used(dev) + self.chunk_bytes > cap:
+            victim = self._pick_victim(dev, exclude=exclude)
+            if victim is None:
+                raise OutOfMemory(
+                    f"{self.name}: cannot fit chunk on {dev}: "
+                    f"used={self._used(dev)} cap={cap} and no evictable chunk"
+                )
+            self._evict(victim, dev)
+
+    def _evictable(self, dev: Device, exclude: int) -> list[_ChunkRecord]:
+        out = []
+        for rec in self._records:
+            if rec.chunk_id == exclude or rec.payload is None or rec.location != dev:
+                continue
+            if rec.pinned > 0:
+                continue
+            if self.chunk_state(rec.chunk_id) is ChunkState.COMPUTE:
+                continue
+            out.append(rec)
+        return out
+
+    def _pick_victim(self, dev: Device, *, exclude: int) -> int | None:
+        cands = self._evictable(dev, exclude)
+        if not cands:
+            return None
+        if self.policy == "fifo":
+            return min(cands, key=lambda r: r.arrival).chunk_id
+        if self.policy == "lru":
+            return min(cands, key=lambda r: r.last_use).chunk_id
+        # OPT / Belady: farthest next use according to the tracer schedule.
+        def next_use(rec: _ChunkRecord) -> int:
+            ms = self._moments.get(rec.chunk_id)
+            if not ms:
+                return 2**62  # never used again -> perfect victim
+            import bisect
+
+            i = bisect.bisect_right(ms, self._current_moment)
+            return ms[i] if i < len(ms) else 2**62
+
+        return max(cands, key=next_use).chunk_id
+
+    def _evict(self, chunk_id: int, from_dev: Device) -> None:
+        rec = self._records[chunk_id]
+        if self.chunk_state(chunk_id) is ChunkState.FREE:
+            rec.payload = None
+            rec.location = None
+            return
+        to_dev: Device = "host" if from_dev == "device" else "device"
+        cap = self._capacity(to_dev)
+        if cap is not None and self._used(to_dev) + self.chunk_bytes > cap:
+            # try to cascade-evict on the destination tier
+            victim = self._pick_victim(to_dev, exclude=chunk_id)
+            if victim is None:
+                raise OutOfMemory(
+                    f"{self.name}: eviction target {to_dev} full and no victim"
+                )
+            self._evict(victim, to_dev)
+        if from_dev == "device":
+            self.stats.d2h_bytes += self.chunk_bytes
+            self.stats.d2h_count += 1
+        else:
+            self.stats.h2d_bytes += self.chunk_bytes
+            self.stats.h2d_count += 1
+        rec.location = to_dev
+        rec.arrival = self._tick()

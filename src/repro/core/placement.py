@@ -1,0 +1,88 @@
+"""Device-aware operator/chunk placement (PatrickStar Section 8.2).
+
+Two decisions are made from the warm-up statistics:
+
+1. **OS chunks in GPU margin space.**  After forward/backward, the device
+   keeps ``margin = total - peak_nonmodel - param_fp16_working_set`` bytes
+   free.  As many optimizer-state chunk *groups* as fit are pinned to the
+   device so that their ADAM update runs there without any host traffic;
+   the rest stay on the host and ADAM for them runs host-side (the
+   ZeRO-Offload default for *all* OS).  A group is a (param fp32,
+   momentum, variance) triple sharing one layout slot, so one group costs
+   ``3 * chunk_bytes_fp32`` (+ the transient fp32 grad conversion buffer).
+
+2. **Embedding on host.**  Embedding parameters are O(V*H) but their
+   activations are O(B*H); when V is large the parameters should never
+   move.  ``embedding_on_host`` returns True when the embedding's chunk
+   traffic would exceed its activation traffic.
+
+The same policy object drives both runtimes: the eager engine pins chunks
+accordingly, and the compiled path splits the OS chunk store into a
+device-resident and a host-resident (``pinned_host`` memory kind) part at
+lowering time.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class PlacementPlan:
+    # number of OS chunk groups resident on device (out of num_local_groups)
+    os_device_groups: int
+    num_local_groups: int
+    margin_bytes: int
+    embedding_on_host: bool
+    # >0: margin chunks; <0: param-fp16 chunks spilled to host (Table 4)
+    margin_or_spill_groups: int
+
+    @property
+    def os_device_fraction(self) -> float:
+        if self.num_local_groups == 0:
+            return 0.0
+        return self.os_device_groups / self.num_local_groups
+
+
+def plan_placement(
+    *,
+    margin_bytes: int,
+    num_local_groups: int,
+    chunk_size_elems: int,
+    param_fp16_local_bytes: int,
+    device_total_bytes: int,
+    peak_nonmodel_bytes: int,
+    vocab_size: int = 0,
+    hidden: int = 0,
+    batch_tokens: int = 0,
+) -> PlacementPlan:
+    """Derive the placement plan from warm-up statistics.
+
+    ``margin_bytes`` should come from ``RuntimeMemoryTracer.margin_space``.
+    """
+    # one OS group = param fp32 + momentum + variance, all fp32
+    group_bytes = 3 * chunk_size_elems * 4
+    os_device_groups = 0
+    if group_bytes > 0:
+        os_device_groups = max(0, min(num_local_groups, margin_bytes // group_bytes))
+
+    # Table 4 diagnostic: positive margin groups, or negative spilled
+    # param-fp16 groups when even the fp16 working set does not fit.
+    fp16_budget = device_total_bytes - peak_nonmodel_bytes
+    if param_fp16_local_bytes > fp16_budget > 0:
+        spill_bytes = param_fp16_local_bytes - fp16_budget
+        spill_groups = -(-spill_bytes // max(2 * chunk_size_elems, 1))  # ceil
+        margin_or_spill = -int(spill_groups)
+    else:
+        margin_or_spill = int(os_device_groups)
+
+    # Embedding placement: moving O(V*H) params vs O(B*H) activations.
+    emb_on_host = bool(vocab_size and batch_tokens and vocab_size > batch_tokens)
+
+    return PlacementPlan(
+        os_device_groups=int(os_device_groups),
+        num_local_groups=num_local_groups,
+        margin_bytes=int(margin_bytes),
+        embedding_on_host=emb_on_host,
+        margin_or_spill_groups=margin_or_spill,
+    )

@@ -1,0 +1,107 @@
+"""Tensor and chunk state machine (PatrickStar Table 1 / Fig. 7).
+
+Every model-data tensor managed by PatrickStar carries a state that
+determines where the chunk containing it may legally live:
+
+  FREE            no payload space is held for this tensor.
+  COMPUTE         the tensor is about to be / being used by an operator and
+                  must be resident on the *computing device*.
+  HOLD            payload must be kept, but may live on either tier.
+  HOLD_AFTER_FWD  HOLD produced by releasing a tensor after forward.
+  HOLD_AFTER_BWD  HOLD produced by releasing a tensor after backward.
+
+The last three are collectively "HOLD-like".  Distinguishing the
+after-FWD/after-BWD variants is what lets the distributed runtime decide
+when a whole communication group has finished a phase (Algorithm 2), even
+in the presence of activation checkpointing, which re-runs forward
+computation *during* backward.
+"""
+
+from __future__ import annotations
+
+import enum
+from typing import Iterable
+
+
+class TensorState(enum.Enum):
+    FREE = "FREE"
+    COMPUTE = "COMPUTE"
+    HOLD = "HOLD"
+    HOLD_AFTER_FWD = "HOLD_AFTER_FWD"
+    HOLD_AFTER_BWD = "HOLD_AFTER_BWD"
+
+    @property
+    def is_hold_like(self) -> bool:
+        return self in _HOLD_LIKE
+
+    def __repr__(self) -> str:  # compact in logs
+        return self.value
+
+
+_HOLD_LIKE = frozenset(
+    {TensorState.HOLD, TensorState.HOLD_AFTER_FWD, TensorState.HOLD_AFTER_BWD}
+)
+
+# Legal transitions of a param-fp16 tensor, following Fig. 7 of the paper.
+# (init) -> HOLD -> COMPUTE -> HOLD_AFTER_FWD -> HOLD (reset before BWD)
+#        -> COMPUTE -> HOLD_AFTER_BWD -> (grad overwrites payload) ... -> HOLD
+# FREE is entered when a remote chunk's payload is dropped, and left when a
+# fetched chunk re-materializes it.
+_LEGAL_TRANSITIONS: dict[TensorState, frozenset[TensorState]] = {
+    TensorState.FREE: frozenset({TensorState.HOLD, TensorState.COMPUTE}),
+    TensorState.HOLD: frozenset({TensorState.COMPUTE, TensorState.FREE, TensorState.HOLD}),
+    TensorState.COMPUTE: frozenset(
+        {
+            TensorState.HOLD,
+            TensorState.HOLD_AFTER_FWD,
+            TensorState.HOLD_AFTER_BWD,
+            TensorState.FREE,
+        }
+    ),
+    TensorState.HOLD_AFTER_FWD: frozenset(
+        {TensorState.COMPUTE, TensorState.HOLD, TensorState.FREE}
+    ),
+    TensorState.HOLD_AFTER_BWD: frozenset(
+        {TensorState.COMPUTE, TensorState.HOLD, TensorState.FREE}
+    ),
+}
+
+
+class IllegalTransition(RuntimeError):
+    """Raised when a tensor attempts a transition Fig. 7 does not permit."""
+
+
+def check_transition(old: TensorState, new: TensorState) -> None:
+    if new not in _LEGAL_TRANSITIONS[old]:
+        raise IllegalTransition(f"illegal tensor state transition {old!r} -> {new!r}")
+
+
+class ChunkState(enum.Enum):
+    """Derived location constraint of a chunk (Section 6.2).
+
+    FREE      all tensors FREE: the payload may be reused or released.
+    COMPUTE   >=1 tensor COMPUTE: chunk must be on the computing device.
+    HOLD      otherwise (>=1 HOLD-like, none COMPUTE): may live on any tier.
+    """
+
+    FREE = "FREE"
+    COMPUTE = "COMPUTE"
+    HOLD = "HOLD"
+
+
+def derive_chunk_state(tensor_states: Iterable[TensorState]) -> ChunkState:
+    saw_any = False
+    saw_hold = False
+    for s in tensor_states:
+        saw_any = True
+        if s is TensorState.COMPUTE:
+            return ChunkState.COMPUTE
+        if s.is_hold_like:
+            saw_hold = True
+    if not saw_any or not saw_hold:
+        return ChunkState.FREE
+    return ChunkState.HOLD
+
+
+def all_in(states: Iterable[TensorState], target: TensorState) -> bool:
+    return all(s is target for s in states)

@@ -1,0 +1,112 @@
+"""Runtime memory tracer (PatrickStar Section 8.1).
+
+During a *warm-up* iteration the tracer records, at every operator
+begin/end ("**moment**"), the real memory consumption R of the computing
+device and the bytes C the chunk manager holds there; non-model footprint
+is R - C.  Since PTM iterations repeat the same compute pattern, the
+warm-up profile predicts every later iteration, giving:
+
+  * ``chunkable_memory(moment)`` — device bytes available for chunks at a
+    moment (total - non-model[moment]);
+  * per-chunk *reference moments*, the future-knowledge schedule consumed
+    by the OPT eviction policy (Section 8.3);
+  * ``peak_nonmodel`` / GPU **margin space** for device-aware operator
+    placement (Section 8.2).
+
+During warm-up the chunk budget is capped at ``warmup_chunk_fraction``
+(default 20%, the paper's choice) of device memory, and eviction falls
+back to chunk-list order because no schedule exists yet.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import defaultdict
+
+
+@dataclasses.dataclass(frozen=True)
+class Moment:
+    index: int
+    op_name: str
+    phase: str  # "FWD" | "BWD" | "ADAM"
+    nonmodel_bytes: int
+
+
+class RuntimeMemoryTracer:
+    def __init__(
+        self,
+        device_total_bytes: int,
+        *,
+        warmup_chunk_fraction: float = 0.2,
+        overhead_bytes: int = 0,
+    ) -> None:
+        self.device_total_bytes = device_total_bytes
+        self.warmup_chunk_fraction = warmup_chunk_fraction
+        # constant runtime overhead (CUDA context in the paper; compiled
+        # program + runtime buffers on TPU).
+        self.overhead_bytes = overhead_bytes
+        self.warmup = True
+        self.moments: list[Moment] = []
+        self.chunk_moments: dict[int, list[int]] = defaultdict(list)
+        self._moment_idx = -1
+
+    # ------------------------------------------------------------- recording
+    def begin_iteration(self) -> None:
+        self._moment_idx = -1
+        if self.warmup:
+            self.moments.clear()
+            self.chunk_moments.clear()
+
+    def record_moment(self, op_name: str, phase: str, nonmodel_bytes: int) -> int:
+        """Called at operator start and finish.  Returns the moment index."""
+        self._moment_idx += 1
+        if self.warmup:
+            self.moments.append(
+                Moment(self._moment_idx, op_name, phase, int(nonmodel_bytes))
+            )
+        return self._moment_idx
+
+    def record_chunk_use(self, chunk_id: int) -> None:
+        if self.warmup:
+            self.chunk_moments[chunk_id].append(max(self._moment_idx, 0))
+
+    def end_warmup(self) -> None:
+        self.warmup = False
+
+    @property
+    def current_moment(self) -> int:
+        return max(self._moment_idx, 0)
+
+    # --------------------------------------------------------------- queries
+    def nonmodel_at(self, moment: int) -> int:
+        if not self.moments:
+            return 0
+        moment = min(max(moment, 0), len(self.moments) - 1)
+        return self.moments[moment].nonmodel_bytes
+
+    def chunkable_memory(self, moment: int | None = None) -> int:
+        """Device bytes available for chunks (Section 8.1)."""
+        if self.warmup:
+            return int(self.device_total_bytes * self.warmup_chunk_fraction)
+        m = self.current_moment if moment is None else moment
+        avail = self.device_total_bytes - self.overhead_bytes - self.nonmodel_at(m)
+        return max(avail, 0)
+
+    @property
+    def peak_nonmodel_bytes(self) -> int:
+        return max((m.nonmodel_bytes for m in self.moments), default=0)
+
+    def margin_space(self, param_working_set_bytes: int) -> int:
+        """GPU margin space for OS chunks (Section 8.2):
+        total - peak non-model - the param fp16 working set."""
+        return max(
+            self.device_total_bytes
+            - self.overhead_bytes
+            - self.peak_nonmodel_bytes
+            - param_working_set_bytes,
+            0,
+        )
+
+    def schedule(self) -> dict[int, list[int]]:
+        """The per-chunk future-reference schedule for OPT eviction."""
+        return {c: list(ms) for c, ms in self.chunk_moments.items()}

@@ -1,0 +1,84 @@
+"""Fused chunked-ADAM Pallas TPU kernel.
+
+The paper runs ADAM on CPU because it is memory-bound; on TPU the same
+operator family (elementwise over the OS chunk streams) is HBM-bandwidth
+bound, so the win is *fusion*: one pass reading (p32, m, v, g) and
+writing (p32, m, v, p_bf16) — 16+4 bytes/elem in, 12+2 out — instead of
+the ~8 separate elementwise HLO ops XLA would emit unfused.  Because
+chunks are fixed-size contiguous buffers, the kernel is shape-oblivious:
+it tiles the flattened chunk payload into (8, 1024) VMEM blocks (vreg
+aligned: 8 sublanes x 128 lanes x 8).
+
+Grid: one program per block of the flattened store.  The chunk store is
+padded to the block size by construction (chunk_size % 1024 == 0 via
+``zero.CHUNK_ALIGN``).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 8 * 1024  # elements per program: (8, 1024) fp32 tile = 32 KiB VMEM
+
+
+def _adam_kernel(hp_ref, p_ref, m_ref, v_ref, g_ref,
+                 p_out, m_out, v_out, p16_out):
+    lr, b1, b2, eps, wd, bc1, bc2 = [hp_ref[i] for i in range(7)]
+    g = g_ref[...].astype(jnp.float32)
+    m = b1 * m_ref[...] + (1.0 - b1) * g
+    v = b2 * v_ref[...] + (1.0 - b2) * g * g
+    mhat = m / bc1
+    vhat = v / bc2
+    upd = mhat / (jnp.sqrt(vhat) + eps)
+    p = p_ref[...]
+    upd = upd + wd * p
+    p = p - lr * upd
+    p_out[...] = p
+    m_out[...] = m
+    v_out[...] = v
+    p16_out[...] = p.astype(p16_out.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("lr", "beta1", "beta2", "eps", "weight_decay",
+                     "param_dtype", "interpret"))
+def chunked_adam_kernel(p32, m, v, g, *, lr, beta1, beta2, eps,
+                        weight_decay, bias_corr1, bias_corr2,
+                        param_dtype=jnp.bfloat16, interpret: bool = False):
+    """p32/m/v: fp32 [N]; g: bf16/fp32 [N]; N % BLOCK == 0 (pad upstream).
+
+    Returns (p32', m', v', p16') — the fused update plus the fp32->bf16
+    param conversion (Section 6.2's "updated param fp32 is converted").
+    """
+    n = p32.shape[0]
+    assert n % BLOCK == 0, f"store size {n} not a multiple of {BLOCK}"
+    rows = n // 1024
+    shape2d = (rows, 1024)
+    hp = jnp.stack([jnp.float32(lr), jnp.float32(beta1), jnp.float32(beta2),
+                    jnp.float32(eps), jnp.float32(weight_decay),
+                    jnp.asarray(bias_corr1, jnp.float32),
+                    jnp.asarray(bias_corr2, jnp.float32)])
+    grid = (rows // 8,)
+    bspec = pl.BlockSpec((8, 1024), lambda i: (i, 0))
+    out_shapes = (
+        jax.ShapeDtypeStruct(shape2d, jnp.float32),
+        jax.ShapeDtypeStruct(shape2d, jnp.float32),
+        jax.ShapeDtypeStruct(shape2d, jnp.float32),
+        jax.ShapeDtypeStruct(shape2d, param_dtype),
+    )
+    p32o, mo, vo, p16o = pl.pallas_call(
+        _adam_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((7,), lambda i: (0,)),  # hyperparams (replicated)
+                  bspec, bspec, bspec, bspec],
+        out_specs=(bspec, bspec, bspec, bspec),
+        out_shape=out_shapes,
+        interpret=interpret,
+    )(hp, p32.reshape(shape2d), m.reshape(shape2d), v.reshape(shape2d),
+      g.reshape(shape2d))
+    return p32o.reshape(n), mo.reshape(n), vo.reshape(n), p16o.reshape(n)

@@ -1,0 +1,39 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def adam_ref(p32, m, v, g, *, lr, beta1, beta2, eps, weight_decay,
+             bias_corr1, bias_corr2):
+    """Fused chunked-ADAM oracle.  All fp32, any shape."""
+    g32 = g.astype(jnp.float32)
+    m = beta1 * m + (1.0 - beta1) * g32
+    v = beta2 * v + (1.0 - beta2) * g32 * g32
+    mhat = m / bias_corr1
+    vhat = v / bias_corr2
+    upd = mhat / (jnp.sqrt(vhat) + eps)
+    if weight_decay:
+        upd = upd + weight_decay * p32
+    p32 = p32 - lr * upd
+    return p32, m, v
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True,
+                        scale: float | None = None):
+    """Naive attention oracle.  q: [B,Sq,H,D], k/v: [B,Sk,H,D] (same H)."""
+    b, sq, h, d = q.shape
+    sk = k.shape[1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if causal:
+        mask = jnp.arange(sk)[None, :] <= jnp.arange(sq)[:, None] + (sk - sq)
+        logits = jnp.where(mask[None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)

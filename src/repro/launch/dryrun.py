@@ -1,0 +1,157 @@
+"""Multi-pod dry-run: lower + compile every (arch x input-shape x mesh).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-0.6b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all            # single-pod 16x16
+  PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod
+
+Writes one JSON record per run to results/dryrun/.
+"""
+
+# The dry-run needs 512 placeholder devices so jax.make_mesh can build the
+# production mesh; jax locks the device count at first init, so this MUST
+# precede every other import (including `from repro...`).
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+import pathlib  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+
+
+def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool,
+               options=None, verbose: bool = True) -> dict:
+    from repro.analysis import roofline
+    from repro.configs import get_config, model_class
+    from repro.configs.base import INPUT_SHAPES
+    from repro.launch.mesh import make_production_mesh
+    from repro.runtime import driver
+    from repro.runtime.step import ChunkedRuntime, RuntimeOptions
+
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rt = ChunkedRuntime(model_class(cfg), cfg, mesh, options or RuntimeOptions())
+
+    if shape_name not in cfg.supported_shapes():
+        return {"arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+                "status": "skipped",
+                "reason": "full-attention arch: long_500k skipped per "
+                          "DESIGN.md §Arch-applicability"}
+
+    t0 = time.time()
+    if shape.kind == "train":
+        jf, args, _ = driver.build_train_step(rt, shape)
+    elif shape.kind == "prefill":
+        jf, args = driver.build_prefill_step(rt, shape)
+    else:
+        if not rt.model.supports_decode:
+            return {"arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+                    "status": "skipped", "reason": "no decode step"}
+        jf, args = driver.build_decode_step(rt, shape)
+    lowered = jf.lower(*args)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    ma = compiled.memory_analysis()
+    if verbose:
+        print(f"[{arch} x {shape_name} x "
+              f"{'2pod' if multi_pod else '1pod'}] memory_analysis:", ma)
+        cost = compiled.cost_analysis()
+        if isinstance(cost, list):
+            cost = cost[0]
+        print("  cost_analysis: flops=%.4g bytes=%.4g" % (
+            float(cost.get("flops", 0)), float(cost.get("bytes accessed", 0))))
+
+    n_tot, n_act = roofline.count_params(rt)
+    chips = mesh.size
+    mf = roofline.model_flops(rt, shape, n_tot, n_act) / chips
+    rl = roofline.analyze(compiled, model_flops_per_device=mf)
+    per_dev_bytes = (ma.argument_size_in_bytes + ma.output_size_in_bytes
+                     - ma.alias_size_in_bytes + ma.temp_size_in_bytes)
+    rec = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "multi_pod": multi_pod, "status": "ok",
+        "chips": chips,
+        "params_total": n_tot, "params_active": n_act,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "per_device_bytes": per_dev_bytes,
+        "arg_bytes": ma.argument_size_in_bytes,
+        "temp_bytes": ma.temp_size_in_bytes,
+        "output_bytes": ma.output_size_in_bytes,
+        "alias_bytes": ma.alias_size_in_bytes,
+        "flops": rl.flops, "hbm_bytes": rl.hbm_bytes,
+        "collective_link_bytes": rl.collective_link_bytes,
+        "compute_s": rl.compute_s, "memory_s": rl.memory_s,
+        "collective_s": rl.collective_s, "dominant": rl.dominant,
+        "model_flops_per_device": mf, "useful_ratio": rl.useful_ratio,
+        "collectives": {k: {"count": v[0], "buffer_bytes": v[1],
+                            "link_bytes": v[2]}
+                        for k, v in rl.collectives.by_kind.items()},
+    }
+    if verbose:
+        print(f"  roofline: compute={rl.compute_s:.4g}s memory={rl.memory_s:.4g}s "
+              f"collective={rl.collective_s:.4g}s dominant={rl.dominant} "
+              f"useful={rl.useful_ratio:.3f}")
+    return rec
+
+
+def main() -> None:
+    from repro.configs import ARCH_IDS
+    from repro.configs.base import INPUT_SHAPES
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(INPUT_SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--gather-policy", default="layer", choices=["layer", "step"])
+    ap.add_argument("--os-host-fraction", type=float, default=0.0)
+    ap.add_argument("--remat", default="full", choices=["full", "dots", "none"])
+    args = ap.parse_args()
+
+    from repro.runtime.step import RuntimeOptions
+    options = RuntimeOptions(gather_policy=args.gather_policy,
+                             os_host_fraction=args.os_host_fraction,
+                             remat=args.remat)
+
+    archs = [a for a in ARCH_IDS if not a.startswith("gpt2-paper")] \
+        if (args.all or args.arch is None) else [args.arch]
+    shapes = list(INPUT_SHAPES) if (args.all or args.shape is None) else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    outdir = pathlib.Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                tag = f"{arch}__{shape}__{'2pod' if mp else '1pod'}"
+                try:
+                    rec = dryrun_one(arch, shape, multi_pod=mp, options=options)
+                except Exception as e:  # noqa: BLE001
+                    traceback.print_exc()
+                    rec = {"arch": arch, "shape": shape, "multi_pod": mp,
+                           "status": "error", "error": f"{type(e).__name__}: {e}"}
+                    failures += 1
+                (outdir / f"{tag}.json").write_text(json.dumps(rec, indent=1))
+                print(f"{tag}: {rec['status']}")
+    if failures:
+        raise SystemExit(f"{failures} dry-run failures")
+
+
+if __name__ == "__main__":
+    main()

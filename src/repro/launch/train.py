@@ -1,0 +1,101 @@
+"""Training launcher.
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3-0.6b --smoke \\
+      --dp 2 --tp 2 --steps 50 --batch 8 --seq 128
+
+Runs the chunked ZeRO runtime end-to-end on the host devices (set
+``--devices N`` to fake a mesh on CPU), with the synthetic data pipeline,
+checkpointing, and metrics logging.  This is also the driver the
+end-to-end example wraps.
+"""
+
+import argparse
+import os
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gpt2-paper-1b")
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced same-family config")
+    ap.add_argument("--dp", type=int, default=1)
+    ap.add_argument("--tp", type=int, default=1)
+    ap.add_argument("--pods", type=int, default=1)
+    ap.add_argument("--devices", type=int, default=0,
+                    help="force N host devices (CPU)")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--remat", default="full", choices=["full", "dots", "none"])
+    ap.add_argument("--gather-policy", default="layer", choices=["layer", "step"])
+    ap.add_argument("--os-host-fraction", type=float, default=0.0)
+    ap.add_argument("--chunk-size", type=int, default=None)
+    ap.add_argument("--param-dtype", default=None)
+    ap.add_argument("--checkpoint", default=None)
+    ap.add_argument("--checkpoint-every", type=int, default=0)
+    ap.add_argument("--log-every", type=int, default=1)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    n_dev = args.devices or (args.pods * args.dp * args.tp)
+    if n_dev > 1:
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={n_dev} "
+            + os.environ.get("XLA_FLAGS", ""))
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.checkpoint import checkpoint as ckpt
+    from repro.configs import get_config, model_class
+    from repro.configs.base import InputShape
+    from repro.data.pipeline import make_batch_fn
+    from repro.launch.mesh import make_smoke_mesh
+    from repro.runtime import driver
+    from repro.runtime.step import ChunkedRuntime, RuntimeOptions
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    if args.param_dtype:
+        cfg = cfg.replace(param_dtype=args.param_dtype,
+                          compute_dtype=args.param_dtype)
+    mesh = make_smoke_mesh(args.dp, args.tp, args.pods)
+    options = RuntimeOptions(
+        remat=args.remat, gather_policy=args.gather_policy,
+        os_host_fraction=args.os_host_fraction, chunk_size=args.chunk_size,
+        lr=args.lr)
+    rt = ChunkedRuntime(model_class(cfg), cfg, mesh, options)
+    n_params = sum(
+        int(jnp.prod(jnp.array(s.shape)))
+        for s in jax.tree.leaves(rt.model.param_specs()))
+    print(f"arch={cfg.name} mesh={dict(mesh.shape)} "
+          f"tp-local params={n_params/1e6:.1f}M "
+          f"layouts={[(k, v.store_shape, round(v.cmap.utilization, 3)) for k, v in rt.layouts.items()]}")
+
+    shape = InputShape("cli", args.seq, args.batch, "train")
+    step_fn, _, _ = driver.build_train_step(rt, shape)
+    pstores, osstores = driver.init_state(rt, jax.random.key(args.seed))
+    next_batch = make_batch_fn(cfg, args.batch, args.seq, seed=args.seed)
+
+    import time
+    for step in range(args.steps):
+        t0 = time.perf_counter()
+        batch = {k: jnp.asarray(v) for k, v in next_batch().items()
+                 if k != "mask"}
+        pstores, osstores, metrics = step_fn(
+            pstores, osstores, batch, jnp.int32(step))
+        if step % args.log_every == 0:
+            jax.block_until_ready(metrics["loss"])
+            dt = time.perf_counter() - t0
+            print(f"step {step:4d}  loss {float(metrics['loss']):.4f}  "
+                  f"aux {float(metrics['aux_loss']):.4f}  {dt*1e3:.0f} ms")
+        if (args.checkpoint and args.checkpoint_every
+                and (step + 1) % args.checkpoint_every == 0):
+            ckpt.save(rt, pstores, osstores, args.checkpoint, step=step + 1)
+    if args.checkpoint:
+        ckpt.save(rt, pstores, osstores, args.checkpoint, step=args.steps)
+        print(f"saved checkpoint to {args.checkpoint}")
+
+
+if __name__ == "__main__":
+    main()

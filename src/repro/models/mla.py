@@ -1,0 +1,191 @@
+"""Multi-head Latent Attention (DeepSeek-V2) — arXiv:2405.04434.
+
+KV is compressed into a per-token latent ``c_kv`` of ``kv_lora_rank``
+dims plus one shared RoPE key of ``qk_rope_dim`` dims; per-head keys and
+values are up-projections of the latent.  The decode path uses the
+*absorbed* formulation: queries are mapped into latent space
+(q_nope @ W_uk) so the cache stays compressed — [B, S, kv_lora+rope]
+instead of [B, S, H, 2*dh] — which is why long-context MLA serving is
+memory-cheap.
+
+TP: heads shard over the model axis (wq/w_uk/w_uv/wo); the latent
+projections (w_dkv, w_krope) and the latent cache are replicated (they
+are head-independent and small).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MoEConfig
+from repro.models import layers as L
+from repro.models.layers import AxisCtx
+
+
+def _mla_dims(cfg: MoEConfig, tp: int):
+    if cfg.n_heads % tp != 0:
+        raise ValueError(f"MLA heads {cfg.n_heads} % tp {tp} != 0")
+    return cfg.n_heads // tp, cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+
+
+def init_mla(key, cfg: MoEConfig, tp: int, dtype) -> dict:
+    d, r = cfg.d_model, cfg.kv_lora_rank
+    h_l, nope, rope, vd = _mla_dims(cfg, tp)
+    ks = jax.random.split(key, 6)
+    return {
+        "wq": L.dense_init(ks[0], (d, h_l * (nope + rope)), dtype=dtype),
+        "w_dkv": L.dense_init(ks[1], (d, r), dtype=dtype),
+        "w_krope": L.dense_init(ks[2], (d, rope), dtype=dtype),
+        "kv_norm": jnp.ones((r,), dtype),
+        "w_uk": L.dense_init(ks[3], (r, h_l * nope), dtype=dtype),
+        "w_uv": L.dense_init(ks[4], (r, h_l * vd), dtype=dtype),
+        "wo": L.dense_init(ks[5], (h_l * vd, d), dtype=dtype),
+    }
+
+
+def mla_tp_axes() -> dict:
+    return {"wq": 1, "w_dkv": None, "w_krope": None, "kv_norm": None,
+            "w_uk": 1, "w_uv": 1, "wo": 0}
+
+
+def _latent(p, x, cfg, positions):
+    """-> (c_kv [B,S,r] normed, k_pe [B,S,1,rope] roped)."""
+    c = L.rms_norm(L.matmul(x, p["w_dkv"]), p["kv_norm"])
+    k_pe = L.matmul(x, p["w_krope"])[:, :, None, :]
+    k_pe = L.apply_rope(k_pe, positions, getattr(cfg, "rope_theta", 10000.0))
+    return c, k_pe
+
+
+def _queries(p, x, cfg, ctx, positions):
+    b, s, _ = x.shape
+    h_l, nope, rope, _ = _mla_dims(cfg, ctx.tp)
+    q = L.matmul(x, p["wq"]).reshape(b, s, h_l, nope + rope)
+    q_nope, q_pe = q[..., :nope], q[..., nope:]
+    q_pe = L.apply_rope(q_pe, positions, getattr(cfg, "rope_theta", 10000.0))
+    return q_nope, q_pe
+
+
+def mla_fwd(p, x, cfg: MoEConfig, ctx: AxisCtx, *, positions=None):
+    """Training forward: materialize per-head K/V from the latent."""
+    b, s, _ = x.shape
+    h_l, nope, rope, vd = _mla_dims(cfg, ctx.tp)
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    c, k_pe = _latent(p, x, cfg, positions)
+    q_nope, q_pe = _queries(p, x, cfg, ctx, positions)
+    k_nope = L.matmul(c, p["w_uk"]).reshape(b, s, h_l, nope)
+    v = L.matmul(c, p["w_uv"]).reshape(b, s, h_l, vd)
+    q = jnp.concatenate([q_nope, q_pe], axis=-1)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_pe, (b, s, h_l, rope))], axis=-1)
+    scale = 1.0 / math.sqrt(nope + rope)
+    # v head dim may differ from qk dim; attention_core supports it since
+    # the score einsum only uses k's dim.
+    out = L.attention_core(q, k, v, ctx, causal=True, scale=scale)
+    y = L.matmul(out.reshape(b, s, -1), p["wo"], jnp.float32)
+    return ctx.psum_model(y).astype(x.dtype)
+
+
+def mla_init_cache(cfg: MoEConfig, batch: int, max_len: int, dtype,
+                   tp: int = 1) -> dict:
+    """The latent cache is head-independent, so it shards over the model
+    axis by SEQUENCE chunks (tp chunks of ceil(S/tp)) instead of being
+    replicated per head-rank — decode combines the per-chunk partial
+    online-softmax with an exp-weighted psum."""
+    c_l = -(-max_len // max(tp, 1))
+    return {
+        "c": jnp.zeros((batch, c_l, cfg.kv_lora_rank), dtype),
+        "k_pe": jnp.zeros((batch, c_l, cfg.qk_rope_dim), dtype),
+    }
+
+
+def mla_prefill(p, x, cfg: MoEConfig, ctx: AxisCtx):
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    c, k_pe = _latent(p, x, cfg, positions)
+    # full-sequence attention as in training
+    y = mla_fwd(p, x, cfg, ctx, positions=positions)
+    # keep only this rank's sequence chunk of the latent cache
+    tp = max(ctx.tp, 1)
+    c_l = -(-s // tp)
+    pad = c_l * tp - s
+    kp = k_pe[:, :, 0, :]
+    if pad:
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0)))
+        kp = jnp.pad(kp, ((0, 0), (0, pad), (0, 0)))
+    seq_idx = ctx.model_rank()
+    idx = jnp.arange(c_l) * tp + seq_idx  # strided slot ownership
+    c = jnp.take(c, idx, axis=1)
+    kp = jnp.take(kp, idx, axis=1)
+    return y, {"c": c, "k_pe": kp}
+
+
+def mla_decode(p, x, cache, pos, cfg: MoEConfig, ctx: AxisCtx):
+    """Absorbed single-token decode against the (sequence-sharded)
+    compressed cache: every rank scores ALL heads against its latent
+    chunk; partials combine with an exp-weighted psum; each rank then
+    projects its own head slice (w_uv/wo are head-sharded)."""
+    b = x.shape[0]
+    h_l, nope, rope, vd = _mla_dims(cfg, ctx.tp)
+    H = cfg.n_heads
+    r = cfg.kv_lora_rank
+    tp = max(ctx.tp, 1)
+    positions = jnp.broadcast_to(jnp.asarray(pos)[None], (b, 1))
+    c_t, kpe_t = _latent(p, x, cfg, positions)  # [B,1,r], [B,1,1,rope]
+
+    c_l = cache["c"].shape[1]
+    seq_idx = ctx.model_rank()
+    owner = jnp.mod(pos, tp)  # strided slot ownership
+    lslot = pos // tp
+    mine = owner == seq_idx
+    old_c = jax.lax.dynamic_slice(cache["c"], (0, lslot, 0), c_t.shape)
+    old_k = jax.lax.dynamic_slice(cache["k_pe"], (0, lslot, 0),
+                                  (b, 1, rope))
+    cache_c = jax.lax.dynamic_update_slice(
+        cache["c"], jnp.where(mine, c_t.astype(cache["c"].dtype), old_c),
+        (0, lslot, 0))
+    cache_kpe = jax.lax.dynamic_update_slice(
+        cache["k_pe"],
+        jnp.where(mine, kpe_t[:, :, 0, :].astype(cache["k_pe"].dtype), old_k),
+        (0, lslot, 0))
+
+    q_nope, q_pe = _queries(p, x, cfg, ctx, positions)  # [B,1,h_l,*]
+    w_uk = p["w_uk"].reshape(r, h_l, nope)
+    q_abs = jnp.einsum("bqhn,rhn->bqhr", q_nope, w_uk,
+                       preferred_element_type=jnp.float32)
+    if tp > 1:
+        # all heads on every rank (tiny: [B,1,H,r])
+        q_abs = jax.lax.all_gather(q_abs, ctx.model_axis, axis=2, tiled=True)
+        q_pe = jax.lax.all_gather(q_pe, ctx.model_axis, axis=2, tiled=True)
+    scores = jnp.einsum("bqhr,bsr->bhqs", q_abs.astype(cache_c.dtype), cache_c,
+                        preferred_element_type=jnp.float32)
+    scores += jnp.einsum("bqhp,bsp->bhqs", q_pe.astype(cache_kpe.dtype),
+                         cache_kpe, preferred_element_type=jnp.float32)
+    scores *= 1.0 / math.sqrt(nope + rope)
+    gslot = jnp.arange(c_l) * tp + seq_idx
+    scores = jnp.where((gslot <= pos)[None, None, None, :], scores, L.NEG_INF)
+    # partial online softmax over my chunk, combined across ranks
+    m_loc = jnp.max(scores, axis=-1)  # [B,H,1]
+    w = jnp.exp(scores - m_loc[..., None])
+    l_loc = jnp.sum(w, axis=-1)
+    acc = jnp.einsum("bhqs,bsr->bhqr", w.astype(cache_c.dtype), cache_c,
+                     preferred_element_type=jnp.float32)
+    if tp > 1:
+        m_star = jax.lax.pmax(m_loc, ctx.model_axis)
+        sc = jnp.exp(m_loc - m_star)
+        l_comb = jax.lax.psum(l_loc * sc, ctx.model_axis)
+        acc = jax.lax.psum(acc * sc[..., None], ctx.model_axis)
+    else:
+        l_comb = l_loc
+    latent = (acc / jnp.maximum(l_comb[..., None], 1e-30)).transpose(0, 2, 1, 3)
+    if tp > 1:  # [B,1,H,r] -> my head slice
+        latent = jax.lax.dynamic_slice_in_dim(
+            latent, ctx.model_rank() * h_l, h_l, axis=2)
+    w_uv = p["w_uv"].reshape(r, h_l, vd)
+    out = jnp.einsum("bqhr,rhv->bqhv", latent.astype(w_uv.dtype), w_uv,
+                     preferred_element_type=jnp.float32)
+    y = L.matmul(out.reshape(b, 1, -1).astype(x.dtype), p["wo"], jnp.float32)
+    y = ctx.psum_model(y).astype(x.dtype)
+    return y, {"c": cache_c, "k_pe": cache_kpe}

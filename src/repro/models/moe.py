@@ -1,0 +1,181 @@
+"""Mixture-of-Experts layers (mixtral-8x7b, deepseek-v2-lite).
+
+Routing is capacity-based token dropping (GShard-style) but implemented
+with index gather/scatter instead of the O(T*E*C) one-hot einsum:
+per-expert slot indices are computed from a cumulative-count, tokens are
+gathered into an ``[E, C, d]`` dispatch buffer, expert FFNs run batched
+over E, and outputs are gathered back per (token, k) and combined with
+router probabilities.  Gradients flow through the gathers (transpose =
+scatter-add), so no custom VJP is required.
+
+Parallel layouts (cfg.moe_impl):
+
+  "tp"  expert FFN width sharded over the model axis (every rank holds a
+        1/tp slice of every expert).  Token->expert assignment is
+        replicated across model ranks (activations are TP-replicated), so
+        no all-to-all is needed and per-rank compute is exactly balanced.
+  "ep"  experts sharded over the model axis (E/tp experts per rank, full
+        width).  Each rank computes only its local experts' slots and the
+        combine psums partial outputs over the model axis.  Requires
+        E % tp == 0.  This is the expert-parallel layout whose collective
+        profile (bigger psum payloads vs "tp") the §Perf loop examines.
+
+Shared experts (deepseek) are a plain dense MLP on the side.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MoEConfig
+from repro.models import layers as L
+from repro.models.layers import AxisCtx
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def init_moe_mlp(key, cfg: MoEConfig, tp: int, dtype) -> dict:
+    d, f, e = cfg.d_model, cfg.d_ff_expert, cfg.n_experts
+    if cfg.moe_impl == "ep":
+        if e % tp != 0:
+            raise ValueError(f"moe_impl=ep needs n_experts % tp == 0 ({e} % {tp})")
+        e_l, f_l = e // tp, f
+    else:
+        if f % tp != 0:
+            raise ValueError(f"d_ff_expert={f} not divisible by tp={tp}")
+        e_l, f_l = e, f // tp
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": L.dense_init(ks[0], (d, e), dtype=jnp.float32),  # router in fp32
+        "w_gate": L.dense_init(ks[1], (e_l, d, f_l), in_axis=1, dtype=dtype),
+        "w_up": L.dense_init(ks[2], (e_l, d, f_l), in_axis=1, dtype=dtype),
+        "w_down": L.dense_init(ks[3], (e_l, f_l, d), in_axis=1, dtype=dtype),
+    }
+    if cfg.n_shared_experts > 0:
+        fs = cfg.d_ff_expert * cfg.n_shared_experts
+        shared_cfg = cfg.replace(d_ff=fs)
+        p["shared"] = L.init_mlp(ks[4], shared_cfg, tp, dtype)
+    return p
+
+
+def moe_tp_axes(cfg: MoEConfig) -> dict:
+    if cfg.moe_impl == "ep":
+        axes = {"router": None, "w_gate": 0, "w_up": 0, "w_down": 0}
+    else:
+        axes = {"router": None, "w_gate": 2, "w_up": 2, "w_down": 1}
+    if cfg.n_shared_experts > 0:
+        axes["shared"] = L.mlp_tp_axes(cfg)
+    return axes
+
+
+# ---------------------------------------------------------------------------
+# routing
+# ---------------------------------------------------------------------------
+
+
+def route_topk(x, router_w, cfg: MoEConfig):
+    """-> (probs [T,K], expert_idx [T,K], aux_loss scalar). x: [T, d]."""
+    logits = jnp.einsum("td,de->te", x.astype(jnp.float32), router_w)
+    probs_full = jax.nn.softmax(logits, axis=-1)
+    probs, idx = jax.lax.top_k(probs_full, cfg.top_k)
+    if getattr(cfg, "router_norm_topk", True):
+        probs = probs / jnp.maximum(jnp.sum(probs, -1, keepdims=True), 1e-9)
+    # load-balance auxiliary loss (Switch/GShard style)
+    e = cfg.n_experts
+    me = jnp.mean(probs_full, axis=0)  # mean router prob per expert
+    ce = jnp.mean(
+        (jax.nn.one_hot(idx[:, 0], e, dtype=jnp.float32)), axis=0
+    )  # fraction of tokens whose top-1 is e
+    aux = e * jnp.sum(me * ce) * cfg.router_aux_coef
+    return probs, idx, aux
+
+
+def dispatch_indices(expert_idx, n_experts: int, capacity: int):
+    """Compute per-assignment slot positions and the [E*C] token map.
+
+    expert_idx: [T, K].  Returns (pos_in_expert [T,K], keep [T,K] bool,
+    slot_to_token [E*C] int32 with T as the "no token" sentinel).
+    """
+    t, k = expert_idx.shape
+    flat_e = expert_idx.reshape(-1)  # [T*K], priority: token-major
+    onehot = jax.nn.one_hot(flat_e, n_experts, dtype=jnp.int32)  # [T*K, E]
+    pos = jnp.cumsum(onehot, axis=0) - onehot  # count of earlier same-expert
+    pos = jnp.sum(pos * onehot, axis=-1)  # [T*K]
+    keep = pos < capacity
+    slot = flat_e * capacity + jnp.minimum(pos, capacity - 1)  # [T*K]
+    token_of = jnp.repeat(jnp.arange(t, dtype=jnp.int32), k)
+    # dropped assignments scatter to an out-of-bounds slot -> mode="drop"
+    slot_or_oob = jnp.where(keep, slot, n_experts * capacity)
+    slot_to_token = jnp.full((n_experts * capacity,), t, dtype=jnp.int32)
+    slot_to_token = slot_to_token.at[slot_or_oob].set(token_of, mode="drop")
+    return pos.reshape(t, k), keep.reshape(t, k), slot_to_token
+
+
+def _expert_ffn(w_gate, w_up, w_down, xe, activation):
+    """xe: [E_l, C', d] -> [E_l, C', d] batched expert FFN."""
+    act = L.ACTIVATIONS[activation]
+    g = jnp.einsum("ecd,edf->ecf", xe, w_gate, preferred_element_type=jnp.float32)
+    u = jnp.einsum("ecd,edf->ecf", xe, w_up, preferred_element_type=jnp.float32)
+    h = (act(g) * u).astype(xe.dtype)
+    return jnp.einsum("ecf,efd->ecd", h, w_down, preferred_element_type=jnp.float32)
+
+
+def moe_fwd(p, x, cfg: MoEConfig, ctx: AxisCtx):
+    """x: [B, S, d] -> [B, S, d]; returns (y, aux_loss)."""
+    b, s, d = x.shape
+    xt = x.reshape(b * s, d)
+    t = xt.shape[0]
+    probs, idx, aux = route_topk(xt, p["router"], cfg)
+    # router params are replicated over the model axis, so every rank
+    # computes the same aux loss; psum-mean makes it invariant and keeps
+    # the synced router gradient exactly d(aux)/d(router) (not tp x it).
+    aux = ctx.psum_model(aux) / ctx.tp
+    capacity = max(int(t * cfg.top_k * cfg.capacity_factor / cfg.n_experts), 4)
+    pos, keep, slot_to_token = dispatch_indices(idx, cfg.n_experts, capacity)
+
+    # dispatch: [E*C] token gather (sentinel row t -> zeros)
+    x_pad = jnp.concatenate([xt, jnp.zeros((1, d), xt.dtype)], axis=0)
+    xd = jnp.take(x_pad, slot_to_token, axis=0).reshape(cfg.n_experts, capacity, d)
+
+    combine_first = getattr(ctx, "moe_combine_first", False)
+
+    def combine(out_full):
+        """gather each (token, k)'s slot output, weight by router prob."""
+        flat_slot = (idx * capacity + jnp.minimum(pos, capacity - 1)).reshape(-1)
+        ok = keep.reshape(-1)
+        picked = jnp.take(out_full.reshape(cfg.n_experts * capacity, d),
+                          flat_slot, axis=0)
+        picked = jnp.where(ok[:, None], picked, 0.0).reshape(t, cfg.top_k, d)
+        return jnp.einsum("tkd,tk->td", picked, probs.astype(jnp.float32))
+
+    if cfg.moe_impl == "ep" and ctx.tp > 1:
+        e_l = cfg.n_experts // ctx.tp
+        rank = ctx.model_rank()
+        xd_l = jax.lax.dynamic_slice_in_dim(xd, rank * e_l, e_l, axis=0)
+        out_l = _expert_ffn(p["w_gate"], p["w_up"], p["w_down"], xd_l,
+                            cfg.activation)  # [E_l, C, d] fp32
+        out = jnp.zeros((cfg.n_experts, capacity, d), jnp.float32)
+        out = jax.lax.dynamic_update_slice_in_dim(out, out_l, rank * e_l, axis=0)
+    else:
+        out = _expert_ffn(p["w_gate"], p["w_up"], p["w_down"], xd, cfg.activation)
+
+    if combine_first:
+        # §Perf: combine to [T, d] BEFORE the model-axis psum — payload
+        # shrinks by top_k*capacity_factor vs the [E, C, d] buffer, and
+        # partial expert outputs sum linearly through the combine.
+        y = ctx.psum_model(combine(out))
+    else:
+        out = ctx.psum_model(out)
+        y = combine(out)
+
+    if "shared" in p:
+        shared_cfg = cfg.replace(d_ff=cfg.d_ff_expert * cfg.n_shared_experts)
+        y = y + L.mlp_fwd(p["shared"], xt, shared_cfg, ctx).astype(jnp.float32)
+
+    return y.reshape(b, s, d).astype(x.dtype), aux

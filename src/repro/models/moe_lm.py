@@ -1,0 +1,134 @@
+"""MoE language models: mixtral-8x7b and deepseek-v2-lite (MLA + MoE)."""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MoEConfig, dtype_of
+from repro.models import layers as L
+from repro.models import mla as MLA
+from repro.models import moe as MOE
+from repro.models.api import BlockGroup
+from repro.models.layers import AxisCtx
+from repro.models.transformer import (
+    TransformerLM,
+    decoder_layer_fwd,
+    decoder_layer_prefill,
+    decoder_layer_decode,
+    init_decoder_layer,
+)
+
+
+def init_moe_layer(key, cfg: MoEConfig, tp: int, dtype) -> dict:
+    k1, k2 = jax.random.split(key)
+    if cfg.use_mla:
+        attn = MLA.init_mla(k1, cfg, tp, dtype)
+    else:
+        attn = L.init_attention(k1, cfg, tp, dtype)
+    return {
+        "attn": attn,
+        "moe": MOE.init_moe_mlp(k2, cfg, tp, dtype),
+        "norm_attn": jnp.ones((cfg.d_model,), dtype),
+        "norm_mlp": jnp.ones((cfg.d_model,), dtype),
+    }
+
+
+def moe_layer_fwd(p, x, cfg: MoEConfig, ctx: AxisCtx):
+    h = L.rms_norm(x, p["norm_attn"])
+    if cfg.use_mla:
+        x = x + MLA.mla_fwd(p["attn"], h, cfg, ctx)
+    else:
+        x = x + L.attention_fwd(p["attn"], h, cfg, ctx)
+    h = L.rms_norm(x, p["norm_mlp"])
+    y, aux = MOE.moe_fwd(p["moe"], h, cfg, ctx)
+    return x + y, aux
+
+
+def moe_layer_prefill(p, x, cfg: MoEConfig, ctx: AxisCtx):
+    h = L.rms_norm(x, p["norm_attn"])
+    if cfg.use_mla:
+        a, cache = MLA.mla_prefill(p["attn"], h, cfg, ctx)
+    else:
+        a, cache = L.attention_prefill(p["attn"], h, cfg, ctx)
+    x = x + a
+    h = L.rms_norm(x, p["norm_mlp"])
+    y, _ = MOE.moe_fwd(p["moe"], h, cfg, ctx)
+    return x + y, cache
+
+
+def moe_layer_decode(p, x, cache, pos, cfg: MoEConfig, ctx: AxisCtx):
+    h = L.rms_norm(x, p["norm_attn"])
+    if cfg.use_mla:
+        a, cache = MLA.mla_decode(p["attn"], h, cache, pos, cfg, ctx)
+    else:
+        a, cache = L.attention_decode(p["attn"], h, cache, pos, cfg, ctx)
+    x = x + a
+    h = L.rms_norm(x, p["norm_mlp"])
+    y, _ = MOE.moe_fwd(p["moe"], h, cfg, ctx)
+    return x + y, cache
+
+
+class MoELM(TransformerLM):
+    """Decoder-only MoE LM; optional MLA attention; optional leading dense
+    layers (deepseek-v2 style)."""
+
+    cfg: MoEConfig
+
+    def _moe_layer_init(self, key):
+        return init_moe_layer(key, self.cfg, self.ctx.tp, self.dtype)
+
+    def _moe_init_cache(self, batch, max_len):
+        cdtype = dtype_of(self.cfg.compute_dtype)
+        if self.cfg.use_mla:
+            return MLA.mla_init_cache(self.cfg, batch, max_len, cdtype,
+                                      tp=self.ctx.tp)
+        return L.attention_init_cache(self.cfg, batch, max_len, self.ctx.tp, cdtype)
+
+    def groups(self) -> list[BlockGroup]:
+        cfg = self.cfg
+        out = []
+        if cfg.first_dense_layers > 0:
+            out.append(BlockGroup(
+                name="dense_layers",
+                length=cfg.first_dense_layers,
+                init_layer=lambda k: init_decoder_layer(k, cfg, self.ctx.tp, self.dtype),
+                apply=lambda p, x, e, ctx: (decoder_layer_fwd(p, x, cfg, ctx), 0.0),
+                init_cache=lambda b, m: L.attention_init_cache(
+                    cfg, b, m, self.ctx.tp, dtype_of(cfg.compute_dtype)),
+                prefill=lambda p, x, e, ctx: decoder_layer_prefill(p, x, cfg, ctx),
+                decode=lambda p, x, c, pos, e, ctx: decoder_layer_decode(
+                    p, x, c, pos, cfg, ctx),
+            ))
+        out.append(BlockGroup(
+            name="moe_layers",
+            length=cfg.num_layers - cfg.first_dense_layers,
+            init_layer=self._moe_layer_init,
+            apply=lambda p, x, e, ctx: moe_layer_fwd(p, x, cfg, ctx),
+            init_cache=self._moe_init_cache,
+            prefill=lambda p, x, e, ctx: moe_layer_prefill(p, x, cfg, ctx),
+            decode=lambda p, x, c, pos, e, ctx: moe_layer_decode(
+                p, x, c, pos, cfg, ctx),
+        ))
+        return out
+
+
+def moe_layer_tp_axes(cfg: MoEConfig, tp: int) -> dict:
+    attn = MLA.mla_tp_axes() if cfg.use_mla else L.attention_tp_axes(cfg, tp)
+    return {"attn": attn, "moe": MOE.moe_tp_axes(cfg),
+            "norm_attn": None, "norm_mlp": None}
+
+
+def _moelm_tp_axes(self) -> dict:
+    from repro.models.transformer import _stem_tp_axes, decoder_layer_tp_axes
+    cfg = self.cfg
+    groups = {}
+    if cfg.first_dense_layers > 0:
+        groups["dense_layers"] = decoder_layer_tp_axes(cfg, self.ctx.tp)
+    groups["moe_layers"] = moe_layer_tp_axes(cfg, self.ctx.tp)
+    return {"stem": _stem_tp_axes(cfg), "groups": groups}
+
+
+MoELM.tp_axes = _moelm_tp_axes

@@ -1,0 +1,437 @@
+"""State-space / recurrent blocks: Mamba2 (SSD), mLSTM, sLSTM.
+
+All three are *sub-quadratic*: training/prefill uses a chunkwise-parallel
+scan (intra-chunk quadratic of length ``chunk_len``, inter-chunk state
+recurrence under ``jax.lax.scan``), decode is an O(1)-per-token state
+update — which is what makes the ``long_500k`` shape feasible.
+
+TP layouts:
+  * Mamba2: inner channels (= heads) shard over the model axis; the
+    head-shared B/C projections are replicated; out-proj row-parallel
+    (psum).
+  * mLSTM: q/k are replicated (full key dim per head is needed for
+    scores), v/output channels shard; out-proj row-parallel (psum).
+  * sLSTM: fully replicated (tiny params, dense recurrent coupling R
+    prevents clean sharding) — grads agree across ranks by construction.
+
+Numerics: gates and state updates run in fp32.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.layers import AxisCtx
+
+
+def _chunk(x, q):
+    """[B, S, ...] -> [B, nc, q, ...] (S % q == 0 enforced by caller pad)."""
+    b, s = x.shape[:2]
+    return x.reshape(b, s // q, q, *x.shape[2:])
+
+
+def _pad_to(x, q):
+    s = x.shape[1]
+    pad = (-s) % q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad)) + ((0, 0),) * (x.ndim - 2))
+    return x, pad
+
+
+# ===========================================================================
+# Mamba2 / SSD
+# ===========================================================================
+
+
+def init_mamba2(key, cfg, tp: int, dtype) -> dict:
+    """cfg needs: d_model, d_inner, mamba_heads, mamba_headdim, ssm_state,
+    conv_kernel."""
+    d, di = cfg.d_model, cfg.d_inner
+    nh, ds, k = cfg.mamba_heads, cfg.ssm_state, cfg.conv_kernel
+    if di % tp != 0 or nh % tp != 0:
+        raise ValueError(f"mamba d_inner={di}/heads={nh} not divisible by tp={tp}")
+    di_l, nh_l = di // tp, nh // tp
+    ks = jax.random.split(key, 9)
+    return {
+        "w_z": L.dense_init(ks[0], (d, di_l), dtype=dtype),
+        "w_x": L.dense_init(ks[1], (d, di_l), dtype=dtype),
+        "w_B": L.dense_init(ks[2], (d, ds), dtype=dtype),
+        "w_C": L.dense_init(ks[3], (d, ds), dtype=dtype),
+        "w_dt": L.dense_init(ks[4], (d, nh_l), dtype=dtype),
+        "conv_x": (jax.random.normal(ks[5], (k, di_l)) * 0.1).astype(dtype),
+        "conv_B": (jax.random.normal(ks[6], (k, ds)) * 0.1).astype(dtype),
+        "conv_C": (jax.random.normal(ks[7], (k, ds)) * 0.1).astype(dtype),
+        "A_log": jnp.zeros((nh_l,), jnp.float32),
+        "D": jnp.ones((nh_l,), jnp.float32),
+        "dt_bias": jnp.zeros((nh_l,), jnp.float32),
+        "norm": jnp.ones((di_l,), dtype),
+        "w_out": L.dense_init(ks[8], (di_l, d), dtype=dtype),
+    }
+
+
+def mamba2_tp_axes() -> dict:
+    return {"w_z": 1, "w_x": 1, "w_B": None, "w_C": None, "w_dt": 1,
+            "conv_x": 1, "conv_B": None, "conv_C": None,
+            "A_log": 0, "D": 0, "dt_bias": 0, "norm": 0, "w_out": 0}
+
+
+def _causal_conv(x, kernel, carry=None):
+    """Depthwise causal conv. x: [B,S,C]; kernel: [K,C].
+    carry: [B,K-1,C] previous inputs (decode) or None (zeros)."""
+    k = kernel.shape[0]
+    if carry is None:
+        carry = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([carry, x], axis=1)
+    out = sum(xp[:, i : i + x.shape[1], :] * kernel[i] for i in range(k))
+    new_carry = xp[:, -(k - 1):, :] if k > 1 else carry
+    return jax.nn.silu(out), new_carry
+
+
+def _ssd_chunk_scan(xh, bt, ct, la, dt, state0, vary_axes=(),
+                    inner_remat=False):
+    """Chunkwise SSD.
+
+    xh: [B,nc,q,nh,dh]  inputs per head
+    bt/ct: [B,nc,q,ds]  input/output projections (shared across heads)
+    la: [B,nc,q,nh]     per-step log decay (cumulative within chunk done here)
+    dt: [B,nc,q,nh]     step sizes
+    state0: [B,nh,dh,ds]
+    -> y [B,nc,q,nh,dh], state_out
+    """
+    lac = jnp.cumsum(la, axis=2)  # cumulative log decay within chunk
+    # intra-chunk: scores[t,s] = (C_t.B_s) * exp(lac_t - lac_s) * dt_s, s<=t
+    q = xh.shape[2]
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    cb = jnp.einsum("bnts,bnqs->bntq", ct, bt)  # [B,nc,q(t),q(s)] wait dims
+    # ct: [B,nc,q,ds]; bt: [B,nc,q,ds] -> scores over (t,s)
+    decay = lac[:, :, :, None, :] - lac[:, :, None, :, :]  # [B,nc,t,s,nh]
+    w = jnp.where(mask[None, None, :, :, None], jnp.exp(decay), 0.0)
+    w = w * dt[:, :, None, :, :]  # weight by dt_s
+    y_intra = jnp.einsum("bnts,bntsh,bnshd->bnthd", cb, w, xh)
+    # inter-chunk state carry
+    # state contribution of chunk: sum_s exp(laQ - lac_s) * dt_s * x_s B_s^T
+    laq = lac[:, :, -1:, :]  # [B,nc,1,nh]
+    w_state = jnp.exp(laq - lac) * dt  # [B,nc,q,nh]
+    chunk_state = jnp.einsum("bnsh,bnshd,bnse->bnhde",
+                             w_state, xh, bt)  # [B,nc,nh,dh,ds]
+    chunk_decay = jnp.exp(laq[:, :, 0, :])  # [B,nc,nh]
+
+    def step(state, inp):
+        cs, cd, ct_c, lac_c = inp  # per-chunk tensors (nc axis scanned)
+        # output from incoming state: y_t += exp(lac_t) * C_t . state
+        y_in = jnp.einsum("bts,bhds,bth->bthd", ct_c, state, jnp.exp(lac_c))
+        state = state * cd[:, :, None, None] + cs
+        return state, y_in
+
+    xs = (
+        chunk_state.transpose(1, 0, 2, 3, 4),
+        chunk_decay.transpose(1, 0, 2),
+        ct.transpose(1, 0, 2, 3),
+        lac.transpose(1, 0, 2, 3),
+    )
+    from repro.models.layers import vary_tree
+    vstep = lambda c, i: ((lambda st, y: (vary_tree(st, vary_axes), y))(*step(c, i)))
+    if inner_remat:
+        vstep = jax.checkpoint(vstep)
+    state_out, y_inter = jax.lax.scan(vstep, vary_tree(state0, vary_axes), xs)
+    y_inter = y_inter.transpose(1, 0, 2, 3, 4)  # [B,nc,q,nh,dh]
+    return y_intra + y_inter, state_out
+
+
+def mamba2_fwd(p, x, cfg, ctx: AxisCtx, state0=None, conv_carries=None):
+    """x: [B,S,d] -> (y [B,S,d], (state, conv_carries))."""
+    b, s, d = x.shape
+    nh_l = p["A_log"].shape[0]
+    dh, ds = cfg.mamba_headdim, cfg.ssm_state
+    q = min(cfg.chunk_len, s)
+    z = jax.nn.silu(L.matmul(x, p["w_z"]))
+    xr = L.matmul(x, p["w_x"])
+    br = L.matmul(x, p["w_B"])
+    cr = L.matmul(x, p["w_C"])
+    cc = conv_carries or {"x": None, "B": None, "C": None}
+    xc, cx = _causal_conv(xr, p["conv_x"], cc["x"])
+    bc, cb_ = _causal_conv(br, p["conv_B"], cc["B"])
+    ccv, ccc = _causal_conv(cr, p["conv_C"], cc["C"])
+    dt = jax.nn.softplus(
+        L.matmul(x, p["w_dt"]).astype(jnp.float32) + p["dt_bias"]
+    )  # [B,S,nh]
+    a = -jnp.exp(p["A_log"])  # [nh]
+    la = dt * a  # log decay per step
+
+    xc, pad = _pad_to(xc, q)
+    bc, _ = _pad_to(bc, q)
+    ccv, _ = _pad_to(ccv, q)
+    la_p, _ = _pad_to(la, q)
+    dt_p, _ = _pad_to(dt, q)
+    sp = xc.shape[1]
+    xh = _chunk(xc, q).reshape(b, sp // q, q, nh_l, dh).astype(jnp.float32)
+    bt = _chunk(bc, q).astype(jnp.float32)
+    ct = _chunk(ccv, q).astype(jnp.float32)
+    lac = _chunk(la_p, q)
+    dtc = _chunk(dt_p, q)
+    if state0 is None:
+        state0 = jnp.zeros((b, nh_l, dh, ds), jnp.float32)
+    from repro.models.layers import all_axes
+    y, state = _ssd_chunk_scan(xh, bt, ct, lac, dtc, state0,
+                               vary_axes=all_axes(ctx),
+                               inner_remat=ctx.inner_remat)
+    y = y.reshape(b, sp, nh_l * dh)[:, :s]
+    y = y + (xc.astype(jnp.float32).reshape(b, sp, nh_l, dh)
+             * p["D"][None, None, :, None]).reshape(b, sp, -1)[:, :s]
+    y = (y.astype(x.dtype)) * z
+    y = L.rms_norm(y, p["norm"])
+    out = ctx.psum_model(L.matmul(y, p["w_out"], jnp.float32)).astype(x.dtype)
+    return out, (state, {"x": cx, "B": cb_, "C": ccc})
+
+
+def mamba2_init_cache(cfg, batch: int, tp: int, dtype) -> dict:
+    nh_l = cfg.mamba_heads // tp
+    di_l = cfg.d_inner // tp
+    k = cfg.conv_kernel
+    return {
+        "state": jnp.zeros((batch, nh_l, cfg.mamba_headdim, cfg.ssm_state), jnp.float32),
+        "conv_x": jnp.zeros((batch, k - 1, di_l), dtype),
+        "conv_B": jnp.zeros((batch, k - 1, cfg.ssm_state), dtype),
+        "conv_C": jnp.zeros((batch, k - 1, cfg.ssm_state), dtype),
+    }
+
+
+def mamba2_decode(p, x, cache, cfg, ctx: AxisCtx):
+    """Single-token state update. x: [B,1,d]."""
+    carries = {"x": cache["conv_x"], "B": cache["conv_B"], "C": cache["conv_C"]}
+    y, (state, cc) = mamba2_fwd(p, x, cfg, ctx, state0=cache["state"],
+                                conv_carries=carries)
+    return y, {"state": state, "conv_x": cc["x"], "conv_B": cc["B"],
+               "conv_C": cc["C"]}
+
+
+# ===========================================================================
+# mLSTM (xLSTM's matrix-memory cell), chunkwise-parallel
+# ===========================================================================
+
+
+def init_mlstm(key, cfg, tp: int, dtype) -> dict:
+    """cfg needs: d_model, d_inner, n_heads (mLSTM heads), conv_kernel."""
+    d, di, nh = cfg.d_model, cfg.d_inner, cfg.n_heads
+    dh = di // nh
+    dv_l = dh // tp if dh % tp == 0 else dh  # shard v-dim; replicate if small
+    ks = jax.random.split(key, 8)
+    return {
+        "w_up": L.dense_init(ks[0], (d, di), dtype=dtype),        # replicated
+        "w_q": L.dense_init(ks[1], (di, nh * dh), dtype=dtype),   # replicated
+        "w_k": L.dense_init(ks[2], (di, nh * dh), dtype=dtype),   # replicated
+        "w_v": L.dense_init(ks[3], (di, nh * dv_l), dtype=dtype),  # sharded
+        "w_i": L.dense_init(ks[4], (di, nh), dtype=jnp.float32),
+        "w_f": L.dense_init(ks[5], (di, nh), dtype=jnp.float32),
+        "f_bias": jnp.full((nh,), 3.0, jnp.float32),
+        "norm": jnp.ones((nh * dv_l,), dtype),
+        "w_gate": L.dense_init(ks[6], (d, nh * dv_l), dtype=dtype),  # sharded
+        "w_down": L.dense_init(ks[7], (nh * dv_l, d), dtype=dtype),  # row
+    }
+
+
+def mlstm_tp_axes(cfg, tp: int) -> dict:
+    dh = cfg.d_inner // cfg.n_heads
+    sharded = dh % tp == 0 and tp > 1
+    ax = 1 if sharded else None
+    return {"w_up": None, "w_q": None, "w_k": None, "w_v": ax,
+            "w_i": None, "w_f": None, "f_bias": None,
+            "norm": 0 if sharded else None, "w_gate": ax,
+            "w_down": 0 if sharded else None}
+
+
+def _mlstm_sharded(cfg, tp):
+    dh = cfg.d_inner // cfg.n_heads
+    return dh % tp == 0 and tp > 1
+
+
+def _mlstm_chunk_scan(qh, kh, vh, li, lf, carry, vary_axes=(),
+                      inner_remat=False):
+    """Stabilized chunkwise mLSTM.
+
+    qh/kh: [B,nc,q,nh,dk]; vh: [B,nc,q,nh,dv]; li/lf: [B,nc,q,nh] (log
+    input gate, log forget gate).  carry = (S [B,nh,dk,dv], n [B,nh,dk],
+    m [B,nh]) with true values S*exp(m), n*exp(m).
+    """
+    b, nc, q, nh, dk = qh.shape
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    F = jnp.cumsum(lf, axis=2)  # [B,nc,q,nh] cumulative log forget in chunk
+
+    def step(c, inp):
+        S, n, m = c
+        qc, kc, vc, lic, Fc = inp  # [B,q,nh,dk] etc (chunk tensors)
+        # log weights: intra (t,s): F_t - F_s + i_s ; carry: m + F_t
+        logw = Fc[:, :, None, :] - Fc[:, None, :, :] + lic[:, None, :, :]
+        logw = jnp.where(mask[None, :, :, None], logw, -jnp.inf)
+        logw_c = m[:, None, :] + Fc  # [B,q,nh]
+        m_t = jnp.maximum(jnp.max(logw, axis=2), logw_c)  # [B,q,nh]
+        w = jnp.exp(logw - m_t[:, :, None, :])  # [B,t,s,nh]
+        wc = jnp.exp(logw_c - m_t)  # [B,q,nh]
+        scores = jnp.einsum("bthd,bshd->btsh", qc, kc) / math.sqrt(dk)
+        h = jnp.einsum("btsh,btsh,bshv->bthv", scores, w, vc)
+        h = h + wc[..., None] * jnp.einsum("bthd,bhdv->bthv", qc, S) / math.sqrt(dk)
+        # normalizer: n_t = sum_s w[t,s] k_s + wc_t * n_carry
+        nq = jnp.einsum("btsh,bshd->bthd", w, kc)
+        nq = nq + wc[..., None] * n[:, None]
+        denom = jnp.abs(jnp.einsum("bthd,bthd->bth", qc, nq)) / math.sqrt(dk)
+        denom = jnp.maximum(denom, jnp.exp(-m_t))
+        y = h / denom[..., None]
+        # update carry to chunk end
+        FQ = Fc[:, -1, :]  # [B,nh]
+        m_new = jnp.maximum(m + FQ, jnp.max(lic + FQ[:, None] - Fc, axis=1))
+        wS = jnp.exp(lic + FQ[:, None] - Fc - m_new[:, None])  # [B,q,nh]
+        S_new = S * jnp.exp(m + FQ - m_new)[:, :, None, None] + jnp.einsum(
+            "bsh,bshd,bshv->bhdv", wS, kc, vc)
+        n_new = n * jnp.exp(m + FQ - m_new)[:, :, None] + jnp.einsum(
+            "bsh,bshd->bhd", wS, kc)
+        return (S_new, n_new, m_new), y
+
+    xs = tuple(t.transpose(1, 0, *range(2, t.ndim)) for t in (qh, kh, vh, li, F))
+    from repro.models.layers import vary_tree
+    vstep = lambda c, i: ((lambda st, y: (vary_tree(st, vary_axes), y))(*step(c, i)))
+    if inner_remat:
+        vstep = jax.checkpoint(vstep)
+    carry, ys = jax.lax.scan(vstep, vary_tree(carry, vary_axes), xs)
+    return ys.transpose(1, 0, 2, 3, 4), carry
+
+
+def mlstm_fwd(p, x, cfg, ctx: AxisCtx, carry=None):
+    b, s, d = x.shape
+    nh = cfg.n_heads
+    dh = cfg.d_inner // nh
+    dv = p["w_v"].shape[1] // nh
+    q = min(cfg.chunk_len, s)
+    u = jax.nn.silu(L.matmul(x, p["w_up"]))
+    qq = L.matmul(u, p["w_q"]).reshape(b, s, nh, dh)
+    kk = L.matmul(u, p["w_k"]).reshape(b, s, nh, dh)
+    vv = L.matmul(u, p["w_v"]).reshape(b, s, nh, dv)
+    li = L.matmul(u, p["w_i"], jnp.float32)  # log input gate (pre-exp)
+    lf = jax.nn.log_sigmoid(
+        L.matmul(u, p["w_f"], jnp.float32) + p["f_bias"]
+    )  # log forget gate
+    qq, pad = _pad_to(qq, q)
+    kk, _ = _pad_to(kk, q)
+    vv, _ = _pad_to(vv, q)
+    li, _ = _pad_to(li, q)
+    lf, _ = _pad_to(lf, q)
+    sp = qq.shape[1]
+    ch = lambda t: _chunk(t.astype(jnp.float32), q)
+    if carry is None:
+        carry = (jnp.zeros((b, nh, dh, dv), jnp.float32),
+                 jnp.zeros((b, nh, dh), jnp.float32),
+                 jnp.full((b, nh), -1e30, jnp.float32))
+    from repro.models.layers import all_axes
+    y, carry = _mlstm_chunk_scan(ch(qq), ch(kk), ch(vv), ch(li), ch(lf), carry,
+                                 vary_axes=all_axes(ctx),
+                                 inner_remat=ctx.inner_remat)
+    y = y.reshape(b, sp, nh * dv)[:, :s].astype(x.dtype)
+    y = L.rms_norm(y, p["norm"])
+    y = y * jax.nn.silu(L.matmul(x, p["w_gate"]))
+    out = L.matmul(y, p["w_down"], jnp.float32)
+    if _mlstm_sharded(cfg, ctx.tp):
+        out = ctx.psum_model(out)
+    return out.astype(x.dtype), carry
+
+
+def mlstm_init_cache(cfg, batch: int, tp: int) -> tuple:
+    nh = cfg.n_heads
+    dh = cfg.d_inner // nh
+    dv = dh // tp if (dh % tp == 0 and tp > 1) else dh
+    return (jnp.zeros((batch, nh, dh, dv), jnp.float32),
+            jnp.zeros((batch, nh, dh), jnp.float32),
+            jnp.full((batch, nh), -1e30, jnp.float32))
+
+
+def mlstm_decode(p, x, carry, cfg, ctx: AxisCtx):
+    y, carry = mlstm_fwd(p, x, cfg, ctx, carry=carry)
+    return y, carry
+
+
+# ===========================================================================
+# sLSTM (scalar-memory cell with recurrent coupling) — strictly sequential
+# ===========================================================================
+
+
+def init_slstm(key, cfg, tp: int, dtype) -> dict:
+    d, di, nh = cfg.d_model, cfg.d_inner, cfg.n_heads
+    dh = di // nh
+    ks = jax.random.split(key, 4)
+    return {
+        # input projections for (z, i, f, o)
+        "w_in": L.dense_init(ks[0], (d, 4 * di), dtype=dtype),
+        # block-diagonal recurrent weights per head: [nh, dh, 4*dh]
+        "r": (jax.random.normal(ks[1], (nh, dh, 4 * dh)) / math.sqrt(dh)).astype(dtype),
+        "b": jnp.concatenate([jnp.zeros((2 * di,)), jnp.full((di,), 2.0),
+                              jnp.zeros((di,))]).astype(jnp.float32),
+        "norm": jnp.ones((di,), dtype),
+        "w_down": L.dense_init(ks[2], (di, d), dtype=dtype),
+        # small post-FFN (xLSTM sLSTM block includes an MLP)
+        "w_ff_up": L.dense_init(ks[3], (d, int(d * 4 / 3) // 8 * 8), dtype=dtype),
+        "w_ff_down": L.dense_init(ks[3], (int(d * 4 / 3) // 8 * 8, d), dtype=dtype),
+    }
+
+
+def slstm_tp_axes() -> dict:
+    return {k: None for k in
+            ("w_in", "r", "b", "norm", "w_down", "w_ff_up", "w_ff_down")}
+
+
+def slstm_fwd(p, x, cfg, ctx: AxisCtx, state=None):
+    """Sequential scan over time. x: [B,S,d]. sLSTM is replicated over TP."""
+    b, s, d = x.shape
+    nh = cfg.n_heads
+    di = cfg.d_inner
+    dh = di // nh
+    pre = L.matmul(x, p["w_in"], jnp.float32) + p["b"]  # [B,S,4*di]
+    pre = pre.reshape(b, s, 4, nh, dh)
+    if state is None:
+        state = slstm_init_state(b, nh, dh)
+
+    r = p["r"].astype(jnp.float32)
+
+    def step(st, pre_t):  # pre_t: [B,4,nh,dh]
+        c, n, h, m = st
+        rec = jnp.einsum("bhd,hdf->bhf", h, r).reshape(b, nh, 4, dh)
+        rec = rec.transpose(0, 2, 1, 3)  # [B,4,nh,dh]
+        zt, it, ft, ot = [pre_t[:, j] + rec[:, j] for j in range(4)]
+        z = jnp.tanh(zt)
+        o = jax.nn.sigmoid(ot)
+        lf = jax.nn.log_sigmoid(ft)
+        m_new = jnp.maximum(lf + m, it)
+        i_p = jnp.exp(it - m_new)
+        f_p = jnp.exp(lf + m - m_new)
+        c = f_p * c + i_p * z
+        n = f_p * n + i_p
+        h = o * c / jnp.maximum(n, 1.0)
+        return (c, n, h, m_new), h
+
+    from repro.models.layers import all_axes, vary_tree
+    va = all_axes(ctx)
+    vstep = lambda c, i: ((lambda st, y: (vary_tree(st, va), vary_tree(y, va)))(*step(c, i)))
+    if ctx.inner_remat:
+        vstep = jax.checkpoint(vstep)
+    (state), hs = jax.lax.scan(vstep, vary_tree(state, va),
+                               pre.transpose(1, 0, 2, 3, 4))
+    hs = hs.transpose(1, 0, 2, 3).reshape(b, s, di).astype(x.dtype)
+    y = L.rms_norm(hs, p["norm"])
+    out = L.matmul(y, p["w_down"], jnp.float32).astype(x.dtype)
+    x = x + out
+    # post-FFN
+    h2 = jax.nn.gelu(L.matmul(x, p["w_ff_up"]))
+    x = x + L.matmul(h2, p["w_ff_down"], jnp.float32).astype(x.dtype)
+    return x, state
+
+
+def slstm_init_state(batch: int, nh: int, dh: int):
+    z = jnp.zeros((batch, nh, dh), jnp.float32)
+    return (z, z, z, jnp.full((batch, nh, dh), -1e30, jnp.float32))
+
+
+def slstm_decode(p, x, state, cfg, ctx: AxisCtx):
+    y, state = slstm_fwd(p, x, cfg, ctx, state=state)
+    return y, state

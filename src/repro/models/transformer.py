@@ -1,0 +1,187 @@
+"""Dense decoder-only transformer LM (llama/qwen/nemotron families).
+
+Covers the assigned dense archs: qwen3-0.6b (qk_norm), deepseek-7b
+(llama-arch), qwen2.5-3b (QKV bias), nemotron-4-340b (squared-ReLU,
+un-gated MLP), mixtral's dense skeleton (the MoE subclass swaps the MLP),
+and the phi-3-vision language backbone (VLM subclass prepends patch
+embeds).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import BaseConfig, dtype_of
+from repro.models import layers as L
+from repro.models.api import BlockGroup, Model, masked_mean_loss
+from repro.models.layers import AxisCtx
+
+
+def init_decoder_layer(key, cfg, tp: int, dtype) -> dict:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p = {
+        "attn": L.init_attention(k1, cfg, tp, dtype),
+        "mlp": L.init_mlp(k2, cfg, tp, dtype),
+    }
+    if cfg.norm == "rms":
+        p["norm_attn"] = jnp.ones((cfg.d_model,), dtype)
+        p["norm_mlp"] = jnp.ones((cfg.d_model,), dtype)
+    else:
+        p["norm_attn"] = jnp.ones((cfg.d_model,), dtype)
+        p["norm_attn_b"] = jnp.zeros((cfg.d_model,), dtype)
+        p["norm_mlp"] = jnp.ones((cfg.d_model,), dtype)
+        p["norm_mlp_b"] = jnp.zeros((cfg.d_model,), dtype)
+    return p
+
+
+def _norm(p, prefix, x, cfg):
+    if cfg.norm == "rms":
+        return L.rms_norm(x, p[prefix])
+    return L.layer_norm(x, p[prefix], p[prefix + "_b"])
+
+
+def decoder_layer_fwd(p, x, cfg, ctx: AxisCtx, *, positions=None):
+    h = _norm(p, "norm_attn", x, cfg)
+    x = x + L.attention_fwd(p["attn"], h, cfg, ctx, positions=positions)
+    h = _norm(p, "norm_mlp", x, cfg)
+    x = x + L.mlp_fwd(p["mlp"], h, cfg, ctx)
+    return x
+
+
+def decoder_layer_prefill(p, x, cfg, ctx: AxisCtx):
+    h = _norm(p, "norm_attn", x, cfg)
+    a, cache = L.attention_prefill(p["attn"], h, cfg, ctx)
+    x = x + a
+    h = _norm(p, "norm_mlp", x, cfg)
+    x = x + L.mlp_fwd(p["mlp"], h, cfg, ctx)
+    return x, cache
+
+
+def decoder_layer_decode(p, x, cache, pos, cfg, ctx: AxisCtx):
+    h = _norm(p, "norm_attn", x, cfg)
+    a, cache = L.attention_decode(p["attn"], h, cache, pos, cfg, ctx)
+    x = x + a
+    h = _norm(p, "norm_mlp", x, cfg)
+    x = x + L.mlp_fwd(p["mlp"], h, cfg, ctx)
+    return x, cache
+
+
+class TransformerLM(Model):
+    """Dense decoder-only LM implementing the Model protocol."""
+
+    def __init__(self, cfg: BaseConfig, ctx: AxisCtx):
+        super().__init__(cfg, ctx)
+        self.dtype = dtype_of(cfg.param_dtype)
+
+    # ------------------------------------------------------------------ stem
+    def init_stem(self, key) -> dict:
+        cfg = self.cfg
+        k1, k2 = jax.random.split(key)
+        stem = {"embed": L.init_embedding(k1, cfg.vocab_size, cfg.d_model,
+                                          self.ctx.tp, self.dtype),
+                "final_norm": jnp.ones((cfg.d_model,), self.dtype)}
+        if cfg.norm == "ln":
+            stem["final_norm_b"] = jnp.zeros((cfg.d_model,), self.dtype)
+        if not cfg.tie_embeddings:
+            stem["unembed"] = L.init_embedding(k2, cfg.vocab_size, cfg.d_model,
+                                               self.ctx.tp, self.dtype)
+        return stem
+
+    # ---------------------------------------------------------------- groups
+    def _layer_init(self, key):
+        return init_decoder_layer(key, self.cfg, self.ctx.tp, self.dtype)
+
+    def _layer_apply(self, p, x, extras, ctx):
+        # apply returns (x, aux-loss); dense layers have no aux loss
+        return decoder_layer_fwd(p, x, self.cfg, ctx), 0.0
+
+    def _layer_prefill(self, p, x, extras, ctx):
+        return decoder_layer_prefill(p, x, self.cfg, ctx)
+
+    def _layer_decode(self, p, x, cache, pos, extras, ctx):
+        return decoder_layer_decode(p, x, cache, pos, self.cfg, ctx)
+
+    def _layer_init_cache(self, batch, max_len):
+        return L.attention_init_cache(self.cfg, batch, max_len, self.ctx.tp,
+                                      dtype_of(self.cfg.compute_dtype))
+
+    def groups(self) -> list[BlockGroup]:
+        return [BlockGroup(
+            name="layers",
+            length=self.cfg.num_layers,
+            init_layer=self._layer_init,
+            apply=self._layer_apply,
+            init_cache=self._layer_init_cache,
+            prefill=self._layer_prefill,
+            decode=self._layer_decode,
+        )]
+
+    # --------------------------------------------------------------- forward
+    def embed(self, stem, batch) -> tuple[jax.Array, Any]:
+        ids = batch["tokens"]
+        x = L.embed_lookup(stem["embed"], ids, self.cfg.vocab_size, self.ctx)
+        return x.astype(dtype_of(self.cfg.compute_dtype)), None
+
+    def head_loss(self, stem, x, batch) -> jax.Array:
+        cfg = self.cfg
+        x = self._final_norm(stem, x)
+        table = stem["embed"] if cfg.tie_embeddings else stem["unembed"]
+        blk = getattr(self.ctx, "xent_block", 0)
+        if blk and x.shape[1] > blk:
+            tot = L.blockwise_xent_sum(table, x, batch["labels"],
+                                       cfg.vocab_size, self.ctx, blk,
+                                       mask=batch.get("mask"))
+            return tot / batch["global_tokens"]
+        logits = L.lm_logits_local(table, x, self.ctx)
+        per_tok = L.vocab_parallel_xent(logits, batch["labels"], cfg.vocab_size,
+                                        self.ctx, mask=batch.get("mask"))
+        return masked_mean_loss(per_tok, None, batch["global_tokens"])
+
+    def _final_norm(self, stem, x):
+        if self.cfg.norm == "rms":
+            return L.rms_norm(x, stem["final_norm"])
+        return L.layer_norm(x, stem["final_norm"], stem["final_norm_b"])
+
+    # --------------------------------------------------------------- serving
+    def embed_decode(self, stem, token, pos, extras) -> jax.Array:
+        x = L.embed_lookup(stem["embed"], token, self.cfg.vocab_size, self.ctx)
+        return x.astype(dtype_of(self.cfg.compute_dtype))
+
+    def head_logits(self, stem, x) -> jax.Array:
+        x = self._final_norm(stem, x)
+        table = stem["embed"] if self.cfg.tie_embeddings else stem["unembed"]
+        return L.lm_logits_local(table, x, self.ctx)
+
+
+def decoder_layer_tp_axes(cfg, tp: int) -> dict:
+    axes = {"attn": L.attention_tp_axes(cfg, tp), "mlp": L.mlp_tp_axes(cfg),
+            "norm_attn": None, "norm_mlp": None}
+    if cfg.norm != "rms":
+        axes["norm_attn_b"] = None
+        axes["norm_mlp_b"] = None
+    return axes
+
+
+def _stem_tp_axes(cfg) -> dict:
+    axes = {"embed": {"table": 0}, "final_norm": None}
+    if cfg.norm == "ln":
+        axes["final_norm_b"] = None
+    if not cfg.tie_embeddings:
+        axes["unembed"] = {"table": 0}
+    return axes
+
+
+class _TransformerTPAxes:
+    pass
+
+
+def transformer_tp_axes(self) -> dict:
+    return {"stem": _stem_tp_axes(self.cfg),
+            "groups": {"layers": decoder_layer_tp_axes(self.cfg, self.ctx.tp)}}
+
+
+TransformerLM.tp_axes = transformer_tp_axes

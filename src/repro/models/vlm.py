@@ -1,0 +1,66 @@
+"""Phi-3-vision backbone: phi-3-mini language decoder consuming stub
+patch embeddings (the ViT/CLIP encoder is a stub per the assignment —
+``input_specs`` supplies ``[B, num_patches, vision_dim]`` precomputed
+patch embeddings; the stem projects them into d_model and prepends them
+to the token stream).  Loss is computed on text positions only.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import VLMConfig, dtype_of
+from repro.models import layers as L
+from repro.models.api import masked_mean_loss
+from repro.models.transformer import TransformerLM
+
+
+class VLMBackbone(TransformerLM):
+    cfg: VLMConfig
+
+    def init_stem(self, key) -> dict:
+        k1, k2 = jax.random.split(key)
+        stem = super().init_stem(k1)
+        cfg = self.cfg
+        stem["projector"] = {
+            "w1": L.dense_init(k2, (cfg.vision_dim, cfg.d_model), dtype=self.dtype),
+            "w2": L.dense_init(jax.random.fold_in(k2, 1),
+                               (cfg.d_model, cfg.d_model), dtype=self.dtype),
+        }
+        return stem
+
+    def embed(self, stem, batch) -> tuple[jax.Array, Any]:
+        cfg = self.cfg
+        cdtype = dtype_of(cfg.compute_dtype)
+        patches = batch["patch_embeds"].astype(cdtype)  # [B,P,vision_dim] stub
+        vis = L.matmul(patches, stem["projector"]["w1"])
+        vis = L.matmul(jax.nn.gelu(vis), stem["projector"]["w2"])
+        tok = L.embed_lookup(stem["embed"], batch["tokens"], cfg.vocab_size,
+                             self.ctx).astype(cdtype)
+        x = jnp.concatenate([vis.astype(cdtype), tok], axis=1)
+        return x, None
+
+    def head_loss(self, stem, x, batch) -> jax.Array:
+        cfg = self.cfg
+        p = batch["patch_embeds"].shape[1]
+        x = x[:, p:]  # loss on text positions only
+        x = self._final_norm(stem, x)
+        table = stem["embed"] if cfg.tie_embeddings else stem["unembed"]
+        logits = L.lm_logits_local(table, x, self.ctx)
+        per_tok = L.vocab_parallel_xent(logits, batch["labels"], cfg.vocab_size,
+                                        self.ctx, mask=batch.get("mask"))
+        return masked_mean_loss(per_tok, None, batch["global_tokens"])
+
+
+def _vlm_tp_axes(self) -> dict:
+    from repro.models.transformer import _stem_tp_axes, decoder_layer_tp_axes
+    stem = _stem_tp_axes(self.cfg)
+    stem["projector"] = {"w1": None, "w2": None}
+    return {"stem": stem,
+            "groups": {"layers": decoder_layer_tp_axes(self.cfg, self.ctx.tp)}}
+
+
+VLMBackbone.tp_axes = _vlm_tp_axes

@@ -1,0 +1,151 @@
+"""xLSTM language model (arXiv:2405.04517): mLSTM blocks with interleaved
+sLSTM blocks at ratio ``mlstm_per_unit : slstm_per_unit`` (xLSTM[7:1] for
+the 1.3B config).
+
+The layer stack is scanned over *units*; each unit's params hold a
+stacked ``[mlstm_per_unit, ...]`` mLSTM subtree (inner scan) plus one
+sLSTM subtree, so all units share one chunk layout.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import XLSTMConfig, dtype_of
+from repro.models import layers as L
+from repro.models import ssm as S
+from repro.models.api import BlockGroup
+from repro.models.layers import AxisCtx, all_axes, vary_tree
+from repro.models.transformer import TransformerLM
+
+
+def _mlstm_block(p, x, cfg, ctx, carry=None):
+    h = L.rms_norm(x, p["norm"])
+    y, carry = S.mlstm_fwd(p["cell"], h, cfg, ctx, carry=carry)
+    return x + y, carry
+
+
+def _slstm_block(p, x, cfg, ctx, state=None):
+    h = L.rms_norm(x, p["norm"])
+    y, state = S.slstm_fwd(p["cell"], h, cfg, ctx, state=state)
+    return x + (y - h), state  # slstm_fwd includes its own residual+ffn
+
+
+class XLSTMLM(TransformerLM):
+    cfg: XLSTMConfig
+
+    # ------------------------------------------------------------------ unit
+    def _init_unit(self, key):
+        cfg = self.cfg
+        km, ks = jax.random.split(key)
+        mk = jax.random.split(km, cfg.mlstm_per_unit)
+
+        def one_mlstm(k):
+            return {"norm": jnp.ones((cfg.d_model,), self.dtype),
+                    "cell": S.init_mlstm(k, cfg, self.ctx.tp, self.dtype)}
+
+        unit = {"mlstm": jax.vmap(one_mlstm)(mk)}
+        if cfg.slstm_per_unit:
+            unit["slstm"] = {"norm": jnp.ones((cfg.d_model,), self.dtype),
+                             "cell": S.init_slstm(ks, cfg, self.ctx.tp, self.dtype)}
+        return unit
+
+    def _unit_apply(self, p, x, extras, ctx):
+        cfg = self.cfg
+
+        va = all_axes(ctx)
+
+        def body(carry_x, mparams):
+            y, _ = _mlstm_block(mparams, carry_x, cfg, ctx)
+            return vary_tree(y, va), None
+
+        x, _ = jax.lax.scan(body, vary_tree(x, va), p["mlstm"])
+        if cfg.slstm_per_unit:
+            x, _ = _slstm_block(p["slstm"], x, cfg, ctx)
+        return x, 0.0
+
+    # --------------------------------------------------------------- serving
+    def _unit_init_cache(self, batch, max_len):
+        cfg = self.cfg
+        m = S.mlstm_init_cache(cfg, batch, self.ctx.tp)
+        m = jax.tree.map(lambda t: jnp.broadcast_to(
+            t[None], (cfg.mlstm_per_unit,) + t.shape), m)
+        cache = {"mlstm": m}
+        if cfg.slstm_per_unit:
+            cache["slstm"] = S.slstm_init_state(
+                batch, cfg.n_heads, cfg.d_inner // cfg.n_heads)
+        return cache
+
+    def _unit_prefill(self, p, x, extras, ctx):
+        cfg = self.cfg
+
+        va = all_axes(ctx)
+
+        def body(carry_x, inp):
+            mparams, mcache0 = inp
+            h = L.rms_norm(carry_x, mparams["norm"])
+            y, carry = S.mlstm_fwd(mparams["cell"], h, cfg, ctx, carry=None)
+            return vary_tree(carry_x + y, va), vary_tree(carry, va)
+
+        x, mcaches = jax.lax.scan(
+            body, vary_tree(x, va), (p["mlstm"], self._dummy_mcache_stack()))
+        cache = {"mlstm": mcaches}
+        if cfg.slstm_per_unit:
+            h = L.rms_norm(x, p["slstm"]["norm"])
+            y, st = S.slstm_fwd(p["slstm"]["cell"], h, cfg, ctx)
+            x = x + (y - h)
+            cache["slstm"] = st
+        return x, cache
+
+    def _dummy_mcache_stack(self):
+        # scan xs placeholder so ys carries get stacked per inner layer
+        cfg = self.cfg
+        return jnp.zeros((cfg.mlstm_per_unit,), jnp.int32)
+
+    def _unit_decode(self, p, x, cache, pos, extras, ctx):
+        cfg = self.cfg
+
+        va = all_axes(ctx)
+
+        def body(carry_x, inp):
+            mparams, mcache = inp
+            h = L.rms_norm(carry_x, mparams["norm"])
+            y, carry = S.mlstm_fwd(mparams["cell"], h, cfg, ctx, carry=mcache)
+            return vary_tree(carry_x + y, va), vary_tree(carry, va)
+
+        x, mcaches = jax.lax.scan(body, vary_tree(x, va), (p["mlstm"], cache["mlstm"]))
+        new_cache = {"mlstm": mcaches}
+        if cfg.slstm_per_unit:
+            h = L.rms_norm(x, p["slstm"]["norm"])
+            y, st = S.slstm_fwd(p["slstm"]["cell"], h, cfg, ctx,
+                                state=cache["slstm"])
+            x = x + (y - h)
+            new_cache["slstm"] = st
+        return x, new_cache
+
+    def groups(self) -> list[BlockGroup]:
+        return [BlockGroup(
+            name="units",
+            length=self.cfg.num_units,
+            init_layer=self._init_unit,
+            apply=self._unit_apply,
+            init_cache=self._unit_init_cache,
+            prefill=self._unit_prefill,
+            decode=self._unit_decode,
+        )]
+
+
+def _xlstm_tp_axes(self) -> dict:
+    from repro.models.transformer import _stem_tp_axes
+    cfg = self.cfg
+    m_axes = {"norm": None, "cell": S.mlstm_tp_axes(cfg, self.ctx.tp)}
+    unit = {"mlstm": m_axes}
+    if cfg.slstm_per_unit:
+        unit["slstm"] = {"norm": None, "cell": S.slstm_tp_axes()}
+    return {"stem": _stem_tp_axes(cfg), "groups": {"units": unit}}
+
+
+XLSTMLM.tp_axes = _xlstm_tp_axes

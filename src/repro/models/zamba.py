@@ -1,0 +1,210 @@
+"""Zamba2-style hybrid (arXiv:2411.15242): a Mamba2 backbone with ONE
+globally-shared attention+MLP block applied every ``shared_interval``
+layers.
+
+The shared block's weights live in the STEM (fetched once per step) —
+these are exactly the paper's shared-parameter tensors whose chunks are
+referenced by multiple operators (refcount > 1, Section 6.2).  It runs on
+``concat(hidden, original_embedding)`` (2*d_model wide, as in Zamba) and
+each unit owns a small projection back to d_model.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import HybridConfig, dtype_of
+from repro.models import layers as L
+from repro.models import ssm as S
+from repro.models.api import BlockGroup
+from repro.models.layers import AxisCtx, all_axes, vary_tree
+from repro.models.transformer import TransformerLM
+
+
+def _shared_cfg(cfg: HybridConfig):
+    """The shared attention block operates at 2*d_model width."""
+    return cfg.replace(d_model=2 * cfg.d_model, d_ff=cfg.d_ff,
+                       sliding_window=None)
+
+
+class ZambaLM(TransformerLM):
+    cfg: HybridConfig
+
+    # ------------------------------------------------------------------ stem
+    def init_stem(self, key) -> dict:
+        k1, k2, k3 = jax.random.split(key, 3)
+        stem = super().init_stem(k1)
+        scfg = _shared_cfg(self.cfg)
+        stem["shared_attn"] = {
+            "attn": L.init_attention(k2, scfg, self.ctx.tp, self.dtype),
+            "mlp": L.init_mlp(k3, scfg, self.ctx.tp, self.dtype),
+            "norm_attn": jnp.ones((scfg.d_model,), self.dtype),
+            "norm_mlp": jnp.ones((scfg.d_model,), self.dtype),
+        }
+        return stem
+
+    # ------------------------------------------------------------------ unit
+    def _init_unit(self, key):
+        cfg = self.cfg
+        ku, kp = jax.random.split(key)
+        mk = jax.random.split(ku, cfg.shared_interval)
+
+        def one_mamba(k):
+            return {"norm": jnp.ones((cfg.d_model,), self.dtype),
+                    "cell": S.init_mamba2(k, cfg, self.ctx.tp, self.dtype)}
+
+        return {
+            "mamba": jax.vmap(one_mamba)(mk),
+            # per-unit projection of the shared block's 2d output back to d
+            "w_proj": L.dense_init(kp, (2 * cfg.d_model, cfg.d_model),
+                                   dtype=self.dtype),
+        }
+
+    def _shared_block(self, sp, x2, ctx, *, mode, cache=None, pos=None):
+        """x2: [B,S,2d]. Returns (out [B,S,2d], cache)."""
+        scfg = _shared_cfg(self.cfg)
+        h = L.rms_norm(x2, sp["norm_attn"])
+        if mode == "train":
+            a = L.attention_fwd(sp["attn"], h, scfg, ctx)
+            new_cache = None
+        elif mode == "prefill":
+            a, new_cache = L.attention_prefill(sp["attn"], h, scfg, ctx)
+        else:
+            a, new_cache = L.attention_decode(sp["attn"], h, cache, pos, scfg, ctx)
+        x2 = x2 + a
+        h = L.rms_norm(x2, sp["norm_mlp"])
+        x2 = x2 + L.mlp_fwd(sp["mlp"], h, scfg, ctx)
+        return x2, new_cache
+
+    def _apply_unit(self, p, x, extras, ctx, *, mode, cache=None, pos=None):
+        cfg = self.cfg
+        stem_shared, x0 = extras["shared_attn"], extras["x0"]
+        # shared attention block first (Zamba puts attention between groups)
+        x2 = jnp.concatenate([x, x0], axis=-1)
+        x2, attn_cache = self._shared_block(
+            stem_shared, x2, ctx, mode=mode,
+            cache=None if mode != "decode" else cache["attn"], pos=pos)
+        x = x + L.matmul(x2, p["w_proj"], jnp.float32).astype(x.dtype)
+
+        va = all_axes(ctx)
+        if mode == "train":
+            def body(cx, mp):
+                h = L.rms_norm(cx, mp["norm"])
+                y, _ = S.mamba2_fwd(mp["cell"], h, cfg, ctx)
+                return vary_tree(cx + y, va), None
+            x, _ = jax.lax.scan(body, vary_tree(x, va), p["mamba"])
+            return x, 0.0
+        if mode == "prefill":
+            def body(cx, mp):
+                h = L.rms_norm(cx, mp["norm"])
+                y, (state, convs) = S.mamba2_fwd(mp["cell"], h, cfg, ctx)
+                return vary_tree(cx + y, va), vary_tree(
+                    {"state": state, "conv_x": convs["x"],
+                     "conv_B": convs["B"], "conv_C": convs["C"]}, va)
+            x, mcaches = jax.lax.scan(body, vary_tree(x, va), p["mamba"])
+            return x, {"attn": attn_cache, "mamba": mcaches}
+        # decode
+        def body(cx, inp):
+            mp, mc = inp
+            h = L.rms_norm(cx, mp["norm"])
+            y, mc2 = S.mamba2_decode(mp["cell"], h, mc, cfg, ctx)
+            return vary_tree(cx + y, va), vary_tree(mc2, va)
+        x, mcaches = jax.lax.scan(body, vary_tree(x, va), (p["mamba"], cache["mamba"]))
+        return x, {"attn": attn_cache, "mamba": mcaches}
+
+    # --------------------------------------------------------------- plumbing
+    def embed(self, stem, batch):
+        x, _ = super().embed(stem, batch)
+        return x, {"shared_attn": stem["shared_attn"], "x0": x}
+
+    def embed_decode(self, stem, token, pos, extras):
+        x = super().embed_decode(stem, token, pos, extras)
+        return x
+
+    def decode_extras(self, stem, x):
+        return {"shared_attn": stem["shared_attn"], "x0": x}
+
+    def _unit_init_cache(self, batch, max_len):
+        cfg = self.cfg
+        scfg = _shared_cfg(cfg)
+        mc = S.mamba2_init_cache(cfg, batch, self.ctx.tp,
+                                 dtype_of(cfg.compute_dtype))
+        mc = jax.tree.map(lambda t: jnp.broadcast_to(
+            t[None], (cfg.shared_interval,) + t.shape), mc)
+        return {
+            "attn": L.attention_init_cache(scfg, batch, max_len, self.ctx.tp,
+                                           dtype_of(cfg.compute_dtype)),
+            "mamba": mc,
+        }
+
+    # ----------------------------------------------------- tail mamba layers
+    def _init_tail_layer(self, key):
+        cfg = self.cfg
+        return {"norm": jnp.ones((cfg.d_model,), self.dtype),
+                "cell": S.init_mamba2(key, cfg, self.ctx.tp, self.dtype)}
+
+    def _tail_apply(self, p, x, extras, ctx):
+        h = L.rms_norm(x, p["norm"])
+        y, _ = S.mamba2_fwd(p["cell"], h, self.cfg, ctx)
+        return x + y, 0.0
+
+    def _tail_prefill(self, p, x, extras, ctx):
+        h = L.rms_norm(x, p["norm"])
+        y, (state, convs) = S.mamba2_fwd(p["cell"], h, self.cfg, ctx)
+        return x + y, {"state": state, "conv_x": convs["x"],
+                       "conv_B": convs["B"], "conv_C": convs["C"]}
+
+    def _tail_decode(self, p, x, cache, pos, extras, ctx):
+        h = L.rms_norm(x, p["norm"])
+        y, c2 = S.mamba2_decode(p["cell"], h, cache, self.cfg, ctx)
+        return x + y, c2
+
+    def groups(self) -> list[BlockGroup]:
+        cfg = self.cfg
+        out = [BlockGroup(
+            name="units",
+            length=cfg.num_units,
+            init_layer=self._init_unit,
+            apply=lambda p, x, e, ctx: self._apply_unit(p, x, e, ctx, mode="train"),
+            init_cache=self._unit_init_cache,
+            prefill=lambda p, x, e, ctx: self._apply_unit(p, x, e, ctx, mode="prefill"),
+            decode=lambda p, x, c, pos, e, ctx: self._apply_unit(
+                p, x, e, ctx, mode="decode", cache=c, pos=pos),
+        )]
+        if cfg.tail_layers:
+            out.append(BlockGroup(
+                name="tail",
+                length=cfg.tail_layers,
+                init_layer=self._init_tail_layer,
+                apply=self._tail_apply,
+                init_cache=lambda b, m: S.mamba2_init_cache(
+                    cfg, b, self.ctx.tp, dtype_of(cfg.compute_dtype)),
+                prefill=self._tail_prefill,
+                decode=self._tail_decode,
+            ))
+        return out
+
+
+def _zamba_tp_axes(self) -> dict:
+    from repro.models.transformer import _stem_tp_axes
+    cfg = self.cfg
+    scfg = _shared_cfg(cfg)
+    stem = _stem_tp_axes(cfg)
+    stem["shared_attn"] = {
+        "attn": L.attention_tp_axes(scfg, self.ctx.tp),
+        "mlp": L.mlp_tp_axes(scfg),
+        "norm_attn": None, "norm_mlp": None,
+    }
+    unit = {"mamba": {"norm": None, "cell": S.mamba2_tp_axes()},
+            "w_proj": None}
+    groups = {"units": unit}
+    if cfg.tail_layers:
+        groups["tail"] = {"norm": None, "cell": S.mamba2_tp_axes()}
+    return {"stem": stem, "groups": groups}
+
+
+ZambaLM.tp_axes = _zamba_tp_axes

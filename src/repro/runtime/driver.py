@@ -1,0 +1,373 @@
+"""shard_map/jit wrappers, state init, and input specs for the runtime.
+
+This is the layer the launcher and the dry-run call: it turns the local
+step functions from ``runtime.step`` into jitted global-array functions
+with explicit NamedShardings (including ``pinned_host`` memory kinds for
+host-resident optimizer-state chunk groups).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import InputShape, dtype_of
+from repro.core import zero
+from repro.runtime.step import ChunkedRuntime
+
+
+# ---------------------------------------------------------------------------
+# sharding helpers
+# ---------------------------------------------------------------------------
+
+
+def batch_axes(rt: ChunkedRuntime, global_batch: int):
+    """Mesh axes the batch dim shards over (must divide evenly)."""
+    axes = []
+    n = 1
+    if rt.ctx.pods > 1 and global_batch % (rt.ctx.pods * rt.ctx.dp) == 0:
+        axes.append("pod")
+        n *= rt.ctx.pods
+    if rt.ctx.dp > 1 and global_batch % (n * rt.ctx.dp) == 0:
+        axes.append("data")
+    if not axes:
+        return None  # replicate (e.g. batch=1 long-context decode)
+    return tuple(axes)
+
+
+@functools.lru_cache(maxsize=1)
+def host_memory_kind_supported() -> bool:
+    """Whether this backend can place jit outputs in pinned_host memory.
+
+    True on TPU; False on the CPU backend (XLA:CPU lacks the
+    annotate_device_placement custom call), where host-offloaded OS chunk
+    groups fall back to device placement — the placement *policy* and its
+    group split still lower and are what the roofline reads.
+    """
+    try:
+        s = jax.sharding.SingleDeviceSharding(
+            jax.devices()[0], memory_kind="pinned_host")
+        jax.jit(lambda: jnp.zeros((8,), jnp.float32), out_shardings=s)()
+        return True
+    except Exception:
+        return False
+
+
+def _ns(rt, spec, *, host=False):
+    kw = {"memory_kind": "pinned_host"} if host and host_memory_kind_supported() else {}
+    return NamedSharding(rt.mesh, spec, **kw)
+
+
+def os_shardings(rt: ChunkedRuntime):
+    out = {}
+    for name, pspec in rt.store_pspecs().items():
+        out[name] = {k: {"dev": _ns(rt, pspec),
+                         "host": _ns(rt, pspec, host=True)}
+                     for k in ("p32", "m", "v")}
+    return out
+
+
+def param_shardings(rt: ChunkedRuntime):
+    return {name: _ns(rt, pspec) for name, pspec in rt.store_pspecs().items()}
+
+
+# ---------------------------------------------------------------------------
+# input specs per (arch, input shape)  — ShapeDtypeStructs, no allocation
+# ---------------------------------------------------------------------------
+
+
+def train_batch_specs(rt: ChunkedRuntime, shape: InputShape):
+    cfg = rt.cfg
+    b, s = shape.global_batch, shape.seq_len
+    ba = batch_axes(rt, b)
+    tok = lambda shp: jax.ShapeDtypeStruct(shp, jnp.int32)
+    if cfg.arch_type == "audio":
+        frames = min(cfg.encoder_frames, s)
+        specs = {
+            "frames": jax.ShapeDtypeStruct(
+                (b, frames, cfg.frontend_dim), jnp.float32),
+            "tokens": tok((b, s)), "labels": tok((b, s)),
+        }
+        pspecs = {"frames": P(ba, None, None),
+                  "tokens": P(ba, None), "labels": P(ba, None)}
+        n_tokens = b * s
+    elif cfg.arch_type == "vlm":
+        p_ = cfg.num_patches
+        st = s - p_
+        specs = {
+            "patch_embeds": jax.ShapeDtypeStruct((b, p_, cfg.vision_dim), jnp.float32),
+            "tokens": tok((b, st)), "labels": tok((b, st)),
+        }
+        pspecs = {"patch_embeds": P(ba, None, None),
+                  "tokens": P(ba, None), "labels": P(ba, None)}
+        n_tokens = b * st
+    else:
+        specs = {"tokens": tok((b, s)), "labels": tok((b, s))}
+        pspecs = {"tokens": P(ba, None), "labels": P(ba, None)}
+        n_tokens = b * s
+    specs["global_tokens"] = jax.ShapeDtypeStruct((), jnp.float32)
+    pspecs["global_tokens"] = P()
+    return specs, pspecs, float(n_tokens)
+
+
+def cache_specs(rt: ChunkedRuntime, shape: InputShape):
+    """Global decode-cache ShapeDtypeStructs + PartitionSpecs.
+
+    Layout: [tp, L, B, ...] — tp shards over model, B over (pod, data).
+    """
+    b, s = shape.global_batch, shape.seq_len
+    ba = batch_axes(rt, b)
+    tp = rt.ctx.tp
+    specs, pspecs = {}, {}
+    for g in rt.model.groups():
+        if g.init_cache is None or g.decode is None:
+            continue
+        one = jax.eval_shape(lambda: g.init_cache(b, s))
+        L = g.length
+
+        def to_global(sds):
+            return jax.ShapeDtypeStruct((tp, L) + sds.shape, sds.dtype)
+
+        def to_pspec(sds):
+            # locate the batch dim (hybrid/xlstm caches carry extra
+            # leading stacked dims before it); shard it over (pod, data)
+            dims = [None] * len(sds.shape)
+            if ba is not None:
+                for i, d in enumerate(sds.shape):
+                    if d == b:
+                        dims[i] = ba
+                        break
+            return P("model", None, *dims)
+
+        specs[g.name] = jax.tree.map(to_global, one)
+        pspecs[g.name] = jax.tree.map(to_pspec, one)
+    return specs, pspecs
+
+
+def decode_input_specs(rt: ChunkedRuntime, shape: InputShape):
+    b = shape.global_batch
+    ba = batch_axes(rt, b)
+    token = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+    caches, cache_ps = cache_specs(rt, shape)
+    return {
+        "token": (token, P(ba, None)),
+        "pos": (jax.ShapeDtypeStruct((), jnp.int32), P()),
+        "caches": (caches, cache_ps),
+    }
+
+
+# ---------------------------------------------------------------------------
+# jitted global-step builders
+# ---------------------------------------------------------------------------
+
+
+def _smap(rt, fn, in_specs, out_specs, *, check_vma=True):
+    # check_vma=True is required for correct psum/pvary gradient
+    # transposes in training; serve paths (no autodiff) run with it off,
+    # since batch-replicated decode (global_batch=1) produces values that
+    # are invariant in fact but typed varying.
+    return jax.shard_map(fn, mesh=rt.mesh, in_specs=in_specs,
+                         out_specs=out_specs, check_vma=check_vma)
+
+
+def build_train_step(rt: ChunkedRuntime, shape: InputShape):
+    """-> (jitted step, arg ShapeDtypeStructs, arg shardings)."""
+    step = rt.train_step_fn()
+    bspecs, bpspecs, _ = train_batch_specs(rt, shape)
+    p_ps = rt.store_pspecs()
+    os_ps = rt.os_pspecs()
+    metrics_ps = {"loss": P(), "aux_loss": P()}
+    f = _smap(rt, step, (p_ps, os_ps, bpspecs, P()),
+              (p_ps, os_ps, metrics_ps))
+    in_shardings = (param_shardings(rt), os_shardings(rt),
+                    jax.tree.map(lambda ps: _ns(rt, ps), bpspecs,
+                                 is_leaf=lambda x: isinstance(x, P)),
+                    _ns(rt, P()))
+    out_shardings = (param_shardings(rt), os_shardings(rt),
+                     jax.tree.map(lambda ps: _ns(rt, ps), metrics_ps,
+                                  is_leaf=lambda x: isinstance(x, P)))
+    jf = jax.jit(f, in_shardings=in_shardings, out_shardings=out_shardings,
+                 donate_argnums=(0, 1))
+    args = (rt.store_specs(), rt.os_specs(), bspecs,
+            jax.ShapeDtypeStruct((), jnp.int32))
+    return jf, args, in_shardings
+
+
+def build_prefill_step(rt: ChunkedRuntime, shape: InputShape):
+    step = rt.prefill_step_fn()
+    cfg = rt.cfg
+    b, s = shape.global_batch, shape.seq_len
+    ba = batch_axes(rt, b)
+    if cfg.arch_type == "audio":
+        frames = min(cfg.encoder_frames, 1500)
+        bspecs = {"frames": jax.ShapeDtypeStruct((b, frames, cfg.frontend_dim),
+                                                 jnp.float32),
+                  "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+        bpspecs = {"frames": P(ba, None, None), "tokens": P(ba, None)}
+    elif cfg.arch_type == "vlm":
+        bspecs = {"patch_embeds": jax.ShapeDtypeStruct(
+                      (b, cfg.num_patches, cfg.vision_dim), jnp.float32),
+                  "tokens": jax.ShapeDtypeStruct((b, s - cfg.num_patches), jnp.int32)}
+        bpspecs = {"patch_embeds": P(ba, None, None), "tokens": P(ba, None)}
+    else:
+        bspecs = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+        bpspecs = {"tokens": P(ba, None)}
+    _, cache_ps = cache_specs(rt, shape)
+    p_ps = rt.store_pspecs()
+    logits_ps = P(ba, None, "model")
+    f = _smap(rt, step, (p_ps, bpspecs), (logits_ps, cache_ps),
+              check_vma=False)
+    jf = jax.jit(f, in_shardings=(param_shardings(rt),
+                                  jax.tree.map(lambda ps: _ns(rt, ps), bpspecs,
+                                               is_leaf=lambda x: isinstance(x, P))))
+    return jf, (rt.store_specs(), bspecs)
+
+
+def build_decode_step(rt: ChunkedRuntime, shape: InputShape):
+    step = rt.decode_step_fn()
+    di = decode_input_specs(rt, shape)
+    b = shape.global_batch
+    ba = batch_axes(rt, b)
+    p_ps = rt.store_pspecs()
+    cache_ps = di["caches"][1]
+    f = _smap(rt, step,
+              (p_ps, cache_ps, di["token"][1], P()),
+              (P(ba), cache_ps), check_vma=False)
+    in_sh = (param_shardings(rt),
+             jax.tree.map(lambda ps: _ns(rt, ps), cache_ps,
+                          is_leaf=lambda x: isinstance(x, P)),
+             _ns(rt, di["token"][1]), _ns(rt, P()))
+    jf = jax.jit(f, in_shardings=in_sh, donate_argnums=(1,))
+    args = (rt.store_specs(), di["caches"][0], di["token"][0], di["pos"][0])
+    return jf, args
+
+
+# ---------------------------------------------------------------------------
+# state init (for real runs — examples / integration tests)
+# ---------------------------------------------------------------------------
+
+
+def init_state(rt: ChunkedRuntime, key):
+    """Materialize param + optimizer-state chunk stores on the mesh."""
+    ctx = rt.ctx
+
+    def local_init(key):
+        # Sharded leaves draw per-model-rank randomness (their shards are
+        # disjoint pieces of one logical tensor); REPLICATED leaves must
+        # be bitwise identical across model ranks (router, MLA latent
+        # projections, replicated kv, ...) — init both ways, select by
+        # tp_axes.
+        params_rank = rt.model.init_params(
+            jax.random.fold_in(key, ctx.model_rank()))
+        params_shared = rt.model.init_params(key)
+
+        def select(axes, ranked, shared):
+            return jax.tree.map(
+                lambda ax, a, b: b if ax is None else a,
+                axes, ranked, shared, is_leaf=lambda x: x is None)
+
+        params = {"stem": select(rt.tp_axes["stem"], params_rank["stem"],
+                                 params_shared["stem"]),
+                  "groups": {g.name: select(rt.tp_axes["groups"][g.name],
+                                            params_rank["groups"][g.name],
+                                            params_shared["groups"][g.name])
+                             for g in rt.model.groups()}}
+        drank = (jax.lax.axis_index(ctx.data_axis)
+                 if ctx.data_axis and ctx.dp > 1 else 0)
+        pstores = {}
+        stem_store = zero.flatten_to_store(rt.layouts["stem"], params["stem"])
+        pstores["stem"] = jax.lax.dynamic_slice_in_dim(
+            stem_store, drank, 1, axis=1)[None]
+        for g in rt.model.groups():
+            lay = rt.layouts[g.name]
+            stacked = params["groups"][g.name]
+            store = jax.vmap(lambda t, _l=lay: zero.flatten_to_store(_l, t))(stacked)
+            pstores[g.name] = jax.lax.dynamic_slice_in_dim(
+                store, drank, 1, axis=2)[None]
+        osstores = {}
+        for name, p in pstores.items():
+            gax = 1 if name == "stem" else 2
+            dev_g, host_g = rt.os_split(name)
+            p32 = p.astype(jnp.float32)
+            zeros = jnp.zeros_like(p32)
+            # local stores keep the global rank ([1(tp), ..., G, 1, S]),
+            # so the G axis index matches the global one
+            sl = lambda x, a, b: jax.lax.slice_in_dim(x, a, b, axis=gax)
+            osstores[name] = {
+                "p32": {"dev": sl(p32, 0, dev_g), "host": sl(p32, dev_g, dev_g + host_g)},
+                "m": {"dev": sl(zeros, 0, dev_g), "host": sl(zeros, dev_g, dev_g + host_g)},
+                "v": {"dev": sl(zeros, 0, dev_g), "host": sl(zeros, dev_g, dev_g + host_g)},
+            }
+        return pstores, osstores
+
+    p_ps = rt.store_pspecs()
+    os_ps = rt.os_pspecs()
+    f = _smap(rt, local_init, (P(),), (p_ps, os_ps))
+    jf = jax.jit(f, out_shardings=(param_shardings(rt), os_shardings(rt)))
+    return jf(key)
+
+
+def init_caches(rt: ChunkedRuntime, shape: InputShape):
+    """Materialize zero-filled decode caches (for real decode runs)."""
+    specs, pspecs = cache_specs(rt, shape)
+    b, s = shape.global_batch, shape.seq_len
+    ba = batch_axes(rt, b) or ()
+    shard = 1
+    for a in ba:
+        shard *= rt.mesh.shape[a]
+    b_local = b // shard
+
+    def make():
+        out = {}
+        for g in rt.model.groups():
+            if g.name not in specs:
+                continue
+            one = g.init_cache(b_local, s)
+            L = g.length
+            out[g.name] = jax.tree.map(
+                lambda t: jnp.broadcast_to(t[None], (L,) + t.shape)[None], one)
+        return out
+
+    jf = jax.jit(_smap_nullary(rt, make, pspecs))
+    return jf()
+
+
+def _smap_nullary(rt, fn, out_specs):
+    def wrapper(dummy):
+        return fn()
+    return functools.partial(
+        jax.shard_map(wrapper, mesh=rt.mesh, in_specs=(P(),),
+                      out_specs=out_specs, check_vma=True),
+        jnp.zeros((), jnp.int32))
+
+
+def grow_caches(rt: ChunkedRuntime, caches, prefill_len: int, horizon: int,
+                decode_shape: InputShape):
+    """Pad prefill-emitted caches to a decode horizon.
+
+    Distributed caches use STRIDED slot ownership (slot s -> rank
+    s % seq_shards at local index s // seq_shards), so growing the horizon
+    is a pure local pad along the per-rank slot axis — no cross-rank
+    reshuffle.  State-style caches (SSM/mLSTM, no slot axis) pass through
+    untouched: their shapes are horizon-independent.
+    """
+    target, _ = cache_specs(rt, decode_shape)
+
+    def pad(cur, tgt):
+        if cur.shape == tgt.shape:
+            return cur
+        pads = []
+        for a, b in zip(cur.shape, tgt.shape):
+            if b < a:
+                raise ValueError(f"cannot shrink cache {cur.shape}->{tgt.shape}")
+            pads.append((0, b - a))
+        return jnp.pad(cur, pads)
+
+    return jax.tree.map(pad, caches, target,
+                        is_leaf=lambda x: hasattr(x, "shape") and not isinstance(
+                            x, jax.ShapeDtypeStruct))

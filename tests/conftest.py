@@ -1,0 +1,14 @@
+# Give the test process a small multi-device CPU topology for the
+# distribution tests (tp/dp parity, collectives in HLO).  NOTE: this is
+# deliberately 8, not the dry-run's 512 — the production-mesh dry-run
+# manages its own device count in repro/launch/dryrun.py.
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=8 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

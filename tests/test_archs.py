@@ -1,0 +1,117 @@
+"""Per-architecture smoke tests (assignment deliverable f).
+
+Every assigned arch instantiates its REDUCED config on the smoke mesh
+(dp=2 x tp=2), runs 3 chunked-ZeRO train steps (loss finite, decreasing,
+shapes right, no NaNs in the updated stores), and one prefill+decode step
+where the family supports decoding."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, model_class
+from repro.configs.base import INPUT_SHAPES, InputShape
+from repro.launch.mesh import make_smoke_mesh
+from repro.runtime import driver
+from repro.runtime.step import ChunkedRuntime, RuntimeOptions
+
+ASSIGNED = [a for a in ARCH_IDS if not a.startswith("gpt2-paper")]
+
+
+def _batch(cfg, b, s, key):
+    ks = jax.random.split(key, 3)
+    if cfg.arch_type == "audio":
+        f = min(cfg.encoder_frames, s)
+        return {"frames": jax.random.normal(ks[0], (b, f, cfg.frontend_dim)),
+                "tokens": jax.random.randint(ks[1], (b, s), 0, cfg.vocab_size),
+                "labels": jax.random.randint(ks[2], (b, s), 0, cfg.vocab_size),
+                "global_tokens": jnp.float32(b * s)}
+    if cfg.arch_type == "vlm":
+        st = s - cfg.num_patches
+        return {"patch_embeds": jax.random.normal(
+                    ks[0], (b, cfg.num_patches, cfg.vision_dim)),
+                "tokens": jax.random.randint(ks[1], (b, st), 0, cfg.vocab_size),
+                "labels": jax.random.randint(ks[2], (b, st), 0, cfg.vocab_size),
+                "global_tokens": jnp.float32(b * st)}
+    tok = jax.random.randint(ks[1], (b, s), 0, cfg.vocab_size)
+    return {"tokens": tok, "labels": jnp.roll(tok, -1, 1),
+            "global_tokens": jnp.float32(b * s)}
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return make_smoke_mesh(2, 2)
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_smoke_train_and_decode(arch, mesh):
+    cfg = get_config(arch, smoke=True)
+    assert cfg.num_layers <= 5 and cfg.d_model <= 512
+    if hasattr(cfg, "n_experts"):
+        assert cfg.n_experts <= 4
+    rt = ChunkedRuntime(model_class(cfg), cfg, mesh, RuntimeOptions())
+    ps, oss = driver.init_state(rt, jax.random.key(0))
+    shape = InputShape("smoke", 64, 4, "train")
+    step, _, _ = driver.build_train_step(rt, shape)
+    batch = _batch(cfg, 4, 64, jax.random.key(1))
+    losses = []
+    for i in range(3):
+        ps, oss, m = step(ps, oss, batch, jnp.int32(i))
+        losses.append(float(m["loss"]))
+    assert all(np.isfinite(l) for l in losses), losses
+    assert losses[-1] < losses[0], losses  # memorizes the repeated batch
+    # updated stores stay finite (no NaN blowups through ADAM)
+    for name, arr in ps.items():
+        assert bool(jnp.isfinite(arr.astype(jnp.float32)).all()), name
+
+    if rt.model.supports_decode:
+        sshape = InputShape("serve", 64, 4, "decode")
+        dec, _ = driver.build_decode_step(rt, sshape)
+        caches = driver.init_caches(rt, sshape)
+        tok = jnp.zeros((4, 1), jnp.int32)
+        nxt, caches2 = dec(ps, caches, tok, jnp.int32(5))
+        nxt = np.asarray(nxt)
+        assert nxt.shape == (4,)
+        assert ((0 <= nxt) & (nxt < cfg.vocab_size)).all()
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_full_config_metadata(arch):
+    """The FULL configs carry the exact assigned hyperparameters."""
+    cfg = get_config(arch)
+    expected = {
+        "deepseek-v2-lite-16b": dict(num_layers=27, d_model=2048, n_heads=16,
+                                     vocab_size=102400),
+        "qwen3-0.6b": dict(num_layers=28, d_model=1024, n_heads=16,
+                           n_kv_heads=8, d_ff=3072, vocab_size=151936),
+        "deepseek-7b": dict(num_layers=30, d_model=4096, n_heads=32,
+                            n_kv_heads=32, d_ff=11008, vocab_size=102400),
+        "zamba2-1.2b": dict(num_layers=38, d_model=2048, n_heads=32,
+                            vocab_size=32000),
+        "xlstm-1.3b": dict(num_layers=48, d_model=2048, n_heads=4,
+                           vocab_size=50304),
+        "nemotron-4-340b": dict(num_layers=96, d_model=18432, n_heads=96,
+                                n_kv_heads=8, d_ff=73728, vocab_size=256000),
+        "phi-3-vision-4.2b": dict(num_layers=32, d_model=3072, n_heads=32,
+                                  d_ff=8192, vocab_size=32064),
+        "qwen2.5-3b": dict(num_layers=36, d_model=2048, n_heads=16,
+                           n_kv_heads=2, d_ff=11008, vocab_size=151936),
+        "whisper-large-v3": dict(num_layers=32, d_model=1280, n_heads=20,
+                                 d_ff=5120, vocab_size=51866),
+        "mixtral-8x7b": dict(num_layers=32, d_model=4096, n_heads=32,
+                             n_kv_heads=8, vocab_size=32000),
+    }[arch]
+    for k, v in expected.items():
+        assert getattr(cfg, k) == v, (arch, k, getattr(cfg, k), v)
+    if arch == "mixtral-8x7b":
+        assert cfg.n_experts == 8 and cfg.top_k == 2
+        assert cfg.sliding_window == 4096
+    if arch == "deepseek-v2-lite-16b":
+        assert cfg.kv_lora_rank == 512 and cfg.top_k == 6
+        assert cfg.n_shared_experts == 2
+    if arch == "zamba2-1.2b":
+        assert cfg.ssm_state == 64
+    # long_500k only for sub-quadratic families
+    subq = {"zamba2-1.2b", "xlstm-1.3b", "mixtral-8x7b"}
+    assert ("long_500k" in cfg.supported_shapes()) == (arch in subq)

@@ -1,0 +1,101 @@
+"""Property tests for the chunk-tensor mapping schema (paper Section 6.1)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.chunk import (
+    ChunkMapError,
+    TensorSpec,
+    build_chunk_map,
+    search_chunk_size,
+)
+
+shapes = st.lists(
+    st.tuples(st.integers(1, 7), st.integers(1, 9)), min_size=1, max_size=40
+)
+
+
+@st.composite
+def map_inputs(draw):
+    shp = draw(shapes)
+    specs = [TensorSpec(f"t{i}", s) for i, s in enumerate(shp)]
+    largest = max(int(np.prod(s)) for s in shp)
+    chunk_size = draw(st.integers(largest, largest * 4))
+    nproc = draw(st.sampled_from([1, 2, 4, 8]))
+    return specs, chunk_size, nproc
+
+
+@given(map_inputs())
+@settings(max_examples=200, deadline=None)
+def test_packing_invariants(inp):
+    specs, chunk_size, nproc = inp
+    cmap = build_chunk_map(specs, chunk_size, nproc=nproc)
+    # 1. every tensor fits inside its chunk
+    for p in cmap.placements:
+        assert 0 <= p.offset
+        assert p.offset + p.numel <= chunk_size, "tensor straddles a chunk"
+        assert 0 <= p.chunk_id < cmap.num_chunks
+    # 2. no overlap within a chunk + append order preserved
+    by_chunk = {}
+    for p in cmap.placements:
+        by_chunk.setdefault(p.chunk_id, []).append(p)
+    for cid, ps in by_chunk.items():
+        ivs = sorted((p.offset, p.offset + p.numel) for p in ps)
+        for (a0, a1), (b0, b1) in zip(ivs, ivs[1:]):
+            assert a1 <= b0, "overlapping placements"
+    # 3. chunk ids are non-decreasing in model order (locality, N-ary model)
+    ids = [p.chunk_id for p in cmap.placements]
+    assert ids == sorted(ids)
+    # 4. padded to communication groups of nproc chunks
+    assert cmap.num_chunks % nproc == 0
+    assert cmap.num_chunks >= cmap.num_payload_chunks
+    assert cmap.num_chunks - cmap.num_payload_chunks < nproc
+    # 5. capacity accounting
+    assert cmap.total_numel == sum(int(np.prod(s.shape)) for s in specs)
+    assert 0 < cmap.utilization <= 1
+
+
+@given(map_inputs())
+@settings(max_examples=100, deadline=None)
+def test_comm_group_layout(inp):
+    specs, chunk_size, nproc = inp
+    cmap = build_chunk_map(specs, chunk_size, nproc=nproc)
+    for c in range(cmap.num_chunks):
+        g = cmap.comm_group(c)
+        assert c in cmap.comm_group_chunk_ids(g)
+        assert cmap.owner_rank(c) == c % nproc
+    for r in range(nproc):
+        local = cmap.local_chunk_ids(r)
+        assert len(local) == cmap.num_comm_groups
+
+
+def test_oversized_tensor_rejected():
+    with pytest.raises(ChunkMapError):
+        build_chunk_map([TensorSpec("big", (100,))], 64)
+
+
+def test_group_boundaries_align():
+    specs = [TensorSpec(f"t{i}", (10,)) for i in range(10)]
+    cmap = build_chunk_map(specs, 32, nproc=2, group_boundaries={"t4"})
+    p4 = cmap.placement("t4")
+    assert p4.offset == 0
+    assert p4.chunk_id % 2 == 0  # starts a fresh comm group
+
+
+@given(map_inputs())
+@settings(max_examples=50, deadline=None)
+def test_chunk_size_search(inp):
+    specs, _, nproc = inp
+    res = search_chunk_size(specs, nproc=nproc, align=8)
+    assert res.chunk_size % 8 == 0
+    cmap = build_chunk_map(specs, res.chunk_size, nproc=nproc)
+    assert abs(cmap.utilization - res.utilization) < 1e-9
+    # search picks the best utilization among its candidates
+    assert all(res.utilization >= u - 1e-9 for _, u in res.candidates)
+
+
+def test_search_respects_budget():
+    specs = [TensorSpec(f"t{i}", (100,)) for i in range(20)]
+    res = search_chunk_size(specs, align=4, memory_budget_elems=2600)
+    assert res.num_chunks * res.chunk_size <= 2600

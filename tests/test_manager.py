@@ -1,0 +1,110 @@
+"""Chunk manager: state machine, eviction policies, transfer accounting."""
+
+import numpy as np
+import pytest
+
+from repro.core.chunk import TensorSpec, build_chunk_map
+from repro.core.manager import ChunkManager, OutOfMemory
+from repro.core.state import (
+    ChunkState,
+    IllegalTransition,
+    TensorState,
+    check_transition,
+    derive_chunk_state,
+)
+
+
+def _mgr(n_tensors=8, chunk_size=16, device_chunks=2, policy="opt", **kw):
+    specs = [TensorSpec(f"t{i}", (chunk_size,)) for i in range(n_tensors)]
+    cmap = build_chunk_map(specs, chunk_size)  # one tensor per chunk
+    return ChunkManager(
+        cmap, device_capacity_bytes=device_chunks * chunk_size * 4,
+        policy=policy, **kw), cmap
+
+
+def test_state_transitions():
+    check_transition(TensorState.FREE, TensorState.HOLD)
+    check_transition(TensorState.HOLD, TensorState.COMPUTE)
+    check_transition(TensorState.COMPUTE, TensorState.HOLD_AFTER_FWD)
+    check_transition(TensorState.HOLD_AFTER_FWD, TensorState.COMPUTE)
+    with pytest.raises(IllegalTransition):
+        check_transition(TensorState.FREE, TensorState.HOLD_AFTER_BWD)
+    with pytest.raises(IllegalTransition):
+        check_transition(TensorState.HOLD, TensorState.HOLD_AFTER_FWD)
+
+
+def test_chunk_state_derivation():
+    T = TensorState
+    assert derive_chunk_state([T.FREE, T.FREE]) is ChunkState.FREE
+    assert derive_chunk_state([T.HOLD, T.FREE]) is ChunkState.HOLD
+    assert derive_chunk_state([T.HOLD, T.COMPUTE]) is ChunkState.COMPUTE
+    assert derive_chunk_state([T.HOLD_AFTER_FWD]) is ChunkState.HOLD
+
+
+def test_payload_survives_eviction_roundtrip():
+    mgr, cmap = _mgr(n_tensors=4, device_chunks=1, policy="lru")
+    v = mgr.access_tensor("t0")
+    v[...] = 7.0
+    mgr.release_tensor("t0", TensorState.HOLD_AFTER_FWD)
+    for i in range(1, 4):  # force t0 off-device
+        mgr.access_tensor(f"t{i}")
+        mgr.release_tensor(f"t{i}", TensorState.HOLD_AFTER_FWD)
+    assert mgr.location(0) == "host"
+    assert (mgr.access_tensor("t0") == 7.0).all()
+    assert mgr.stats.d2h_count >= 1 and mgr.stats.h2d_count >= 1
+
+
+def test_compute_chunks_are_not_evictable():
+    mgr, _ = _mgr(n_tensors=4, device_chunks=2)
+    mgr.access_tensor("t0")
+    mgr.access_tensor("t1")  # both chunks COMPUTE, device full
+    with pytest.raises(OutOfMemory):
+        mgr.access_tensor("t2")
+
+
+def test_pinned_chunks_are_not_evictable():
+    mgr, _ = _mgr(n_tensors=4, device_chunks=2)
+    mgr.access_tensor("t0")
+    mgr.release_tensor("t0", TensorState.HOLD_AFTER_FWD)
+    mgr.pin(0)
+    mgr.access_tensor("t1")
+    mgr.release_tensor("t1", TensorState.HOLD_AFTER_FWD)
+    mgr.access_tensor("t2")  # must evict t1, not pinned t0
+    assert mgr.location(0) == "device"
+    assert mgr.location(1) == "host"
+    mgr.unpin(0)
+
+
+def _run_schedule(policy, accesses, device_chunks, moments=None):
+    mgr, cmap = _mgr(n_tensors=8, device_chunks=device_chunks, policy=policy)
+    if moments:
+        mgr.register_moments(moments)
+    for m, t in enumerate(accesses):
+        mgr.set_moment(m)
+        mgr.access_tensor(f"t{t}")
+        mgr.release_tensor(f"t{t}", TensorState.HOLD_AFTER_FWD)
+    return mgr.stats.total_bytes
+
+
+def test_opt_beats_lru_with_future_knowledge():
+    """Belady's OPT with the traced schedule must not move more data than
+    LRU on a looping access pattern (the paper's Section 8.3 claim)."""
+    # cyclic scan of 4 chunks with 3 device slots: LRU always evicts the
+    # next-needed chunk (thrashes); OPT keeps 2 of the cycle resident
+    pattern = [0, 1, 2, 3] * 12
+    moments = {}
+    for m, t in enumerate(pattern):
+        moments.setdefault(t, []).append(m)
+    opt = _run_schedule("opt", pattern, device_chunks=3, moments=moments)
+    lru = _run_schedule("lru", pattern, device_chunks=3)
+    fifo = _run_schedule("fifo", pattern, device_chunks=3)
+    assert opt <= lru <= fifo * 2  # OPT is optimal; fifo sanity bound
+    assert opt < lru  # strict win on this adversarial-for-LRU pattern
+
+
+def test_free_chunks_release_payload():
+    mgr, _ = _mgr(n_tensors=2, device_chunks=2)
+    mgr.access_tensor("t0")
+    mgr.release_tensor("t0", TensorState.FREE)
+    assert mgr.location(0) is None
+    assert mgr.device_bytes_used() == 0 or mgr.location(1) == "device"

@@ -1,0 +1,49 @@
+"""§Perf switches must not change training math (loss parity vs baseline)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, model_class
+from repro.configs.base import InputShape
+from repro.launch.mesh import make_smoke_mesh
+from repro.runtime import driver
+from repro.runtime.step import ChunkedRuntime, RuntimeOptions
+
+
+def _loss(cfg, opt, steps=2):
+    mesh = make_smoke_mesh(2, 2)
+    rt = ChunkedRuntime(model_class(cfg), cfg, mesh, opt)
+    ps, oss = driver.init_state(rt, jax.random.key(0))
+    step, _, _ = driver.build_train_step(rt, InputShape("t", 64, 4, "train"))
+    tok = jax.random.randint(jax.random.key(1), (4, 64), 0, cfg.vocab_size)
+    batch = {"tokens": tok, "labels": jnp.roll(tok, -1, 1),
+             "global_tokens": jnp.float32(256)}
+    for i in range(steps):
+        ps, oss, m = step(ps, oss, batch, jnp.int32(i))
+    return float(m["loss"])
+
+
+@pytest.mark.parametrize("arch,opt,exact", [
+    ("qwen3-0.6b", RuntimeOptions(inner_remat=True), True),
+    ("qwen3-0.6b", RuntimeOptions(xent_block=16), True),
+    ("qwen3-0.6b", RuntimeOptions(accum_steps=2), True),
+    ("deepseek-v2-lite-16b", RuntimeOptions(moe_combine_first=True), True),
+    ("xlstm-1.3b", RuntimeOptions(inner_remat=True, accum_steps=2), True),
+    ("qwen3-0.6b", RuntimeOptions(remat="dots"), True),
+    ("qwen3-0.6b", RuntimeOptions(gather_policy="step"), True),
+])
+def test_option_loss_parity(arch, opt, exact):
+    cfg = get_config(arch, smoke=True).replace(
+        param_dtype="float32", compute_dtype="float32")
+    base = _loss(cfg, RuntimeOptions())
+    got = _loss(cfg, opt)
+    tol = 5e-5 if exact else 5e-2
+    assert abs(base - got) < tol * max(abs(base), 1.0), (base, got)
+
+
+def test_accum_must_divide_batch():
+    cfg = get_config("qwen3-0.6b", smoke=True)
+    with pytest.raises(Exception):
+        _loss(cfg, RuntimeOptions(accum_steps=3), steps=1)

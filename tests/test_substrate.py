@@ -1,0 +1,108 @@
+"""Data pipeline, checkpointing, roofline HLO parsing."""
+
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis.roofline import parse_collectives
+from repro.configs import get_config, model_class
+from repro.configs.base import InputShape
+from repro.data.pipeline import PackedLMLoader, SyntheticCorpus, make_batch_fn
+from repro.launch.mesh import make_smoke_mesh
+from repro.runtime import driver
+from repro.runtime.step import ChunkedRuntime, RuntimeOptions
+
+
+def test_corpus_is_deterministic_and_structured():
+    c1 = SyntheticCorpus(512, seed=3)
+    c2 = SyntheticCorpus(512, seed=3)
+    t1, t2 = c1.tokens(4096), c2.tokens(4096)
+    np.testing.assert_array_equal(t1, t2)
+    assert t1.min() >= 0 and t1.max() < 512
+    # motifs make the stream compressible: repeated 8-grams exist
+    views = np.lib.stride_tricks.sliding_window_view(t1, 8)
+    uniq = len({tuple(v) for v in views})
+    assert uniq <= len(views) - 10  # injected motifs repeat
+
+
+def test_loader_shards_disjoint_streams():
+    c = SyntheticCorpus(128, seed=0)
+    l0 = iter(PackedLMLoader(c, 2, 16, shard=(0, 2)))
+    l1 = iter(PackedLMLoader(c, 2, 16, shard=(1, 2)))
+    b0, b1 = next(l0), next(l1)
+    assert b0["tokens"].shape == (2, 16)
+    assert not np.array_equal(b0["tokens"], b1["tokens"])
+    np.testing.assert_array_equal(b0["tokens"][:, 1:], b0["labels"][:, :-1])
+
+
+@pytest.mark.parametrize("arch", ["phi-3-vision-4.2b", "whisper-large-v3"])
+def test_modality_batches(arch):
+    cfg = get_config(arch, smoke=True)
+    nxt = make_batch_fn(cfg, 2, 48)
+    b = nxt()
+    if cfg.arch_type == "vlm":
+        assert b["patch_embeds"].shape == (2, cfg.num_patches, cfg.vision_dim)
+        assert b["tokens"].shape == (2, 48 - cfg.num_patches)
+    else:
+        assert b["frames"].shape[0] == 2
+        assert b["tokens"].shape == (2, 48)
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    from repro.checkpoint import checkpoint as ckpt
+
+    cfg = get_config("qwen3-0.6b", smoke=True)
+    mesh = make_smoke_mesh(2, 2)
+    rt = ChunkedRuntime(model_class(cfg), cfg, mesh, RuntimeOptions())
+    ps, oss = driver.init_state(rt, jax.random.key(0))
+    shape = InputShape("t", 32, 4, "train")
+    step, _, _ = driver.build_train_step(rt, shape)
+    tok = jax.random.randint(jax.random.key(1), (4, 32), 0, cfg.vocab_size)
+    batch = {"tokens": tok, "labels": jnp.roll(tok, -1, 1),
+             "global_tokens": jnp.float32(128)}
+    ps, oss, m0 = step(ps, oss, batch, jnp.int32(0))
+    ckpt.save(rt, ps, oss, str(tmp_path / "ck"), step=1)
+
+    rt2 = ChunkedRuntime(model_class(cfg), cfg, mesh, RuntimeOptions())
+    ps2, oss2, step_no = ckpt.restore(rt2, str(tmp_path / "ck"))
+    assert step_no == 1
+    # resuming reproduces the same next step as continuing
+    step2, _, _ = driver.build_train_step(rt2, shape)
+    _, _, m_resume = step2(ps2, oss2, batch, jnp.int32(1))
+    _, _, m_cont = step(ps, oss, batch, jnp.int32(1))
+    assert abs(float(m_resume["loss"]) - float(m_cont["loss"])) < 1e-5
+
+
+def test_parse_collectives_synthetic():
+    hlo = """
+  %ag = bf16[4,1408]{1,0} all-gather(bf16[1,1408]{1,0} %x), replica_groups={{0,1,2,3}}, dimensions={0}
+  %ar = f32[128]{0} all-reduce(f32[128]{0} %y), replica_groups=[2,2]<=[4], to_apply=%add
+  %rs = f32[2,64]{1,0} reduce-scatter(f32[8,64]{1,0} %z), replica_groups={{0,1,2,3}}, dimensions={0}
+  %dot = f32[8,8]{1,0} dot(f32[8,8]{1,0} %a, f32[8,8]{1,0} %b)
+"""
+    st = parse_collectives(hlo)
+    assert set(st.by_kind) == {"all-gather", "all-reduce", "reduce-scatter"}
+    ag = st.by_kind["all-gather"]
+    assert ag[0] == 1 and ag[1] == 4 * 1408 * 2
+    assert abs(ag[2] - 0.75 * 4 * 1408 * 2) < 1e-6
+    ar = st.by_kind["all-reduce"]
+    assert abs(ar[2] - 2 * 0.5 * 128 * 4) < 1e-6
+    rs = st.by_kind["reduce-scatter"]
+    assert abs(rs[2] - 0.75 * (2 * 64 * 4) * 4) < 1e-6
+
+
+def test_train_hlo_has_chunked_collectives():
+    """The compiled train step carries the paper's communication pattern:
+    all-gather (chunk fetch) + reduce-scatter (grad release)."""
+    cfg = get_config("qwen3-0.6b", smoke=True)
+    mesh = make_smoke_mesh(2, 2)
+    rt = ChunkedRuntime(model_class(cfg), cfg, mesh, RuntimeOptions())
+    shape = InputShape("t", 32, 4, "train")
+    jf, args, _ = driver.build_train_step(rt, shape)
+    txt = jf.lower(*args).compile().as_text()
+    st = parse_collectives(txt)
+    assert "all-gather" in st.by_kind
+    assert "reduce-scatter" in st.by_kind
