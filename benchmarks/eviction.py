@@ -1,21 +1,29 @@
 """Paper Section 8.3 — eviction strategy ablation: CPU<->device chunk
-traffic for OPT (tracer-guided Belady) vs LRU vs FIFO across budgets."""
+traffic for OPT (tracer-guided Belady) vs LRU vs FIFO across budgets over
+the unified (all-streams) heterogeneous pool, plus the schedule-driven
+prefetcher's overlap split: post-warm-up staging must strictly reduce
+critical-path H2D bytes vs demand paging at EQUAL total transfer volume.
+Emits a JSON report with prefetch hit-rate and hidden vs critical bytes."""
+
+import json
 
 from benchmarks.common import csv, lm_batch
 from repro.configs import get_config, model_class
 from repro.core.engine import PatrickStarEngine
 
 
-def run(policy, budget):
+def run(policy, budget, prefetch=False):
     cfg = get_config("gpt2-paper-1b", smoke=True).replace(
         num_layers=4, param_dtype="float32", compute_dtype="float32")
     eng = PatrickStarEngine(model_class(cfg), cfg,
                             device_memory_bytes=budget, policy=policy,
-                            device_aware_placement=False)
+                            device_aware_placement=False, prefetch=prefetch)
     batch = lm_batch(cfg, 4, 64)
     eng.step(batch)
     m = eng.step(batch)
-    return m.moved_bytes
+    eng.pool.check_invariants()
+    assert eng.pool.peak_device_bytes <= budget
+    return m
 
 
 def adversarial_microbench():
@@ -46,15 +54,43 @@ def adversarial_microbench():
 
 
 def main():
+    report = {}
     for budget in (2_500_000, 4_000_000, 6_000_000):
-        vals = {p: run(p, budget) for p in ("opt", "lru", "fifo")}
+        demand = run("opt", budget, prefetch=False)
+        vals = {"opt": demand.moved_bytes}
+        vals.update({p: run(p, budget).moved_bytes for p in ("lru", "fifo")})
         csv(f"eviction/budget{budget//1_000_000}MB", 0.0,
             f"opt={vals['opt']};lru={vals['lru']};fifo={vals['fifo']}")
         assert vals["opt"] <= vals["lru"], vals
+
+        # schedule-driven prefetch vs demand paging, OPT policy
+        staged = run("opt", budget, prefetch=True)
+        total = lambda m: m.h2d_bytes + m.adam_h2d_bytes
+        assert total(staged) == total(demand), (total(staged), total(demand))
+        assert staged.critical_h2d_bytes < demand.critical_h2d_bytes, (
+            staged.critical_h2d_bytes, demand.critical_h2d_bytes)
+        assert (staged.hidden_h2d_bytes + staged.critical_h2d_bytes
+                == total(staged))
+        report[f"budget_{budget}"] = {
+            "policy_moved_bytes": vals,
+            "total_h2d_bytes": total(staged),
+            "demand_critical_h2d_bytes": demand.critical_h2d_bytes,
+            "prefetch_critical_h2d_bytes": staged.critical_h2d_bytes,
+            "prefetch_hidden_h2d_bytes": staged.hidden_h2d_bytes,
+            "prefetch_hit_rate": round(staged.prefetch_hit_rate, 4),
+        }
+        csv(f"eviction/prefetch{budget//1_000_000}MB", 0.0,
+            f"critical={staged.critical_h2d_bytes};"
+            f"hidden={staged.hidden_h2d_bytes};"
+            f"demand_critical={demand.critical_h2d_bytes};"
+            f"hit_rate={staged.prefetch_hit_rate:.2f}")
+
     mb = adversarial_microbench()
     csv("eviction/cyclic_microbench", 0.0,
         f"opt={mb['opt']};lru={mb['lru']};fifo={mb['fifo']}")
     assert mb["opt"] < mb["lru"]
+    report["cyclic_microbench"] = mb
+    print(json.dumps(report, indent=2))
 
 
 if __name__ == "__main__":

@@ -85,7 +85,21 @@ class ChunkTensorMap:
         return self._by_name_cache  # type: ignore[attr-defined]
 
     def chunk_tensors(self, chunk_id: int) -> list[TensorPlacement]:
-        return [p for p in self.placements if p.chunk_id == chunk_id]
+        return list(self._by_chunk().get(chunk_id, ()))
+
+    def _by_chunk(self) -> dict[int, tuple[TensorPlacement, ...]]:
+        """chunk_id -> placements index, built once (chunk_tensors is called
+        per eviction candidate; a linear scan there made eviction O(n^2))."""
+        if not hasattr(self, "_by_chunk_cache"):
+            idx: dict[int, list[TensorPlacement]] = {}
+            for p in self.placements:
+                idx.setdefault(p.chunk_id, []).append(p)
+            object.__setattr__(
+                self,
+                "_by_chunk_cache",
+                {c: tuple(ps) for c, ps in idx.items()},
+            )
+        return self._by_chunk_cache  # type: ignore[attr-defined]
 
     # ------------------------------------------------------------ statistics
     @property

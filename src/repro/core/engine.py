@@ -2,12 +2,20 @@
 
 This is the faithful single-device system of Sections 6 and 8: chunked
 model data managed over a bounded two-tier (device/host) memory space by
-the :class:`~repro.core.manager.ChunkManager`, with
+one shared :class:`~repro.core.memory.HeteroMemory` pool (param fp16,
+param fp32, momentum and variance are per-stream
+:class:`~repro.core.manager.ChunkManager` views of it, so all four
+streams compete for ONE device budget and eviction is cross-stream),
+with
 
   * the tensor state machine driving chunk movement (Table 1, Fig. 7),
   * grad-fp16 chunks REUSING param-fp16 chunk payloads (Fig. 6),
   * a warm-up iteration feeding the RuntimeMemoryTracer (Section 8.1),
-  * OPT/Belady chunk eviction from the traced moment schedule (8.3),
+  * OPT/Belady chunk eviction from per-stream traced moment schedules
+    (8.3),
+  * a schedule-driven prefetcher staging the next-k chunk references
+    ahead of their operator after warm-up (simulated-async; H2D bytes are
+    classified hidden vs critical-path in :class:`EngineMetrics`),
   * device-aware OS placement in GPU margin space + embedding kept on
     host (Section 8.2),
   * block-granular activation checkpointing (inputs saved, fwd recomputed
@@ -35,6 +43,7 @@ import numpy as np
 from repro.configs.base import dtype_of
 from repro.core.chunk import TensorSpec, build_chunk_map, search_chunk_size
 from repro.core.manager import ChunkManager
+from repro.core.memory import HeteroMemory, SchedulePrefetcher
 from repro.core.placement import PlacementPlan, plan_placement
 from repro.core.state import TensorState
 from repro.core.tracer import RuntimeMemoryTracer
@@ -57,6 +66,15 @@ class EngineMetrics:
     d2h_bytes: int = 0
     adam_h2d_bytes: int = 0
     adam_d2h_bytes: int = 0
+    # overlap accounting (schedule-driven prefetch, post-warm-up):
+    # every H2D byte this step is either hidden (staged ahead of its use,
+    # overlappable with compute) or critical-path (a demand miss).
+    hidden_h2d_bytes: int = 0
+    critical_h2d_bytes: int = 0
+    prefetch_hits: int = 0
+    demand_misses: int = 0
+    # high-water mark of the unified pool's device tier (cumulative)
+    peak_device_bytes: int = 0
 
     @property
     def total_s(self) -> float:
@@ -65,6 +83,11 @@ class EngineMetrics:
     @property
     def moved_bytes(self) -> int:
         return self.h2d_bytes + self.d2h_bytes + self.adam_h2d_bytes + self.adam_d2h_bytes
+
+    @property
+    def prefetch_hit_rate(self) -> float:
+        total = self.prefetch_hits + self.demand_misses
+        return self.prefetch_hits / total if total else 0.0
 
 
 class PatrickStarEngine:
@@ -84,6 +107,8 @@ class PatrickStarEngine:
         seed: int = 0,
         device_aware_placement: bool = True,
         embedding_on_host: bool = True,
+        prefetch: bool = True,
+        prefetch_lookahead: int = 6,
     ) -> None:
         self.cfg = cfg
         self.ctx = AxisCtx()  # single device, no mesh axes
@@ -121,29 +146,40 @@ class PatrickStarEngine:
             chunk_size = res.chunk_size
         self.cmap = build_chunk_map(specs, chunk_size, nproc=1)
 
-        # ---- two-tier managers: params(fp16-stream, grads reuse) + OS ----
-        self.params_mgr = ChunkManager(
-            self.cmap, dtype=np.float32, policy=policy, name="param",
+        # ---- ONE heterogeneous memory space shared by all four streams ----
+        # (Sections 6.2, 8): param fp16 (grads reuse its payloads), param
+        # fp32, momentum and variance are views of a single pool with a
+        # single device budget, so eviction sees cross-stream pressure.
+        self.pool = HeteroMemory(
             device_capacity_bytes=device_memory_bytes,
-            host_capacity_bytes=host_memory_bytes)
+            host_capacity_bytes=host_memory_bytes, policy=policy)
+        self.params_mgr = ChunkManager(
+            self.cmap, dtype=np.float32, name="param", pool=self.pool)
         self.os_mgrs = {
-            name: ChunkManager(self.cmap, dtype=np.float32, policy=policy,
-                               name=name, device_capacity_bytes=device_memory_bytes,
-                               host_capacity_bytes=host_memory_bytes)
+            name: ChunkManager(self.cmap, dtype=np.float32, name=name,
+                               pool=self.pool)
             for name in ("p32", "m", "v")
         }
         # tracer over the simulated device
         self.tracer = RuntimeMemoryTracer(
             device_memory_bytes, warmup_chunk_fraction=warmup_chunk_fraction)
         # the chunkable budget must never drop below one operator's working
-        # set (its chunks are all COMPUTE-pinned and cannot be evicted)
+        # set: the largest layer's param chunks during FWD/BWD, and the four
+        # per-stream chunks pinned together during one ADAM chunk update
+        # (all are COMPUTE-pinned or refcount-pinned, hence unevictable).
         max_layer_chunks = max(
             len({self.cmap.placement(n).chunk_id for n in layer})
             for layers in self._group_tensor_names.values() for layer in layers)
-        floor = (max_layer_chunks + 1) * self.params_mgr.chunk_bytes
-        for mgr in [self.params_mgr, *self.os_mgrs.values()]:
-            mgr.set_chunkable_memory_fn(
-                lambda: max(self.tracer.chunkable_memory(), floor))
+        floor = max(max_layer_chunks + 1, 5) * self.params_mgr.chunk_bytes
+        self.pool.set_chunkable_memory_fn(
+            lambda: max(self.tracer.chunkable_memory(), floor))
+        # schedule-driven prefetcher (installed after the warm-up
+        # iteration).  OPT only: staging consumes the same future-reference
+        # schedule, and running it under lru/fifo would contaminate those
+        # baselines with future knowledge.
+        self.prefetcher = SchedulePrefetcher(
+            self.pool, lookahead=prefetch_lookahead) \
+            if prefetch and policy == "opt" else None
 
         # initialize payloads: param fp16 stream + param fp32 copies (host)
         for name, val in named:
@@ -165,8 +201,11 @@ class PatrickStarEngine:
     # ------------------------------------------------------------------ utils
     def _moment(self, op: str, phase: str) -> None:
         m = self.tracer.record_moment(op, phase, self._live_activation_bytes)
-        for mgr in [self.params_mgr, *self.os_mgrs.values()]:
-            mgr.set_moment(m)
+        self.pool.set_moment(m)
+        # schedule-driven prefetch: stage the next-k chunk references
+        # before the operator at this moment runs (their H2D overlaps it)
+        if self.prefetcher is not None and not self.tracer.warmup:
+            self.prefetcher.advance(m)
 
     def _access_layer(self, gname: str, layer: int, mgr: ChunkManager,
                       dev: str, record: bool = True):
@@ -174,7 +213,8 @@ class PatrickStarEngine:
         arrs = []
         for n in names:
             if record and self.tracer.warmup:
-                self.tracer.record_chunk_use(self.cmap.placement(n).chunk_id)
+                self.tracer.record_chunk_use(
+                    self.cmap.placement(n).chunk_id, stream=mgr.name)
             # COPY at the numpy->jax boundary: jnp.asarray on CPU may be
             # zero-copy, and grad-fp16 reuse later overwrites this chunk
             # payload in place (Fig. 6) — an alias would corrupt captured
@@ -191,8 +231,8 @@ class PatrickStarEngine:
     def step(self, batch: dict) -> EngineMetrics:
         met = EngineMetrics()
         mgr = self.params_mgr
-        base = mgr.stats.total_bytes
-        h2d0, d2h0 = mgr.stats.h2d_bytes, mgr.stats.d2h_bytes
+        h2d0, d2h0 = self.pool.stats.h2d_bytes, self.pool.stats.d2h_bytes
+        pf0 = dataclasses.replace(self.pool.prefetch)
         self.tracer.begin_iteration()
         cdtype = dtype_of(self.cfg.compute_dtype)
 
@@ -241,27 +281,47 @@ class PatrickStarEngine:
             self._live_activation_bytes -= max(x_in.size * x_in.dtype.itemsize, 0)
             self._moment(f"{g}.{i}.end", "BWD")
         met.bwd_s = time.perf_counter() - t0
-        met.h2d_bytes = mgr.stats.h2d_bytes - h2d0
-        met.d2h_bytes = mgr.stats.d2h_bytes - d2h0
+        met.h2d_bytes = self.pool.stats.h2d_bytes - h2d0
+        met.d2h_bytes = self.pool.stats.d2h_bytes - d2h0
 
         # ------------------------------------------------------------- ADAM
         t0 = time.perf_counter()
-        a_h2d0 = sum(m.stats.h2d_bytes for m in self.os_mgrs.values())
-        a_d2h0 = sum(m.stats.d2h_bytes for m in self.os_mgrs.values())
+        a_h2d0, a_d2h0 = self.pool.stats.h2d_bytes, self.pool.stats.d2h_bytes
         self._adam(stem_grad)
-        met.adam_h2d_bytes = sum(m.stats.h2d_bytes for m in self.os_mgrs.values()) - a_h2d0
-        met.adam_d2h_bytes = sum(m.stats.d2h_bytes for m in self.os_mgrs.values()) - a_d2h0
+        met.adam_h2d_bytes = self.pool.stats.h2d_bytes - a_h2d0
+        met.adam_d2h_bytes = self.pool.stats.d2h_bytes - a_d2h0
         met.adam_s = time.perf_counter() - t0
+
+        # ------------------------------------- overlap / prefetch accounting
+        pf = self.pool.prefetch
+        met.hidden_h2d_bytes = pf.hidden_h2d_bytes - pf0.hidden_h2d_bytes
+        met.critical_h2d_bytes = pf.critical_h2d_bytes - pf0.critical_h2d_bytes
+        met.prefetch_hits = pf.hits - pf0.hits
+        met.demand_misses = pf.demand_misses - pf0.demand_misses
+        met.peak_device_bytes = self.pool.peak_device_bytes
 
         # ------------------------------------------------- end of iteration
         self._live_activation_bytes = 0
         if self.tracer.warmup:
             self.tracer.end_warmup()
-            sched = self.tracer.schedule()
-            self.params_mgr.register_moments(sched)
-            for m in self.os_mgrs.values():
-                m.register_moments(sched)
             self._plan_placement()
+            # per-stream OPT schedules over *device* references: a param
+            # chunk's next device use may be in FWD/BWD (or ADAM when its
+            # group updates in GPU margin space), an OS chunk's only at a
+            # device-placed ADAM moment.  The warm-up ran all ADAM on the
+            # host, so promote the host-side refs of groups the plan just
+            # moved onto the device.
+            promote: dict[str, set[int]] = {}
+            if self.placement is not None and self.placement.os_device_groups:
+                dev_chunks = self.placement.os_device_chunk_ids(self.cmap)
+                promote = {s: dev_chunks for s in ("param", "p32", "m", "v")}
+            by_stream = self.tracer.schedule_by_stream(promote_chunks=promote)
+            self.params_mgr.register_moments(by_stream.get("param", {}))
+            for name, m in self.os_mgrs.items():
+                m.register_moments(by_stream.get(name, {}))
+            if self.prefetcher is not None:
+                self.prefetcher.install(
+                    self.tracer.reference_sequence(by_stream))
         self.step_count += 1
         return met
 
@@ -281,21 +341,37 @@ class PatrickStarEngine:
                 if not tensors:
                     continue
                 self._moment(f"adam.{chunk_id}", "ADAM")
+                if self.tracer.warmup:
+                    for s in ("param", "p32", "m", "v"):
+                        self.tracer.record_chunk_use(chunk_id, stream=s,
+                                                     dev=comp_dev)
                 # grad chunk (reusing param chunk payload) converted fp32
-                # on the fly on the computing device
-                grad_payload = self.params_mgr.prepare_payload(chunk_id, comp_dev)
-                p32 = self.os_mgrs["p32"].prepare_payload(chunk_id, comp_dev)
-                m = self.os_mgrs["m"].prepare_payload(chunk_id, comp_dev)
-                v = self.os_mgrs["v"].prepare_payload(chunk_id, comp_dev)
-                g = grad_payload
-                m[...] = b1 * m + (1 - b1) * g
-                v[...] = b2 * v + (1 - b2) * g * g
-                upd = (m / bc1) / (np.sqrt(v / bc2) + self.eps)
-                p32[...] = p32 - self.lr * upd
-                # updated param fp32 copied back into the param chunk
-                grad_payload[...] = p32
+                # on the fly on the computing device; all four streams'
+                # chunks must co-reside for the update, so pin them — the
+                # shared pool would otherwise be free to evict the earlier
+                # ones while admitting the later ones.
+                quad = [self.params_mgr, self.os_mgrs["p32"],
+                        self.os_mgrs["m"], self.os_mgrs["v"]]
+                pinned = []
+                try:
+                    payloads = []
+                    for smgr in quad:
+                        payloads.append(smgr.prepare_payload(chunk_id, comp_dev))
+                        smgr.pin(chunk_id)
+                        pinned.append(smgr)
+                    grad_payload, p32, m, v = payloads
+                    g = grad_payload
+                    m[...] = b1 * m + (1 - b1) * g
+                    v[...] = b2 * v + (1 - b2) * g * g
+                    upd = (m / bc1) / (np.sqrt(v / bc2) + self.eps)
+                    p32[...] = p32 - self.lr * upd
+                    # updated param fp32 copied back into the param chunk
+                    grad_payload[...] = p32
+                finally:
+                    for smgr in pinned:
+                        smgr.unpin(chunk_id)
                 for tn in tensors:
-                    self.params_mgr._tensor_state[tn.name] = TensorState.HOLD
+                    self.params_mgr.force_tensor_state(tn.name, TensorState.HOLD)
         # stem (embedding + norms) updates in place on its own device
         self._stem_np = jax.tree.map(
             lambda p, g: np.asarray(p - self.lr * np.asarray(g, np.float32)),

@@ -1,10 +1,15 @@
-"""Runtime chunk manager: heterogeneous placement, pinning, eviction.
+"""Runtime chunk manager: a per-stream view of the unified memory space.
 
-This is the paper's runtime module (Sections 6.2, 8.3).  It owns the
-payloads of all chunks of one *stream* group (param fp16 / param fp32 /
-momentum / variance share a layout but have independent payloads) and
-moves them between a bounded **device** tier (GPU in the paper, TPU HBM on
-the target) and a **host** tier (CPU DRAM).
+This is the paper's runtime module (Sections 6.2, 8.3).  One
+:class:`ChunkManager` owns the payloads and tensor states of one *stream*
+(param fp16 / param fp32 / momentum / variance share a layout but have
+independent payloads).  All capacity budgeting, transfer accounting and
+eviction live in the shared :class:`~repro.core.memory.HeteroMemory`
+pool the stream registers with — so a device-tier miss in one stream can
+evict a chunk of *any* stream, the paper's single heterogeneous
+CPU+GPU memory space.  Constructing a manager without an explicit
+``pool`` creates a private single-stream pool, which preserves the
+historical standalone behaviour (and API) exactly.
 
 On this CPU-only container the two tiers are simulated faithfully:
 payloads are numpy buffers tagged with their tier, tier capacities are
@@ -12,57 +17,43 @@ enforced in bytes, and every cross-tier move is accounted (bytes + count)
 — so eviction-policy quality is measurable exactly the way the paper
 measures it (CPU<->GPU data-movement volume).
 
-Eviction (Section 8.3): when the device tier cannot host an incoming
-chunk, evict a HOLD-like, unpinned chunk.  Policies:
-
-  "opt"   Belady's OPT using the *future* reference moments collected by
-          the runtime memory tracer in the warm-up iteration — evict the
-          chunk whose next use is farthest in the future (the paper's
-          choice).
-  "lru"   least recently used (classic; no future knowledge).
-  "fifo"  first-in-first-out.
-
-Chunks in COMPUTE state or explicitly pinned (collective communication in
-flight, Algorithm 1 lines 12/18) are never evicted.
+Per-stream usage counters are incremental (kept in lock-step with the
+pool's global counters), so ``device_bytes_used()`` is O(1) and the
+eviction loop never rescans the chunk list to learn the tier occupancy.
+Chunk states are likewise tracked incrementally per chunk, making
+``chunk_state`` O(1) instead of a scan over the chunk's tensors.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Literal
+from collections import Counter
+from typing import Callable
 
 import numpy as np
 
 from repro.core.chunk import ChunkTensorMap
+from repro.core.memory import (
+    Device,
+    EvictionPolicy,
+    HeteroMemory,
+    OutOfMemory,
+    TransferStats,
+)
 from repro.core.state import (
     ChunkState,
     TensorState,
     check_transition,
-    derive_chunk_state,
 )
 
-Device = Literal["device", "host"]
-EvictionPolicy = Literal["opt", "lru", "fifo"]
-
-
-class OutOfMemory(RuntimeError):
-    """Neither tier can host the chunk (the DeepSpeed failure mode, Fig. 10)."""
-
-
-@dataclasses.dataclass
-class TransferStats:
-    h2d_bytes: int = 0
-    d2h_bytes: int = 0
-    h2d_count: int = 0
-    d2h_count: int = 0
-
-    @property
-    def total_bytes(self) -> int:
-        return self.h2d_bytes + self.d2h_bytes
-
-    def reset(self) -> None:
-        self.h2d_bytes = self.d2h_bytes = 0
-        self.h2d_count = self.d2h_count = 0
+__all__ = [
+    "ChunkManager",
+    "Device",
+    "EvictionPolicy",
+    "HeteroMemory",
+    "OutOfMemory",
+    "TransferStats",
+]
 
 
 @dataclasses.dataclass
@@ -76,7 +67,7 @@ class _ChunkRecord:
 
 
 class ChunkManager:
-    """Manages payloads of one chunk stream over a two-tier memory space."""
+    """Manages one chunk stream inside a shared two-tier memory space."""
 
     def __init__(
         self,
@@ -85,17 +76,30 @@ class ChunkManager:
         dtype: np.dtype = np.dtype(np.float32),
         device_capacity_bytes: int | None = None,
         host_capacity_bytes: int | None = None,
-        policy: EvictionPolicy = "opt",
+        policy: EvictionPolicy | None = None,
         name: str = "chunks",
+        pool: HeteroMemory | None = None,
     ) -> None:
         self.cmap = cmap
         self.dtype = np.dtype(dtype)
         self.chunk_bytes = cmap.chunk_size * self.dtype.itemsize
-        self.device_capacity = device_capacity_bytes
-        self.host_capacity = host_capacity_bytes
-        self.policy: EvictionPolicy = policy
         self.name = name
-        self.stats = TransferStats()
+        if pool is None:
+            pool = HeteroMemory(
+                device_capacity_bytes=device_capacity_bytes,
+                host_capacity_bytes=host_capacity_bytes,
+                policy=policy if policy is not None else "opt",
+            )
+        elif (device_capacity_bytes is not None or host_capacity_bytes is not None
+              or policy is not None):
+            raise ValueError(
+                "capacity and eviction policy are owned by the shared pool; "
+                "do not pass device/host_capacity_bytes or policy together "
+                "with pool="
+            )
+        self.pool = pool
+        pool.register_stream(self)
+        self.stats = TransferStats()  # this stream's share of pool.stats
 
         self._records = [
             _ChunkRecord(chunk_id=c, payload=None, location=None)
@@ -104,31 +108,32 @@ class ChunkManager:
         self._tensor_state: dict[str, TensorState] = {
             p.name: TensorState.FREE for p in cmap.placements
         }
-        # clock advances on every access; used by LRU/FIFO and as the
-        # "moment" cursor for OPT when no tracer moments are registered.
-        self._clock = 0
-        # OPT future-reference schedule: chunk_id -> sorted list of moments
-        # at which this chunk is used (from the memory tracer's warm-up).
-        self._moments: dict[int, list[int]] = {}
-        self._current_moment = 0
-        # optional callback letting the tracer shrink the device tier by
-        # the live non-model footprint at the current moment.
-        self._chunkable_device_bytes: Callable[[], int | None] | None = None
+        # incremental per-chunk state tallies -> O(1) chunk_state
+        self._chunk_compute: Counter[int] = Counter()
+        self._chunk_hold: Counter[int] = Counter()
+        # incremental per-stream tier usage (pool keeps the global sums)
+        self._device_used = 0
+        self._host_used = 0
+
+    # ------------------------------------------------- pool-compat properties
+    @property
+    def device_capacity(self) -> int | None:
+        return self.pool.device_capacity
+
+    @property
+    def host_capacity(self) -> int | None:
+        return self.pool.host_capacity
+
+    @property
+    def policy(self) -> EvictionPolicy:
+        return self.pool.policy
 
     # ------------------------------------------------------------ accounting
     def device_bytes_used(self) -> int:
-        return sum(
-            self.chunk_bytes
-            for r in self._records
-            if r.payload is not None and r.location == "device"
-        )
+        return self._device_used
 
     def host_bytes_used(self) -> int:
-        return sum(
-            self.chunk_bytes
-            for r in self._records
-            if r.payload is not None and r.location == "host"
-        )
+        return self._host_used
 
     def location(self, chunk_id: int) -> Device | None:
         return self._records[chunk_id].location
@@ -137,38 +142,49 @@ class ChunkManager:
         return self._tensor_state[name]
 
     def chunk_state(self, chunk_id: int) -> ChunkState:
-        names = [p.name for p in self.cmap.chunk_tensors(chunk_id)]
-        return derive_chunk_state(self._tensor_state[n] for n in names)
+        if self._chunk_compute[chunk_id] > 0:
+            return ChunkState.COMPUTE
+        if self._chunk_hold[chunk_id] > 0:
+            return ChunkState.HOLD
+        return ChunkState.FREE
+
+    def _set_state(self, name: str, new: TensorState) -> None:
+        """Single mutation point keeping the per-chunk tallies in sync."""
+        old = self._tensor_state[name]
+        if old is new:
+            return
+        chunk_id = self.cmap.placement(name).chunk_id
+        if old is TensorState.COMPUTE:
+            self._chunk_compute[chunk_id] -= 1
+        elif old is not TensorState.FREE:
+            self._chunk_hold[chunk_id] -= 1
+        if new is TensorState.COMPUTE:
+            self._chunk_compute[chunk_id] += 1
+        elif new is not TensorState.FREE:
+            self._chunk_hold[chunk_id] += 1
+        self._tensor_state[name] = new
 
     # -------------------------------------------------------------- schedule
     def register_moments(self, moments: dict[int, list[int]]) -> None:
-        """Install the warm-up reference schedule used by OPT eviction."""
-        self._moments = {c: sorted(ms) for c, ms in moments.items()}
+        """Install this stream's warm-up reference schedule (OPT eviction)."""
+        self.pool.register_moments(self.name, moments)
 
     def set_moment(self, moment: int) -> None:
-        self._current_moment = moment
+        self.pool.set_moment(moment)
 
     def set_chunkable_memory_fn(self, fn: Callable[[], int | None]) -> None:
         """Tracer hook: returns the device bytes currently usable for chunks."""
-        self._chunkable_device_bytes = fn
-
-    def _device_budget(self) -> int | None:
-        budget = self.device_capacity
-        if self._chunkable_device_bytes is not None:
-            dyn = self._chunkable_device_bytes()
-            if dyn is not None:
-                budget = dyn if budget is None else min(budget, dyn)
-        return budget
+        self.pool.set_chunkable_memory_fn(fn)
 
     # ------------------------------------------------------------- tensor API
     def access_tensor(self, name: str, comp_dev: Device = "device") -> np.ndarray:
         """Algorithm 1 (single-process part): bring the tensor's chunk to
         ``comp_dev``, mark the tensor COMPUTE, return a view of its payload."""
         p = self.cmap.placement(name)
-        rec = self._ensure_on(p.chunk_id, comp_dev)
+        rec = self.pool.ensure_on(self, p.chunk_id, comp_dev)
         old = self._tensor_state[name]
         check_transition(old, TensorState.COMPUTE)
-        self._tensor_state[name] = TensorState.COMPUTE
+        self._set_state(name, TensorState.COMPUTE)
         view = rec.payload[p.offset : p.offset + p.numel]
         if old is TensorState.FREE:
             view[...] = 0  # Algorithm 1 line 31
@@ -178,16 +194,20 @@ class ChunkManager:
         """Algorithm 2 (single-process part)."""
         old = self._tensor_state[name]
         check_transition(old, target_state)
-        self._tensor_state[name] = target_state
+        self._set_state(name, target_state)
         if target_state is TensorState.FREE:
             self._maybe_release_chunk(self.cmap.placement(name).chunk_id)
+
+    def force_tensor_state(self, name: str, target_state: TensorState) -> None:
+        """Unchecked state overwrite (grad->param payload swap in ADAM)."""
+        self._set_state(name, target_state)
 
     def reset_states(self, target: TensorState = TensorState.HOLD) -> None:
         """Reset all non-FREE tensors (e.g. to HOLD before BWD, Section 6.2)."""
         for name, s in self._tensor_state.items():
             if s is not TensorState.FREE:
                 check_transition(s, target)
-                self._tensor_state[name] = target
+                self._set_state(name, target)
 
     def tensor_view(self, name: str) -> np.ndarray:
         """Read-only style access without a state change (debug/checkpoint)."""
@@ -209,124 +229,18 @@ class ChunkManager:
 
     def prepare_payload(self, chunk_id: int, comp_dev: Device = "device") -> np.ndarray:
         """Materialize (if FREE) and move a chunk to ``comp_dev``."""
-        return self._ensure_on(chunk_id, comp_dev).payload
+        return self.pool.ensure_on(self, chunk_id, comp_dev).payload
 
     def ensure_on(self, chunk_id: int, dev: Device) -> np.ndarray:
-        return self._ensure_on(chunk_id, dev).payload
+        return self.pool.ensure_on(self, chunk_id, dev).payload
 
     def free_chunk(self, chunk_id: int) -> None:
         """Drop a chunk's payload, forcing all its tensors to FREE."""
         for p in self.cmap.chunk_tensors(chunk_id):
-            self._tensor_state[p.name] = TensorState.FREE
-        rec = self._records[chunk_id]
-        rec.payload = None
-        rec.location = None
+            self._set_state(p.name, TensorState.FREE)
+        self.pool.release_payload(self, chunk_id)
 
     # --------------------------------------------------------------- internals
     def _maybe_release_chunk(self, chunk_id: int) -> None:
         if self.chunk_state(chunk_id) is ChunkState.FREE:
-            rec = self._records[chunk_id]
-            rec.payload = None
-            rec.location = None
-
-    def _tick(self) -> int:
-        self._clock += 1
-        return self._clock
-
-    def _ensure_on(self, chunk_id: int, dev: Device) -> _ChunkRecord:
-        rec = self._records[chunk_id]
-        now = self._tick()
-        rec.last_use = now
-        if rec.payload is None:
-            self._make_room(dev, exclude=chunk_id)
-            rec.payload = np.zeros(self.cmap.chunk_size, dtype=self.dtype)
-            rec.location = dev
-            rec.arrival = now
-            return rec
-        if rec.location != dev:
-            self._make_room(dev, exclude=chunk_id)
-            if dev == "device":
-                self.stats.h2d_bytes += self.chunk_bytes
-                self.stats.h2d_count += 1
-            else:
-                self.stats.d2h_bytes += self.chunk_bytes
-                self.stats.d2h_count += 1
-            rec.location = dev
-            rec.arrival = now
-        return rec
-
-    def _capacity(self, dev: Device) -> int | None:
-        return self._device_budget() if dev == "device" else self.host_capacity
-
-    def _used(self, dev: Device) -> int:
-        return self.device_bytes_used() if dev == "device" else self.host_bytes_used()
-
-    def _make_room(self, dev: Device, *, exclude: int) -> None:
-        cap = self._capacity(dev)
-        if cap is None:
-            return
-        while self._used(dev) + self.chunk_bytes > cap:
-            victim = self._pick_victim(dev, exclude=exclude)
-            if victim is None:
-                raise OutOfMemory(
-                    f"{self.name}: cannot fit chunk on {dev}: "
-                    f"used={self._used(dev)} cap={cap} and no evictable chunk"
-                )
-            self._evict(victim, dev)
-
-    def _evictable(self, dev: Device, exclude: int) -> list[_ChunkRecord]:
-        out = []
-        for rec in self._records:
-            if rec.chunk_id == exclude or rec.payload is None or rec.location != dev:
-                continue
-            if rec.pinned > 0:
-                continue
-            if self.chunk_state(rec.chunk_id) is ChunkState.COMPUTE:
-                continue
-            out.append(rec)
-        return out
-
-    def _pick_victim(self, dev: Device, *, exclude: int) -> int | None:
-        cands = self._evictable(dev, exclude)
-        if not cands:
-            return None
-        if self.policy == "fifo":
-            return min(cands, key=lambda r: r.arrival).chunk_id
-        if self.policy == "lru":
-            return min(cands, key=lambda r: r.last_use).chunk_id
-        # OPT / Belady: farthest next use according to the tracer schedule.
-        def next_use(rec: _ChunkRecord) -> int:
-            ms = self._moments.get(rec.chunk_id)
-            if not ms:
-                return 2**62  # never used again -> perfect victim
-            import bisect
-
-            i = bisect.bisect_right(ms, self._current_moment)
-            return ms[i] if i < len(ms) else 2**62
-
-        return max(cands, key=next_use).chunk_id
-
-    def _evict(self, chunk_id: int, from_dev: Device) -> None:
-        rec = self._records[chunk_id]
-        if self.chunk_state(chunk_id) is ChunkState.FREE:
-            rec.payload = None
-            rec.location = None
-            return
-        to_dev: Device = "host" if from_dev == "device" else "device"
-        cap = self._capacity(to_dev)
-        if cap is not None and self._used(to_dev) + self.chunk_bytes > cap:
-            # try to cascade-evict on the destination tier
-            victim = self._pick_victim(to_dev, exclude=chunk_id)
-            if victim is None:
-                raise OutOfMemory(
-                    f"{self.name}: eviction target {to_dev} full and no victim"
-                )
-            self._evict(victim, to_dev)
-        if from_dev == "device":
-            self.stats.d2h_bytes += self.chunk_bytes
-            self.stats.d2h_count += 1
-        else:
-            self.stats.h2d_bytes += self.chunk_bytes
-            self.stats.h2d_count += 1
-        rec.location = to_dev
-        rec.arrival = self._tick()
+            self.pool.release_payload(self, chunk_id)

@@ -1,0 +1,533 @@
+"""Unified heterogeneous memory space (PatrickStar Sections 6.2, 8).
+
+The paper's central design point is that **all** model-data chunks — param
+fp16, param fp32, momentum and variance — live in ONE CPU+GPU
+heterogeneous memory space with a single device budget, orchestrated by
+the warm-up statistics.  :class:`HeteroMemory` is that space: it owns the
+device/host byte budgets, incremental usage counters, the unified
+:class:`TransferStats`, and the eviction policies (opt/lru/fifo), while
+:class:`~repro.core.manager.ChunkManager` is a per-stream *view* that
+registers its chunks with the pool.  Eviction therefore sees cross-stream
+pressure: admitting a param chunk may push an optimizer-state chunk to the
+host, exactly as in the paper's single space — the seed's
+one-full-budget-per-stream managers could jointly oversubscribe the
+device 4x and never competed with each other.
+
+On top of the pool sits :class:`SchedulePrefetcher`, the schedule-driven
+half of the design (the overlap technique of ZeRO-Infinity / AutoHete):
+after the warm-up iteration the tracer's moment schedule is a total order
+of future chunk references, so at every moment the next-k references can
+be *staged* onto the device ahead of the operator that needs them.  The
+container has no real async copy engine, so staging is simulated-async:
+every H2D transfer is classified as **hidden** (issued by the prefetcher
+ahead of demand, i.e. overlappable with compute) or **critical-path**
+(a demand miss the operator must wait for).  Staging runs only on OPT
+pools (it consumes the same future-reference schedule) and is
+conservative: into free space, or by replaying the exact eviction Belady
+would perform at the avoided miss (a victim not needed before the staged
+chunk's use and farthest as seen from that moment among ALL residents);
+when no such victim exists it refuses to stage.  On the engine's
+scan-shaped traces this conserves total transfer volume exactly
+(asserted in benchmarks/eviction.py), converting critical-path bytes
+into hidden bytes instead of adding traffic; on arbitrary interleavings
+residency can still shift between stage and use, and the prefetcher's
+in-flight cap bounds the excess.
+
+Eviction (Section 8.3): when the device tier cannot host an incoming
+chunk, evict a HOLD-like, unpinned chunk of *any* stream.  Policies:
+
+  "opt"   Belady's OPT using the *future* reference moments collected by
+          the runtime memory tracer in the warm-up iteration — evict the
+          chunk whose next use is farthest in the future (the paper's
+          choice).  Schedules are per-stream: an OS chunk is only
+          referenced again at its ADAM moment, a param chunk at its next
+          FWD/BWD/ADAM use.
+  "lru"   least recently used (classic; no future knowledge).
+  "fifo"  first-in-first-out.
+
+Chunks in COMPUTE state or explicitly pinned (collective communication in
+flight, Algorithm 1 lines 12/18) are never evicted.
+"""
+
+from __future__ import annotations
+
+import bisect
+import dataclasses
+from typing import TYPE_CHECKING, Callable, Iterable, Literal
+
+import numpy as np
+
+from repro.core.state import ChunkState
+
+if TYPE_CHECKING:  # pragma: no cover - import cycle with manager.py
+    from repro.core.manager import ChunkManager, _ChunkRecord
+
+Device = Literal["device", "host"]
+EvictionPolicy = Literal["opt", "lru", "fifo"]
+
+_NEVER = 2**62  # "no known future use" sentinel for OPT
+
+
+class OutOfMemory(RuntimeError):
+    """Neither tier can host the chunk (the DeepSpeed failure mode, Fig. 10)."""
+
+
+@dataclasses.dataclass
+class TransferStats:
+    h2d_bytes: int = 0
+    d2h_bytes: int = 0
+    h2d_count: int = 0
+    d2h_count: int = 0
+
+    @property
+    def total_bytes(self) -> int:
+        return self.h2d_bytes + self.d2h_bytes
+
+    def reset(self) -> None:
+        self.h2d_bytes = self.d2h_bytes = 0
+        self.h2d_count = self.d2h_count = 0
+
+
+@dataclasses.dataclass
+class PrefetchStats:
+    """Overlap accounting for the simulated-async staging queue.
+
+    Every H2D byte is either *hidden* (issued by the prefetcher before the
+    consuming operator, overlappable with compute) or *critical-path* (a
+    demand miss).  ``hidden + critical == TransferStats.h2d_bytes`` holds
+    at all times.
+    """
+
+    hidden_h2d_bytes: int = 0
+    critical_h2d_bytes: int = 0
+    hits: int = 0  # device access found the chunk already staged
+    demand_misses: int = 0  # device access had to move the chunk itself
+    staged_transfers: int = 0  # H2D transfers issued by the prefetcher
+    wasted_stages: int = 0  # staged chunks evicted before first use
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.demand_misses
+        return self.hits / total if total else 0.0
+
+    def reset(self) -> None:
+        self.hidden_h2d_bytes = self.critical_h2d_bytes = 0
+        self.hits = self.demand_misses = 0
+        self.staged_transfers = self.wasted_stages = 0
+
+
+class HeteroMemory:
+    """The shared two-tier (device/host) chunk memory space.
+
+    Streams (:class:`ChunkManager` views) register themselves; the pool
+    owns every byte-accounting and movement decision.  Usage counters are
+    incremental — ``device_bytes_used`` is O(1), not a scan — and are
+    mirrored per-stream on each manager.
+    """
+
+    def __init__(
+        self,
+        *,
+        device_capacity_bytes: int | None = None,
+        host_capacity_bytes: int | None = None,
+        policy: EvictionPolicy = "opt",
+    ) -> None:
+        self.device_capacity = device_capacity_bytes
+        self.host_capacity = host_capacity_bytes
+        self.policy: EvictionPolicy = policy
+        self.stats = TransferStats()  # unified, all streams
+        self.prefetch = PrefetchStats()
+        self._streams: dict[str, "ChunkManager"] = {}
+        self._device_used = 0
+        self._host_used = 0
+        self.peak_device_bytes = 0
+        # clock advances on every access; used by LRU/FIFO and as the
+        # "moment" cursor for OPT when no tracer moments are registered.
+        self._clock = 0
+        # OPT future-reference schedules, one per stream:
+        # stream -> chunk_id -> sorted list of reference moments.
+        self._moments: dict[str, dict[int, list[int]]] = {}
+        self._current_moment = 0
+        # optional callback letting the tracer shrink the device tier by
+        # the live non-model footprint at the current moment.
+        self._chunkable_device_bytes: Callable[[], int | None] | None = None
+        # chunks brought to device by the prefetcher, awaiting their use
+        self._staged: set[tuple[str, int]] = set()
+
+    # --------------------------------------------------------------- streams
+    def register_stream(self, mgr: "ChunkManager") -> None:
+        if mgr.name in self._streams:
+            raise ValueError(f"stream name {mgr.name!r} already registered")
+        self._streams[mgr.name] = mgr
+
+    @property
+    def streams(self) -> dict[str, "ChunkManager"]:
+        return dict(self._streams)
+
+    # ------------------------------------------------------------ accounting
+    def device_bytes_used(self) -> int:
+        return self._device_used
+
+    def host_bytes_used(self) -> int:
+        return self._host_used
+
+    def _charge(self, mgr: "ChunkManager", dev: Device, nbytes: int) -> None:
+        if dev == "device":
+            self._device_used += nbytes
+            mgr._device_used += nbytes
+            if self._device_used > self.peak_device_bytes:
+                self.peak_device_bytes = self._device_used
+        else:
+            self._host_used += nbytes
+            mgr._host_used += nbytes
+
+    def _uncharge(self, mgr: "ChunkManager", dev: Device, nbytes: int) -> None:
+        if dev == "device":
+            self._device_used -= nbytes
+            mgr._device_used -= nbytes
+        else:
+            self._host_used -= nbytes
+            mgr._host_used -= nbytes
+
+    def check_invariants(self) -> None:
+        """Recompute usage from the records and compare with the O(1)
+        counters (test/debug hook; never needed on the hot path)."""
+        dev = host = 0
+        for mgr in self._streams.values():
+            mdev = mhost = 0
+            for rec in mgr._records:
+                if rec.payload is None:
+                    continue
+                if rec.location == "device":
+                    mdev += mgr.chunk_bytes
+                else:
+                    mhost += mgr.chunk_bytes
+            assert mdev == mgr._device_used, (mgr.name, mdev, mgr._device_used)
+            assert mhost == mgr._host_used, (mgr.name, mhost, mgr._host_used)
+            dev += mdev
+            host += mhost
+        assert dev == self._device_used, (dev, self._device_used)
+        assert host == self._host_used, (host, self._host_used)
+        # bound against the STATIC capacity: host->device spills may by
+        # design exceed the dynamic chunkable budget of the current moment
+        # (margin-space overflow), and that budget also legally shrinks
+        # between an admission and this check.
+        if self.device_capacity is not None:
+            assert self._device_used <= self.device_capacity, (
+                self._device_used, self.device_capacity)
+
+    # -------------------------------------------------------------- schedule
+    def register_moments(self, stream: str, moments: dict[int, list[int]]) -> None:
+        """Install a stream's warm-up reference schedule for OPT eviction."""
+        self._moments[stream] = {c: sorted(ms) for c, ms in moments.items()}
+
+    def set_moment(self, moment: int) -> None:
+        self._current_moment = moment
+
+    def set_chunkable_memory_fn(self, fn: Callable[[], int | None]) -> None:
+        """Tracer hook: returns the device bytes currently usable for chunks."""
+        self._chunkable_device_bytes = fn
+
+    def device_budget(self) -> int | None:
+        budget = self.device_capacity
+        if self._chunkable_device_bytes is not None:
+            dyn = self._chunkable_device_bytes()
+            if dyn is not None:
+                budget = dyn if budget is None else min(budget, dyn)
+        return budget
+
+    def _next_use(self, stream: str, chunk_id: int, at: int | None = None) -> int:
+        ms = self._moments.get(stream, {}).get(chunk_id)
+        if not ms:
+            return _NEVER  # never used again -> perfect victim
+        # bisect_left: a reference AT the query moment is still upcoming
+        # (several chunks share one operator moment and are accessed in
+        # sequence after it is recorded) — treating it as past would mark
+        # a chunk the running operator needs as a perfect victim.
+        i = bisect.bisect_left(ms, self._current_moment if at is None else at)
+        return ms[i] if i < len(ms) else _NEVER
+
+    # --------------------------------------------------------------- paging
+    def tick(self) -> int:
+        self._clock += 1
+        return self._clock
+
+    def ensure_on(self, mgr: "ChunkManager", chunk_id: int, dev: Device) -> "_ChunkRecord":
+        """Demand paging: bring a stream's chunk to ``dev`` (Algorithm 1)."""
+        rec = mgr._records[chunk_id]
+        now = self.tick()
+        rec.last_use = now
+        key = (mgr.name, chunk_id)
+        if rec.payload is None:
+            self.make_room(dev, mgr.chunk_bytes, exclude=key)
+            rec.payload = np.zeros(mgr.cmap.chunk_size, dtype=mgr.dtype)
+            rec.location = dev
+            rec.arrival = now
+            self._charge(mgr, dev, mgr.chunk_bytes)
+            return rec
+        if rec.location != dev:
+            if key in self._staged:
+                # staged chunks live on the device, so this move is d2h:
+                # the chunk was pulled host-side before its device use and
+                # the staged H2D will be re-paid later — a wasted stage.
+                self.prefetch.wasted_stages += 1
+                self._staged.discard(key)
+            self.make_room(dev, mgr.chunk_bytes, exclude=key)
+            self._move(mgr, rec, dev, kind="demand")
+        elif dev == "device" and key in self._staged:
+            self.prefetch.hits += 1
+            self._staged.discard(key)
+        return rec
+
+    def release_payload(self, mgr: "ChunkManager", chunk_id: int) -> None:
+        """Drop a chunk's payload and release its bytes (tensors all FREE)."""
+        rec = mgr._records[chunk_id]
+        if rec.payload is not None:
+            self._uncharge(mgr, rec.location, mgr.chunk_bytes)
+        rec.payload = None
+        rec.location = None
+        self._staged.discard((mgr.name, chunk_id))
+
+    def _capacity(self, dev: Device) -> int | None:
+        return self.device_budget() if dev == "device" else self.host_capacity
+
+    def _used(self, dev: Device) -> int:
+        return self._device_used if dev == "device" else self._host_used
+
+    def _account_transfer(self, mgr: "ChunkManager", *, to_dev: Device) -> None:
+        for st in (self.stats, mgr.stats):
+            if to_dev == "device":
+                st.h2d_bytes += mgr.chunk_bytes
+                st.h2d_count += 1
+            else:
+                st.d2h_bytes += mgr.chunk_bytes
+                st.d2h_count += 1
+
+    def _move(
+        self,
+        mgr: "ChunkManager",
+        rec: "_ChunkRecord",
+        to_dev: Device,
+        *,
+        kind: str,  # "demand" | "evict" | "stage"
+    ) -> None:
+        """The single tier-move bookkeeping point: transfer stats, the
+        hidden/critical H2D split, byte counters, location and arrival.
+        ``hidden + critical == h2d`` holds because every H2D goes through
+        here with exactly one classification."""
+        self._account_transfer(mgr, to_dev=to_dev)
+        if to_dev == "device":
+            if kind == "stage":
+                self.prefetch.hidden_h2d_bytes += mgr.chunk_bytes
+                self.prefetch.staged_transfers += 1
+            else:
+                # demand misses and evictions bounced back to the device
+                # are traffic the consuming operator waits on
+                self.prefetch.critical_h2d_bytes += mgr.chunk_bytes
+                if kind == "demand":
+                    self.prefetch.demand_misses += 1
+        self._uncharge(mgr, rec.location, mgr.chunk_bytes)
+        rec.location = to_dev
+        self._charge(mgr, to_dev, mgr.chunk_bytes)
+        rec.arrival = self.tick()
+
+    def make_room(
+        self, dev: Device, nbytes: int, *, exclude: tuple[str, int]
+    ) -> None:
+        cap = self._capacity(dev)
+        if cap is None:
+            return
+        # bound the loop: with a full opposite tier an eviction can bounce
+        # its cascade right back (net-zero progress), so "no progress in
+        # #chunks rounds" is a genuine capacity failure, not bad luck.
+        rounds = sum(len(m._records) for m in self._streams.values()) + 1
+        while self._used(dev) + nbytes > cap:
+            victim = self._pick_victim(dev, exclude=exclude)
+            if victim is None or rounds <= 0:
+                raise OutOfMemory(
+                    f"unified pool: cannot fit {nbytes} bytes on {dev}: "
+                    f"used={self._used(dev)} cap={cap} and no evictable chunk "
+                    f"(streams: {sorted(self._streams)})"
+                )
+            rounds -= 1
+            self._evict(*victim, from_dev=dev)
+
+    def _evictable(
+        self, dev: Device, exclude: tuple[str, int]
+    ) -> list[tuple["ChunkManager", "_ChunkRecord"]]:
+        out = []
+        for mgr in self._streams.values():
+            for rec in mgr._records:
+                if (mgr.name, rec.chunk_id) == exclude:
+                    continue
+                if rec.payload is None or rec.location != dev:
+                    continue
+                if rec.pinned > 0:
+                    continue
+                if mgr.chunk_state(rec.chunk_id) is ChunkState.COMPUTE:
+                    continue
+                out.append((mgr, rec))
+        return out
+
+    def _pick_victim(
+        self, dev: Device, *, exclude: tuple[str, int]
+    ) -> tuple["ChunkManager", "_ChunkRecord"] | None:
+        cands = self._evictable(dev, exclude)
+        if not cands:
+            return None
+        if self.policy == "fifo":
+            return min(cands, key=lambda mr: mr[1].arrival)
+        if self.policy == "lru":
+            return min(cands, key=lambda mr: mr[1].last_use)
+        # OPT / Belady: farthest next use according to the tracer schedule.
+        return max(cands, key=lambda mr: self._next_use(mr[0].name, mr[1].chunk_id))
+
+    def _evict(
+        self,
+        mgr: "ChunkManager",
+        rec: "_ChunkRecord",
+        *,
+        from_dev: Device,
+        _depth: int = 0,
+    ) -> None:
+        if _depth > sum(len(m._records) for m in self._streams.values()):
+            # cascades bouncing device<->host with both tiers full would
+            # otherwise recurse forever; this is a genuine capacity fail
+            raise OutOfMemory(
+                "unified pool: eviction cascade cycled — both tiers full"
+            )
+        key = (mgr.name, rec.chunk_id)
+        if key in self._staged:
+            self.prefetch.wasted_stages += 1
+            self._staged.discard(key)
+        if mgr.chunk_state(rec.chunk_id) is ChunkState.FREE:
+            self.release_payload(mgr, rec.chunk_id)
+            return
+        to_dev: Device = "host" if from_dev == "device" else "device"
+        # spill destination bound: a host->device spill is the paper's
+        # margin-space overflow (Fig. 10, host-too-small case) and is
+        # limited by the *static* device capacity, not by the dynamic
+        # chunkable budget that throttles ordinary admissions.
+        cap = self.host_capacity if to_dev == "host" else self.device_capacity
+        if cap is not None and self._used(to_dev) + mgr.chunk_bytes > cap:
+            # try to cascade-evict on the destination tier
+            victim = self._pick_victim(to_dev, exclude=key)
+            if victim is None:
+                raise OutOfMemory(
+                    f"unified pool: eviction target {to_dev} full and no victim"
+                )
+            self._evict(*victim, from_dev=to_dev, _depth=_depth + 1)
+        self._move(mgr, rec, to_dev, kind="evict")
+
+    # -------------------------------------------------------------- staging
+    def stage(self, stream: str, chunk_id: int) -> bool:
+        """Simulated-async prefetch: move a chunk to the device ahead of its
+        use, classifying the H2D as *hidden*.  OPT-policy pools only —
+        staging is driven by the future-reference schedule, and letting it
+        evict under lru/fifo would inject that future knowledge into the
+        baseline policies (and skew their measured volume).
+
+        Conservative: stages only into free space, or by replaying the
+        eviction demand paging would perform at the chunk's use moment
+        ``t`` — a victim must not be referenced before ``t`` (else staging
+        would thrash a sooner-needed chunk), must be the farthest-next-use
+        *as seen from t* among ALL device residents (Belady's pick at the
+        avoided miss), and otherwise staging is refused.  On the engine's
+        scan-shaped traces this conserves total transfer volume exactly
+        (asserted in benchmarks/eviction.py); on arbitrary interleavings
+        residency can still shift between the stage and the use, so the
+        in-flight cap in :class:`SchedulePrefetcher` bounds any excess.
+        Returns True if the chunk is on-device and marked staged."""
+        if self.policy != "opt":
+            return False
+        mgr = self._streams[stream]
+        rec = mgr._records[chunk_id]
+        key = (stream, chunk_id)
+        if rec.payload is None or rec.location == "device":
+            return False  # nothing to hide (materialization moves no bytes)
+        if mgr.chunk_state(chunk_id) is ChunkState.FREE:
+            return False
+        t_use = self._next_use(stream, chunk_id)
+        if t_use == _NEVER:
+            return False  # no known future device use: nothing to front-run
+        cap = self._capacity("device")
+        while cap is not None and self._used("device") + mgr.chunk_bytes > cap:
+            # one sweep over device residents: collect the best evictable
+            # victim (not needed before t_use, farthest as seen from it)
+            # and the farthest-from-t_use value over ALL residents — if
+            # any unevictable resident beats the victim, demand paging at
+            # t_use would pick that one instead, so refuse to diverge.
+            best: tuple["ChunkManager", "_ChunkRecord"] | None = None
+            best_at_use = -1
+            resident_max = -1
+            for omgr in self._streams.values():
+                for orec in omgr._records:
+                    if orec.payload is None or orec.location != "device":
+                        continue
+                    if (omgr.name, orec.chunk_id) == key:
+                        continue
+                    nu_at_use = self._next_use(
+                        omgr.name, orec.chunk_id, at=t_use)
+                    resident_max = max(resident_max, nu_at_use)
+                    if self._next_use(omgr.name, orec.chunk_id) <= t_use:
+                        continue  # needed before the staged chunk's use
+                    if orec.pinned > 0:
+                        continue
+                    if omgr.chunk_state(orec.chunk_id) is ChunkState.COMPUTE:
+                        continue
+                    if nu_at_use > best_at_use:
+                        best_at_use = nu_at_use
+                        best = (omgr, orec)
+            if best is None or best_at_use < resident_max:
+                return False
+            self._evict(*best, from_dev="device")
+            cap = self._capacity("device")
+        self._move(mgr, rec, "device", kind="stage")
+        self._staged.add(key)
+        return True
+
+
+class SchedulePrefetcher:
+    """Schedule-driven staging queue over a :class:`HeteroMemory` pool.
+
+    After warm-up the tracer yields the iteration's full reference
+    sequence ``(moment, stream, chunk_id)``.  ``advance(m)`` stages every
+    reference in the window ``(m, m + lookahead]`` — the next-k chunk
+    references per stream — before the operator at moment ``m`` runs, so
+    their H2D transfers overlap that operator's compute (simulated-async:
+    the pool books them as hidden bytes)."""
+
+    def __init__(
+        self, pool: HeteroMemory, *, lookahead: int = 6, max_inflight: int = 2
+    ) -> None:
+        self.pool = pool
+        self.lookahead = lookahead
+        # staged-but-not-yet-consumed chunks are capped: staging far past
+        # the working set only parks chunks where the next demand miss
+        # evicts them again (wasted transfers on tight budgets).
+        self.max_inflight = max_inflight
+        self._moments: list[int] = []
+        self._refs: list[tuple[int, str, int]] = []
+
+    @property
+    def installed(self) -> bool:
+        return bool(self._refs)
+
+    def install(self, refs: Iterable[tuple[int, str, int]]) -> None:
+        """``refs``: (moment, stream, chunk_id) for one whole iteration."""
+        self._refs = sorted(refs)
+        self._moments = [m for m, _, _ in self._refs]
+
+    def advance(self, moment: int) -> int:
+        """Stage upcoming references; returns how many chunks were staged."""
+        if not self._refs or self.lookahead <= 0:
+            return 0
+        lo = bisect.bisect_right(self._moments, moment)
+        hi = bisect.bisect_right(self._moments, moment + self.lookahead)
+        staged = 0
+        for m, stream, chunk_id in self._refs[lo:hi]:
+            if len(self.pool._staged) >= self.max_inflight:
+                break
+            if self.pool.stage(stream, chunk_id):
+                staged += 1
+        return staged

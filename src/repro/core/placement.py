@@ -43,6 +43,17 @@ class PlacementPlan:
             return 0.0
         return self.os_device_groups / self.num_local_groups
 
+    def os_device_chunk_ids(self, cmap) -> set[int]:
+        """Chunk ids of the OS groups placed in GPU margin space.  Their
+        ADAM updates run device-side after warm-up, so the warm-up's
+        host-side reference moments for these chunks must be promoted to
+        device references in the OPT/prefetch schedules."""
+        return {
+            c
+            for g_idx in range(self.os_device_groups)
+            for c in cmap.comm_group_chunk_ids(g_idx)
+        }
+
 
 def plan_placement(
     *,

@@ -9,7 +9,10 @@ warm-up profile predicts every later iteration, giving:
   * ``chunkable_memory(moment)`` — device bytes available for chunks at a
     moment (total - non-model[moment]);
   * per-chunk *reference moments*, the future-knowledge schedule consumed
-    by the OPT eviction policy (Section 8.3);
+    by the OPT eviction policy (Section 8.3) — recorded per stream (param
+    chunks are referenced in FWD/BWD/ADAM, optimizer-state chunks only in
+    ADAM), which also yields the total reference order the
+    schedule-driven prefetcher stages chunks from;
   * ``peak_nonmodel`` / GPU **margin space** for device-aware operator
     placement (Section 8.2).
 
@@ -47,7 +50,18 @@ class RuntimeMemoryTracer:
         self.overhead_bytes = overhead_bytes
         self.warmup = True
         self.moments: list[Moment] = []
-        self.chunk_moments: dict[int, list[int]] = defaultdict(list)
+        # stream -> chunk_id -> *device* reference moments (the schedule
+        # OPT eviction and the prefetcher consume: both reason about the
+        # device tier, so a use that computes host-side is not a reason to
+        # keep — or stage — a chunk on the device)
+        self.stream_chunk_moments: dict[str, dict[int, list[int]]] = defaultdict(
+            lambda: defaultdict(list)
+        )
+        # stream -> chunk_id -> host-side reference moments (ADAM on host);
+        # promoted to device refs for OS groups later placed in GPU margin.
+        self.host_chunk_moments: dict[str, dict[int, list[int]]] = defaultdict(
+            lambda: defaultdict(list)
+        )
         self._moment_idx = -1
 
     # ------------------------------------------------------------- recording
@@ -55,7 +69,8 @@ class RuntimeMemoryTracer:
         self._moment_idx = -1
         if self.warmup:
             self.moments.clear()
-            self.chunk_moments.clear()
+            self.stream_chunk_moments.clear()
+            self.host_chunk_moments.clear()
 
     def record_moment(self, op_name: str, phase: str, nonmodel_bytes: int) -> int:
         """Called at operator start and finish.  Returns the moment index."""
@@ -66,9 +81,16 @@ class RuntimeMemoryTracer:
             )
         return self._moment_idx
 
-    def record_chunk_use(self, chunk_id: int) -> None:
-        if self.warmup:
-            self.chunk_moments[chunk_id].append(max(self._moment_idx, 0))
+    def record_chunk_use(
+        self, chunk_id: int, stream: str = "param", dev: str = "device"
+    ) -> None:
+        if not self.warmup:
+            return
+        m = max(self._moment_idx, 0)
+        if dev == "device":
+            self.stream_chunk_moments[stream][chunk_id].append(m)
+        else:
+            self.host_chunk_moments[stream][chunk_id].append(m)
 
     def end_warmup(self) -> None:
         self.warmup = False
@@ -107,6 +129,52 @@ class RuntimeMemoryTracer:
             0,
         )
 
-    def schedule(self) -> dict[int, list[int]]:
-        """The per-chunk future-reference schedule for OPT eviction."""
-        return {c: list(ms) for c, ms in self.chunk_moments.items()}
+    def schedule(self, stream: str | None = None) -> dict[int, list[int]]:
+        """The per-chunk future-reference schedule for OPT eviction.
+
+        Without ``stream`` the merged (all-stream) schedule is returned,
+        which is what a standalone single-stream manager consumes."""
+        if stream is not None:
+            per = self.stream_chunk_moments.get(stream, {})
+            return {c: list(ms) for c, ms in per.items()}
+        merged: dict[int, list[int]] = defaultdict(list)
+        for per in self.stream_chunk_moments.values():
+            for c, ms in per.items():
+                merged[c].extend(ms)
+        return {c: sorted(ms) for c, ms in merged.items()}
+
+    def schedule_by_stream(
+        self, promote_chunks: "dict[str, set[int]] | None" = None
+    ) -> dict[str, dict[int, list[int]]]:
+        """Per-stream device schedules.  ``promote_chunks`` (stream ->
+        chunk ids) additionally merges in host-side reference moments for
+        chunks the placement plan later keeps on the device (OS groups in
+        GPU margin space: their ADAM runs device-side after warm-up)."""
+        out = {
+            s: {c: list(ms) for c, ms in per.items()}
+            for s, per in self.stream_chunk_moments.items()
+        }
+        for s, chunks in (promote_chunks or {}).items():
+            per = out.setdefault(s, {})
+            hosted = self.host_chunk_moments.get(s, {})
+            for c in chunks:
+                if c in hosted:
+                    per[c] = sorted(per.get(c, []) + list(hosted[c]))
+        return out
+
+    def reference_sequence(
+        self, schedules: "dict[str, dict[int, list[int]]] | None" = None
+    ) -> list[tuple[int, str, int]]:
+        """All device-side (moment, stream, chunk_id) references of one
+        iteration in moment order — the staging queue the prefetcher
+        walks.  Pass the (possibly promotion-amended) ``schedules`` to
+        keep prefetch and OPT consuming the same future."""
+        if schedules is None:
+            schedules = self.schedule_by_stream()
+        refs = [
+            (m, s, c)
+            for s, per in schedules.items()
+            for c, ms in per.items()
+            for m in ms
+        ]
+        return sorted(refs)

@@ -3,6 +3,9 @@ never exceeds capacity, and keeps states consistent under random access
 sequences with any eviction policy."""
 
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.chunk import TensorSpec, build_chunk_map

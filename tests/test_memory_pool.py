@@ -1,0 +1,216 @@
+"""Unified heterogeneous memory space (core/memory.py): one device budget
+shared by all streams, cross-stream eviction, O(1) incremental counters,
+and the schedule-driven prefetcher's hidden/critical overlap accounting."""
+
+import numpy as np
+import pytest
+
+from repro.core.chunk import TensorSpec, build_chunk_map
+from repro.core.manager import ChunkManager, OutOfMemory
+from repro.core.memory import HeteroMemory, SchedulePrefetcher
+from repro.core.state import ChunkState, TensorState, derive_chunk_state
+
+
+def _pool(n_tensors=4, chunk_size=16, device_chunks=2, policy="opt",
+          streams=("param", "p32")):
+    specs = [TensorSpec(f"t{i}", (chunk_size,)) for i in range(n_tensors)]
+    cmap = build_chunk_map(specs, chunk_size)  # one tensor per chunk
+    pool = HeteroMemory(
+        device_capacity_bytes=device_chunks * chunk_size * 4, policy=policy)
+    mgrs = {s: ChunkManager(cmap, name=s, pool=pool) for s in streams}
+    return pool, mgrs, cmap
+
+
+def test_streams_share_one_device_budget():
+    """Aggregate device bytes across streams never exceed the configured
+    budget at any moment (the seed's per-stream managers could jointly
+    oversubscribe the device len(streams)x)."""
+    pool, mgrs, _ = _pool(n_tensors=4, device_chunks=2,
+                          streams=("param", "p32", "m", "v"))
+    cap = pool.device_capacity
+    for i in range(4):
+        for s, mgr in mgrs.items():
+            mgr.access_tensor(f"t{i}")
+            mgr.release_tensor(f"t{i}", TensorState.HOLD_AFTER_FWD)
+            assert pool.device_bytes_used() <= cap
+            assert sum(m.device_bytes_used() for m in mgrs.values()) \
+                == pool.device_bytes_used()
+            pool.check_invariants()
+    assert pool.peak_device_bytes <= cap
+
+
+def test_cross_stream_eviction():
+    """Admitting a param chunk evicts an optimizer-state chunk: eviction
+    sees pressure from ALL streams, not just its own."""
+    pool, mgrs, _ = _pool(n_tensors=2, device_chunks=1, policy="lru")
+    os_mgr, param = mgrs["p32"], mgrs["param"]
+    os_mgr.access_tensor("t0")
+    os_mgr.release_tensor("t0", TensorState.HOLD_AFTER_FWD)
+    assert os_mgr.location(0) == "device"
+    param.access_tensor("t1")  # device holds 1 chunk -> OS chunk must go
+    assert os_mgr.location(0) == "host"
+    assert param.location(1) == "device"
+    assert pool.device_bytes_used() == param.chunk_bytes
+
+
+def test_pinned_and_compute_chunks_block_cross_stream_eviction():
+    pool, mgrs, _ = _pool(n_tensors=2, device_chunks=1)
+    mgrs["p32"].access_tensor("t0")  # COMPUTE: unevictable
+    with pytest.raises(OutOfMemory):
+        mgrs["param"].access_tensor("t1")
+
+
+def test_shared_pool_rejects_duplicate_stream_and_capacity_args():
+    pool, mgrs, cmap = _pool()
+    with pytest.raises(ValueError):
+        ChunkManager(cmap, name="param", pool=pool)  # name collision
+    with pytest.raises(ValueError):
+        ChunkManager(cmap, name="fresh", pool=pool,
+                     device_capacity_bytes=1024)  # pool owns capacity
+
+
+def test_unified_stats_are_sum_of_stream_stats():
+    pool, mgrs, _ = _pool(n_tensors=4, device_chunks=1, policy="lru")
+    for i in range(4):
+        mgr = mgrs["param"] if i % 2 == 0 else mgrs["p32"]
+        mgr.access_tensor(f"t{i}")
+        mgr.release_tensor(f"t{i}", TensorState.HOLD_AFTER_FWD)
+    for i in range(4):  # second sweep forces real transfers both ways
+        mgr = mgrs["param"] if i % 2 == 0 else mgrs["p32"]
+        mgr.access_tensor(f"t{i}")
+        mgr.release_tensor(f"t{i}", TensorState.HOLD_AFTER_FWD)
+    per = [m.stats for m in mgrs.values()]
+    assert pool.stats.h2d_bytes == sum(s.h2d_bytes for s in per) > 0
+    assert pool.stats.d2h_bytes == sum(s.d2h_bytes for s in per) > 0
+
+
+def test_incremental_counters_track_free_and_release():
+    pool, mgrs, _ = _pool(n_tensors=2, device_chunks=2)
+    mgr = mgrs["param"]
+    mgr.access_tensor("t0")
+    mgr.release_tensor("t0", TensorState.FREE)
+    assert mgr.device_bytes_used() == 0
+    mgr.access_tensor("t1")
+    mgr.release_tensor("t1", TensorState.HOLD)
+    mgr.free_chunk(1)
+    assert mgr.device_bytes_used() == mgr.host_bytes_used() == 0
+    pool.check_invariants()
+
+
+def test_chunk_state_matches_slow_derivation():
+    """chunk_state is O(1) via incremental tallies; it must agree with the
+    full derivation from tensor states after any transition sequence."""
+    specs = [TensorSpec(f"t{i}", (4,)) for i in range(6)]
+    cmap = build_chunk_map(specs, 8)  # two tensors per chunk
+    mgr = ChunkManager(cmap, device_capacity_bytes=3 * 8 * 4, policy="lru")
+
+    def check():
+        for c in range(cmap.num_chunks):
+            names = [p.name for p in cmap.chunk_tensors(c)]
+            slow = derive_chunk_state(mgr.tensor_state(n) for n in names)
+            assert mgr.chunk_state(c) is slow
+
+    mgr.access_tensor("t0"); check()
+    mgr.access_tensor("t1"); check()
+    mgr.release_tensor("t0", TensorState.HOLD_AFTER_FWD); check()
+    mgr.release_tensor("t1", TensorState.FREE); check()
+    mgr.reset_states(TensorState.HOLD); check()
+    mgr.force_tensor_state("t0", TensorState.HOLD); check()
+    mgr.access_tensor("t2"); mgr.release_tensor("t2", TensorState.FREE); check()
+
+
+def test_chunk_tensors_index_matches_linear_scan():
+    specs = [TensorSpec(f"t{i}", (3, 2)) for i in range(9)]
+    cmap = build_chunk_map(specs, 13)
+    for c in range(cmap.num_chunks):
+        assert cmap.chunk_tensors(c) == [
+            p for p in cmap.placements if p.chunk_id == c]
+
+
+# ------------------------------------------------------------------ prefetch
+
+def _pattern_run(pattern, n_tensors, prefetch, device_chunks=3):
+    """Replay an access pattern over a small pool, with or without
+    schedule-driven staging (lookahead 2, one in-flight stage)."""
+    specs = [TensorSpec(f"t{i}", (16,)) for i in range(n_tensors)]
+    cmap = build_chunk_map(specs, 16)
+    pool = HeteroMemory(device_capacity_bytes=device_chunks * 16 * 4,
+                        policy="opt")
+    mgr = ChunkManager(cmap, name="param", pool=pool)
+    moments = {}
+    for m, t in enumerate(pattern):
+        moments.setdefault(t, []).append(m)
+    mgr.register_moments(moments)
+    pf = SchedulePrefetcher(pool, lookahead=2, max_inflight=1)
+    if prefetch:
+        pf.install([(m, "param", t) for m, t in enumerate(pattern)])
+    for m, t in enumerate(pattern):
+        pool.set_moment(m)
+        if prefetch:
+            pf.advance(m)
+        mgr.access_tensor(f"t{t}")
+        mgr.release_tensor(f"t{t}", TensorState.HOLD_AFTER_FWD)
+    pool.check_invariants()
+    return pool
+
+
+def _scan_pattern(n=6, rounds=6):
+    # forward scan then reverse scan, the engine's FWD/BWD shape
+    return (list(range(n)) + list(reversed(range(n)))) * rounds
+
+
+def test_prefetch_hides_h2d_at_equal_volume():
+    demand = _pattern_run(_scan_pattern(), 6, prefetch=False)
+    staged = _pattern_run(_scan_pattern(), 6, prefetch=True)
+    # same total traffic: staging only replays evictions demand paging
+    # would also perform, just ahead of the consuming access
+    assert staged.stats.h2d_bytes == demand.stats.h2d_bytes > 0
+    assert staged.stats.d2h_bytes == demand.stats.d2h_bytes
+    # ...but most of it moves off the critical path
+    assert staged.prefetch.critical_h2d_bytes < demand.prefetch.critical_h2d_bytes
+    assert staged.prefetch.hidden_h2d_bytes > 0
+    assert staged.prefetch.hit_rate > 0.5
+    assert demand.prefetch.hidden_h2d_bytes == 0
+
+
+def test_prefetch_refuses_when_no_free_overlap_exists():
+    """On a tight cyclic pattern every resident chunk is needed before the
+    staged chunk's use: staging would inflate volume, so the prefetcher
+    must decline rather than thrash — volume stays exactly demand's."""
+    demand = _pattern_run([0, 1, 2, 3] * 12, 4, prefetch=False)
+    staged = _pattern_run([0, 1, 2, 3] * 12, 4, prefetch=True)
+    assert staged.stats.h2d_bytes == demand.stats.h2d_bytes
+    assert staged.prefetch.wasted_stages == 0
+
+
+def test_hidden_plus_critical_equals_total_h2d():
+    for pattern, n in ((_scan_pattern(), 6), ([0, 1, 2, 3] * 12, 4)):
+        for prefetch in (False, True):
+            pool = _pattern_run(pattern, n, prefetch=prefetch)
+            assert (pool.prefetch.hidden_h2d_bytes
+                    + pool.prefetch.critical_h2d_bytes) == pool.stats.h2d_bytes
+
+
+def test_stage_refuses_to_thrash():
+    """Staging must not evict a chunk whose next use is sooner than the
+    staged chunk's (that would trade hidden bytes for extra volume)."""
+    specs = [TensorSpec(f"t{i}", (16,)) for i in range(3)]
+    cmap = build_chunk_map(specs, 16)
+    pool = HeteroMemory(device_capacity_bytes=1 * 16 * 4, policy="opt")
+    mgr = ChunkManager(cmap, name="param", pool=pool)
+    # t0 resident on device, needed again at moment 1; t1 on host, needed
+    # at moment 5 -> staging t1 over t0 would thrash.
+    for n in ("t0", "t1"):
+        dev = "device" if n == "t0" else "host"
+        mgr.access_tensor(n, dev)
+        mgr.release_tensor(n, TensorState.HOLD_AFTER_FWD)
+    # (accessing t1 on host leaves t0 where it was: both HOLD now)
+    mgr.register_moments({0: [1], 1: [5]})
+    pool.set_moment(0)
+    assert not pool.stage("param", 1)
+    assert mgr.location(0) == "device"
+    # reverse the urgency: now t0 is the far one and staging succeeds
+    mgr.register_moments({0: [9], 1: [2]})
+    assert pool.stage("param", 1)
+    assert mgr.location(1) == "device"
+    assert mgr.location(0) == "host"
