@@ -3,8 +3,10 @@ traffic for OPT (tracer-guided Belady) vs LRU vs FIFO across budgets over
 the unified (all-streams) heterogeneous pool, plus the schedule-driven
 prefetcher's overlap split: post-warm-up staging must strictly reduce
 critical-path H2D bytes vs demand paging at EQUAL total transfer volume.
-Emits a JSON report with prefetch hit-rate and hidden vs critical bytes."""
+Emits a JSON report with prefetch hit-rate and hidden vs critical bytes.
+``--smoke`` runs a single budget (the assertions still fire) for CI."""
 
+import argparse
 import json
 
 from benchmarks.common import csv, lm_batch
@@ -54,8 +56,13 @@ def adversarial_microbench():
 
 
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI subset: one budget, assertions intact")
+    args = ap.parse_args()
     report = {}
-    for budget in (2_500_000, 4_000_000, 6_000_000):
+    budgets = (2_500_000,) if args.smoke else (2_500_000, 4_000_000, 6_000_000)
+    for budget in budgets:
         demand = run("opt", budget, prefetch=False)
         vals = {"opt": demand.moved_bytes}
         vals.update({p: run(p, budget).moved_bytes for p in ("lru", "fifo")})

@@ -120,6 +120,13 @@ class ChunkTensorMap:
         return 1.0 - self.utilization
 
     @property
+    def payload_elems(self) -> int:
+        """Elements of real tensor data (M in the paper's volume model);
+        same meaning as :attr:`repro.core.zero.ChunkLayout.payload_elems`,
+        so the analytic ``comm_volume_bytes`` accepts either layout."""
+        return self.total_numel
+
+    @property
     def num_comm_groups(self) -> int:
         return self.num_chunks // self.nproc
 
@@ -130,11 +137,28 @@ class ChunkTensorMap:
         return range(group * self.nproc, (group + 1) * self.nproc)
 
     def owner_rank(self, chunk_id: int) -> int:
-        """Process that owns this chunk under the ZeRO split (Section 7)."""
+        """Process that owns this chunk under the ZeRO split (Section 7):
+        rank r owns chunk ``g*p + r`` of every communication group g."""
         return chunk_id % self.nproc
+
+    def chunk_owner(self, chunk_id: int) -> int:
+        """Alias of :meth:`owner_rank` (the distributed runtime's name)."""
+        return self.owner_rank(chunk_id)
 
     def local_chunk_ids(self, rank: int) -> list[int]:
         return [c for c in range(self.num_chunks) if c % self.nproc == rank]
+
+    def comm_group_tensors(self, group: int) -> list[TensorPlacement]:
+        """All tensor placements of a communication group's chunks (padding
+        chunks contribute nothing) — the unit Algorithm 2's post-FWD/BWD
+        group-complete check and the all-gather fetch operate on."""
+        out: list[TensorPlacement] = []
+        for c in self.comm_group_chunk_ids(group):
+            out.extend(self._by_chunk().get(c, ()))
+        return out
+
+    def tensor_comm_group(self, name: str) -> int:
+        return self.comm_group(self.placement(name).chunk_id)
 
 
 def build_chunk_map(

@@ -1,0 +1,347 @@
+"""Rank-parallel eager memory plane — chunked ZeRO in the PatrickStar
+runtime (paper Section 7, Figs. 8/9, Algorithms 1-2).
+
+:class:`DistributedPatrickStarEngine` simulates ``nproc`` ranks
+in-process.  Each rank is a full :class:`~repro.core.engine.PatrickStarEngine`
+(its own :class:`~repro.core.memory.HeteroMemory` device/host budget, its
+own tracer/prefetcher/placement) that owns chunk ``g*p + r`` of every
+communication group:
+
+  * **init**: a rank materializes param fp16 + the three optimizer-state
+    streams only for its owned chunks; every non-owned chunk starts in
+    the RELEASED remote lifecycle (no local payload).
+  * **FWD/BWD fetch** (Algorithm 1): the first COMPUTE access to a
+    RELEASED chunk all-gathers its whole communication group — every
+    rank pins its own chunk on-device and materializes the other p-1
+    replicas, booking ``(p-1) * chunk_bytes`` received per rank in the
+    pool's :class:`~repro.core.memory.CollectiveStats`.  After the
+    group's post-FWD transition the remote replicas are dropped back to
+    RELEASED (local bookkeeping inside the rank core).
+  * **grad reduce-scatter** (Algorithm 2 + Fig. 6): grads overwrite the
+    param-fp16 replicas on every rank; when a group reaches
+    HOLD_AFTER_BWD everywhere, the driver sums the p replicas onto the
+    owner's payload, releases the others, and books
+    ``(p-1) * chunk_bytes`` sent per rank.
+  * **ADAM** runs purely on local shards (each rank updates only its
+    owned chunks; the stem stays replicated and its grads all-reduce —
+    counted separately, outside the chunked plane).
+  * **gather prefetch**: after warm-up, rank 0's tracer schedule drives a
+    :class:`~repro.core.memory.GatherPrefetcher` that issues upcoming
+    FWD/BWD group gathers ahead of their operator, classifying those
+    collective bytes hidden instead of critical-path — the collective
+    analogue of the H2D staging queue.
+
+Ranks advance in lock-step at layer granularity (the driver interleaves
+the engine's phase methods), which is what makes the simulated
+collectives well-defined: when a gather or reduce-scatter fires, every
+rank is at the same point of the same schedule.  Per-rank measured
+volume is exactly the paper's analytic ``3 (p-1)/p`` of the chunk-store
+bytes per step — two all-gather passes plus one reduce-scatter, padding
+chunks included, matching a tiled ``lax.all_gather`` over the
+``[G, p, S]`` store of the compiled path (asserted in
+tests/test_distributed_engine.py and benchmarks/comm_volume.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro.core.engine import EngineMetrics, PatrickStarEngine
+from repro.core.memory import CollectiveStats, GatherPrefetcher
+from repro.core.state import ChunkState
+
+
+@dataclasses.dataclass
+class DistributedStepMetrics:
+    """One lock-step iteration across all ranks.  Collective byte counts
+    are PER RANK (they are symmetric by construction — every rank sends
+    and receives the same chunk count per group)."""
+
+    loss: float  # global loss: sum of per-shard losses (1/global_tokens)
+    rank_metrics: list[EngineMetrics]
+    allgather_bytes: int = 0
+    reduce_scatter_bytes: int = 0
+    allreduce_bytes: int = 0
+    hidden_allgather_bytes: int = 0
+    critical_allgather_bytes: int = 0
+
+    @property
+    def chunk_collective_bytes(self) -> int:
+        """The quantity the paper's 6(p-1)/p*M model predicts."""
+        return self.allgather_bytes + self.reduce_scatter_bytes
+
+    @property
+    def moved_bytes(self) -> int:
+        """Per-step H2D+D2H over all ranks (the offload plane)."""
+        return sum(m.moved_bytes for m in self.rank_metrics)
+
+
+class DistributedPatrickStarEngine:
+    """nproc-rank chunked-ZeRO driver over per-rank PatrickStar cores."""
+
+    def __init__(
+        self,
+        model_cls,
+        cfg,
+        *,
+        nproc: int,
+        device_memory_bytes: int,  # PER-RANK device budget
+        host_memory_bytes: int | None = None,
+        policy: str = "opt",
+        chunk_size: int | None = None,
+        lr: float = 1e-3,
+        betas: tuple[float, float] = (0.9, 0.95),
+        eps: float = 1e-8,
+        seed: int = 0,
+        device_aware_placement: bool = True,
+        prefetch: bool = True,
+        prefetch_lookahead: int = 6,
+        gather_lookahead: int = 2,
+    ) -> None:
+        if nproc < 2:
+            raise ValueError("nproc must be >= 2 (use PatrickStarEngine)")
+        self.nproc = nproc
+        # ONE init for all ranks (the paper's replicated init — every rank
+        # derives the same values, so initializing nproc times would only
+        # burn time and transient memory; each core copies what it owns
+        # into its chunk payloads).  Rank 0 also runs the chunk-size
+        # search once; the others reuse its layout.
+        from repro.models.layers import AxisCtx
+
+        init_params = model_cls(cfg, AxisCtx()).init_params(
+            jax.random.key(seed))
+
+        def make_core(r, csize):
+            return PatrickStarEngine(
+                model_cls, cfg,
+                device_memory_bytes=device_memory_bytes,
+                host_memory_bytes=host_memory_bytes,
+                policy=policy, chunk_size=csize,
+                lr=lr, betas=betas, eps=eps, seed=seed,
+                device_aware_placement=device_aware_placement,
+                prefetch=prefetch, prefetch_lookahead=prefetch_lookahead,
+                nproc=nproc, rank=r, collective=self,
+                init_params=init_params)
+
+        rank0 = make_core(0, chunk_size)
+        self.ranks = [rank0] + [
+            make_core(r, rank0.cmap.chunk_size) for r in range(1, nproc)]
+        self.cmap = rank0.cmap
+        if any(c.cmap != self.cmap for c in self.ranks[1:]):
+            raise AssertionError("rank cores disagree on the chunk layout")
+        self.gather_prefetcher = GatherPrefetcher(
+            lambda grp: self.fetch_group(grp, hidden=True),
+            lookahead=gather_lookahead) if gather_lookahead > 0 else None
+        self.step_count = 0
+
+    # ----------------------------------------------------------- collectives
+    def fetch_group(self, group: int, *, hidden: bool = False) -> bool:
+        """Chunk-granular all-gather of one communication group
+        (Algorithm 1 ``FetchRemoteChunks`` / Fig. 9).
+
+        Every rank brings its OWN chunk of the group on-device and pins it
+        for the duration (line 11-12); every rank then materializes the
+        p-1 non-owned replicas and copies the owners' bytes in.  Received
+        bytes — ``(p-1) * chunk_bytes`` per rank, padding chunks included,
+        exactly what a tiled ``lax.all_gather`` of the [G, p, S] store
+        moves — land in the pool's collective ledger, classified hidden
+        (prefetched) or critical-path (demand).  Returns True iff a
+        gather actually ran (resident groups are a no-op, so the gather
+        prefetcher can probe freely)."""
+        cmap = self.cmap
+        payload_ids = [c for c in cmap.comm_group_chunk_ids(group)
+                       if cmap.chunk_tensors(c)]
+        # all-or-nothing: a collective is only well-defined when EVERY
+        # rank's non-owned replicas of the group are released.  A mixed
+        # state means some rank is still mid-phase on the group (e.g. a
+        # prefetch probing across the FWD->BWD boundary before the last
+        # rank's post-FWD release) — refuse, the demand fetch will run
+        # once the phase transition completes everywhere.  This guard is
+        # also what keeps the per-rank accounting exact: a gather that ran
+        # would otherwise book (p-1) chunks on a rank that materialized
+        # fewer.
+        released = [
+            core.params_mgr.chunk_state(c) is ChunkState.RELEASED
+            for r, core in enumerate(self.ranks)
+            for c in payload_ids if cmap.chunk_owner(c) != r]
+        if not (released and all(released)):
+            return False
+        chunk_bytes = self.ranks[0].params_mgr.chunk_bytes
+        pinned: list[tuple[int, int]] = []
+        try:
+            # owners first: the collective reads their payloads
+            for c in payload_ids:
+                o = cmap.chunk_owner(c)
+                self.ranks[o].params_mgr.prepare_payload(c, "device")
+                self.ranks[o].params_mgr.pin(c)
+                pinned.append((o, c))
+            for r, core in enumerate(self.ranks):
+                for c in payload_ids:
+                    o = cmap.chunk_owner(c)
+                    if o == r:
+                        continue
+                    dst = core.params_mgr.materialize_chunk(c, "device",
+                                                            pin=True)
+                    pinned.append((r, c))
+                    src = self.ranks[o].params_mgr._records[c].payload
+                    dst[...] = src
+                core.pool.account_allgather(
+                    (self.nproc - 1) * chunk_bytes, hidden=hidden)
+        finally:
+            for r, c in pinned:
+                self.ranks[r].params_mgr.unpin(c)
+        return True
+
+    def reduce_scatter_group(self, group: int) -> None:
+        """Algorithm 2 gradient path: the p grad replicas of every chunk
+        in the group SUM onto the owner's payload (the per-shard losses
+        already carry 1/global_tokens, so summing is the correct global
+        reduction); non-owned replicas then drop back to RELEASED.  Sent
+        bytes per rank: ``(p-1) * chunk_bytes``."""
+        cmap = self.cmap
+        chunk_bytes = self.ranks[0].params_mgr.chunk_bytes
+        for c in cmap.comm_group_chunk_ids(group):
+            if not cmap.chunk_tensors(c):
+                continue
+            o = cmap.chunk_owner(c)
+            acc = self.ranks[o].params_mgr._records[c].payload
+            for r, core in enumerate(self.ranks):
+                if r == o:
+                    continue
+                acc += core.params_mgr._records[c].payload
+        for r, core in enumerate(self.ranks):
+            for c in cmap.comm_group_chunk_ids(group):
+                if cmap.chunk_owner(c) != r and cmap.chunk_tensors(c):
+                    core.params_mgr.mark_released(c)
+            core.pool.account_reduce_scatter((self.nproc - 1) * chunk_bytes)
+
+    def advance_prefetch(self, moment: int) -> None:
+        """Called by rank 0's moment cursor: stage upcoming group gathers."""
+        if self.gather_prefetcher is not None:
+            self.gather_prefetcher.advance(moment)
+
+    # ------------------------------------------------------------------ step
+    def _split_batch(self, batch: dict) -> list[dict]:
+        b = int(batch["tokens"].shape[0])
+        if b % self.nproc:
+            raise ValueError(
+                f"batch dim {b} must divide evenly over nproc={self.nproc}")
+        per = b // self.nproc
+
+        def shard(x, r):
+            if hasattr(x, "ndim") and x.ndim >= 1 and x.shape[0] == b:
+                return x[r * per:(r + 1) * per]
+            return x  # scalars (global_tokens) replicate
+
+        return [{k: shard(v, r) for k, v in batch.items()}
+                for r in range(self.nproc)]
+
+    def step(self, batch: dict) -> DistributedStepMetrics:
+        """One lock-step data-parallel iteration: equivalent math to the
+        single-rank engine on the full batch (grads sum across shards,
+        losses carry 1/global_tokens)."""
+        cores = self.ranks
+        shards = self._split_batch(batch)
+        # per-rank ledgers are symmetric by construction; rank 0's delta
+        # is the step's per-rank figure
+        col0 = dataclasses.replace(cores[0].pool.collectives)
+        warmup = cores[0].tracer.warmup
+
+        sts = [core.begin_step(sh) for core, sh in zip(cores, shards)]
+        # ------------------------------------------------------------ forward
+        for core, st in zip(cores, sts):
+            core.forward_embed(st)
+        for g in cores[0].model.groups():
+            for core, st in zip(cores, sts):
+                core.forward_group_start(st, g.name)
+            for i in range(g.length):
+                for core, st in zip(cores, sts):
+                    core.forward_layer(st, g, i)
+        for core, st in zip(cores, sts):
+            core.end_forward(st)
+
+        # ----------------------------------------------------------- backward
+        for core, st in zip(cores, sts):
+            core.begin_backward(st)
+        for idx in range(len(sts[0].saved) - 1, -1, -1):
+            done = [core.backward_layer(st, idx)
+                    for core, st in zip(cores, sts)]
+            # symmetric model + lock-step => identical completion sets
+            assert all(d == done[0] for d in done[1:]), done
+            for grp in done[0]:
+                self.reduce_scatter_group(grp)
+        for core, st in zip(cores, sts):
+            core.backward_embed(st)
+            core.end_backward(st)
+
+        # -------------------------------- stem grad all-reduce (off-plane)
+        total_stem = sts[0].stem_grad
+        for st in sts[1:]:
+            total_stem = jax.tree.map(lambda a, b: a + b, total_stem,
+                                      st.stem_grad)
+        stem_bytes = sum(
+            int(np.prod(x.shape)) * 4 for x in jax.tree.leaves(total_stem))
+        ar_bytes = 2 * (self.nproc - 1) * stem_bytes // self.nproc  # ring
+        for core in cores:
+            core.pool.account_allreduce(ar_bytes)
+
+        # --------------------------------------------------------------- ADAM
+        for core, st in zip(cores, sts):
+            core.adam_chunks(st)
+        cores[0].update_stem(total_stem)
+        for core in cores[1:]:
+            core._stem_np = cores[0]._stem_np  # replicated stem
+
+        mets = [core.end_step(st) for core, st in zip(cores, sts)]
+        if warmup and self.gather_prefetcher is not None:
+            self.gather_prefetcher.install(
+                cores[0].tracer.gather_reference_sequence(self.cmap))
+
+        d0 = self._collective_delta(cores[0].pool.collectives, col0)
+        self.step_count += 1
+        return DistributedStepMetrics(
+            loss=float(sum(m.loss for m in mets)),
+            rank_metrics=mets,
+            allgather_bytes=d0.allgather_bytes,
+            reduce_scatter_bytes=d0.reduce_scatter_bytes,
+            allreduce_bytes=d0.allreduce_bytes,
+            hidden_allgather_bytes=d0.hidden_allgather_bytes,
+            critical_allgather_bytes=d0.critical_allgather_bytes,
+        )
+
+    @staticmethod
+    def _collective_delta(now: CollectiveStats,
+                          before: CollectiveStats) -> CollectiveStats:
+        return CollectiveStats(
+            allgather_bytes=now.allgather_bytes - before.allgather_bytes,
+            reduce_scatter_bytes=(now.reduce_scatter_bytes
+                                  - before.reduce_scatter_bytes),
+            allreduce_bytes=now.allreduce_bytes - before.allreduce_bytes,
+            allgather_count=now.allgather_count - before.allgather_count,
+            reduce_scatter_count=(now.reduce_scatter_count
+                                  - before.reduce_scatter_count),
+            hidden_allgather_bytes=(now.hidden_allgather_bytes
+                                    - before.hidden_allgather_bytes),
+            critical_allgather_bytes=(now.critical_allgather_bytes
+                                      - before.critical_allgather_bytes),
+        )
+
+    # ------------------------------------------------------------- inspection
+    @property
+    def collectives(self) -> list[CollectiveStats]:
+        """Cumulative per-rank collective ledgers."""
+        return [core.pool.collectives for core in self.ranks]
+
+    def check_invariants(self) -> None:
+        for core in self.ranks:
+            core.pool.check_invariants()
+        # exactly one authoritative (owner) replica per payload chunk
+        for c in range(self.cmap.num_chunks):
+            if not self.cmap.chunk_tensors(c):
+                continue
+            o = self.cmap.chunk_owner(c)
+            assert self.ranks[o].params_mgr._records[c].payload is not None, (
+                f"owner rank {o} of chunk {c} has no payload")

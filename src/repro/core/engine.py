@@ -1,9 +1,9 @@
 """PatrickStarEngine — the paper's runtime, eagerly executed.
 
-This is the faithful single-device system of Sections 6 and 8: chunked
-model data managed over a bounded two-tier (device/host) memory space by
-one shared :class:`~repro.core.memory.HeteroMemory` pool (param fp16,
-param fp32, momentum and variance are per-stream
+This is the faithful system of Sections 6-8: chunked model data managed
+over a bounded two-tier (device/host) memory space by one shared
+:class:`~repro.core.memory.HeteroMemory` pool (param fp16, param fp32,
+momentum and variance are per-stream
 :class:`~repro.core.manager.ChunkManager` views of it, so all four
 streams compete for ONE device budget and eviction is cross-stream),
 with
@@ -22,6 +22,16 @@ with
     inside jax.vjp during BWD — the re-COMPUTE transitions that make
     HOLD_AFTER_FWD/BWD states necessary).
 
+The class doubles as the **single-rank core of the distributed plane**
+(Section 7): constructed with ``nproc > 1`` it owns only the chunk shard
+of its ``rank`` (rank r owns chunk ``g*p + r`` of every communication
+group), keeps non-owned chunks in the RELEASED remote lifecycle, and
+delegates chunk-granular all-gather / reduce-scatter to a ``collective``
+(the rank-parallel driver in :mod:`repro.core.distributed`).  ``step()``
+itself is a thin composition of the phase methods (``begin_step`` /
+``forward_layer`` / ``backward_layer`` / ``adam_chunks`` / ``end_step``)
+that the driver interleaves across ranks in lock-step.
+
 On this container the "device" tier is simulated: payloads are numpy
 buffers tagged device/host with byte-capacity enforcement and full
 transfer accounting, so eviction-policy quality and data-movement volume
@@ -33,19 +43,17 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from collections import defaultdict
 from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import dtype_of
 from repro.core.chunk import TensorSpec, build_chunk_map, search_chunk_size
 from repro.core.manager import ChunkManager
 from repro.core.memory import HeteroMemory, SchedulePrefetcher
 from repro.core.placement import PlacementPlan, plan_placement
-from repro.core.state import TensorState
+from repro.core.state import ChunkState, TensorState
 from repro.core.tracer import RuntimeMemoryTracer
 from repro.models.api import Model
 from repro.models.layers import AxisCtx
@@ -73,7 +81,8 @@ class EngineMetrics:
     critical_h2d_bytes: int = 0
     prefetch_hits: int = 0
     demand_misses: int = 0
-    # high-water mark of the unified pool's device tier (cumulative)
+    # high-water mark of the unified pool's device tier THIS step (the
+    # pool keeps the cumulative lifetime mark separately)
     peak_device_bytes: int = 0
 
     @property
@@ -88,6 +97,25 @@ class EngineMetrics:
     def prefetch_hit_rate(self) -> float:
         total = self.prefetch_hits + self.demand_misses
         return self.prefetch_hits / total if total else 0.0
+
+
+@dataclasses.dataclass
+class _StepState:
+    """Mutable per-step context threaded through the phase methods, so a
+    rank-parallel driver can hold one per rank and interleave phases."""
+
+    batch: dict
+    met: EngineMetrics
+    h2d0: int
+    d2h0: int
+    pf0: Any
+    t0: float = 0.0
+    stem: Any = None
+    x: Any = None
+    extras: Any = None
+    saved: list = dataclasses.field(default_factory=list)  # (group, layer, x)
+    gx: Any = None
+    stem_grad: Any = None
 
 
 class PatrickStarEngine:
@@ -109,17 +137,37 @@ class PatrickStarEngine:
         embedding_on_host: bool = True,
         prefetch: bool = True,
         prefetch_lookahead: int = 6,
+        nproc: int = 1,
+        rank: int = 0,
+        collective: "Any | None" = None,
+        init_params: "Any | None" = None,
     ) -> None:
+        if nproc > 1 and collective is None:
+            raise ValueError(
+                "nproc > 1 needs a collective (the rank-parallel driver in "
+                "repro.core.distributed) to fetch remote chunks")
         self.cfg = cfg
         self.ctx = AxisCtx()  # single device, no mesh axes
         self.model: Model = model_cls(cfg, self.ctx)
         self.lr, self.betas, self.eps = lr, betas, eps
         self.device_aware_placement = device_aware_placement
         self.policy = policy
+        self.nproc = nproc
+        self.rank = rank
+        self.collective = collective
 
-        params = self.model.init_params(jax.random.key(seed))
-        # paper 8.2: embedding params are NOT chunk-managed
+        # init_params: the rank-parallel driver initializes ONE tree and
+        # shares it across rank cores (values are COPIED into chunk
+        # payloads below, so sharing the source is safe) instead of
+        # paying nproc full-model inits for bitwise-identical trees.
+        params = init_params if init_params is not None \
+            else self.model.init_params(jax.random.key(seed))
+        # paper 8.2: embedding params are NOT chunk-managed.  Under ZeRO
+        # they stay replicated; their grads all-reduce (outside the
+        # chunked collective plane, counted separately by the driver).
         self._stem_np = jax.tree.map(np.asarray, params["stem"])
+        self._stem_m: list[np.ndarray] | None = None  # ADAM moments (lazy)
+        self._stem_v: list[np.ndarray] | None = None
         self.embedding_on_host = embedding_on_host
 
         # ---- chunk stream over all block-group tensors, model order -----
@@ -142,14 +190,15 @@ class PatrickStarEngine:
 
         specs = [TensorSpec(n, tuple(v.shape)) for n, v in named]
         if chunk_size is None:
-            res = search_chunk_size(specs, nproc=1, align=256)
+            res = search_chunk_size(specs, nproc=nproc, align=256)
             chunk_size = res.chunk_size
-        self.cmap = build_chunk_map(specs, chunk_size, nproc=1)
+        self.cmap = build_chunk_map(specs, chunk_size, nproc=nproc)
 
         # ---- ONE heterogeneous memory space shared by all four streams ----
         # (Sections 6.2, 8): param fp16 (grads reuse its payloads), param
         # fp32, momentum and variance are views of a single pool with a
         # single device budget, so eviction sees cross-stream pressure.
+        # Under nproc > 1 every rank owns its own pool (its own GPU).
         self.pool = HeteroMemory(
             device_capacity_bytes=device_memory_bytes,
             host_capacity_bytes=host_memory_bytes, policy=policy)
@@ -164,13 +213,16 @@ class PatrickStarEngine:
         self.tracer = RuntimeMemoryTracer(
             device_memory_bytes, warmup_chunk_fraction=warmup_chunk_fraction)
         # the chunkable budget must never drop below one operator's working
-        # set: the largest layer's param chunks during FWD/BWD, and the four
-        # per-stream chunks pinned together during one ADAM chunk update
-        # (all are COMPUTE-pinned or refcount-pinned, hence unevictable).
+        # set: the largest layer's param chunks during FWD/BWD (plus, on
+        # the distributed plane, one communication group pinned while its
+        # all-gather is in flight), and the four per-stream chunks pinned
+        # together during one ADAM chunk update (all are COMPUTE-pinned or
+        # refcount-pinned, hence unevictable).
         max_layer_chunks = max(
             len({self.cmap.placement(n).chunk_id for n in layer})
             for layers in self._group_tensor_names.values() for layer in layers)
-        floor = max(max_layer_chunks + 1, 5) * self.params_mgr.chunk_bytes
+        floor = max(max_layer_chunks + max(nproc, 1), 5) \
+            * self.params_mgr.chunk_bytes
         self.pool.set_chunkable_memory_fn(
             lambda: max(self.tracer.chunkable_memory(), floor))
         # schedule-driven prefetcher (installed after the warm-up
@@ -181,8 +233,12 @@ class PatrickStarEngine:
             self.pool, lookahead=prefetch_lookahead) \
             if prefetch and policy == "opt" else None
 
-        # initialize payloads: param fp16 stream + param fp32 copies (host)
+        # initialize payloads: param fp16 stream + param fp32 copies, for
+        # the chunks THIS rank owns (every chunk when nproc == 1); tensors
+        # in non-owned chunks enter the RELEASED remote lifecycle.
         for name, val in named:
+            if self.cmap.chunk_owner(self.cmap.placement(name).chunk_id) != rank:
+                continue
             view = self.params_mgr.access_tensor(name, "host")
             view[...] = np.asarray(val, np.float32)
             self.params_mgr.release_tensor(name, TensorState.HOLD)
@@ -192,6 +248,10 @@ class PatrickStarEngine:
             for s in ("m", "v"):
                 self.os_mgrs[s].access_tensor(name, "host")
                 self.os_mgrs[s].release_tensor(name, TensorState.HOLD)
+        if nproc > 1:
+            for c in range(self.cmap.num_chunks):
+                if self.cmap.chunk_owner(c) != rank and self.cmap.chunk_tensors(c):
+                    self.params_mgr.mark_released(c)
 
         self.step_count = 0
         self.placement: PlacementPlan | None = None
@@ -206,6 +266,26 @@ class PatrickStarEngine:
         # before the operator at this moment runs (their H2D overlaps it)
         if self.prefetcher is not None and not self.tracer.warmup:
             self.prefetcher.advance(m)
+        # the driver's gather prefetcher walks the same moment cursor:
+        # upcoming remote groups are all-gathered ahead of their operator.
+        # Advanced once per lock-step moment from the LAST rank — it runs
+        # each layer after all others, so when its cursor moves every rank
+        # has finished the layer's state transitions and a group is either
+        # fully released everywhere or fully resident (never mixed).
+        if self.collective is not None and self.rank == self.nproc - 1 \
+                and not self.tracer.warmup:
+            self.collective.advance_prefetch(m)
+
+    def _fetch_layer_groups(self, gname: str, layer: int) -> None:
+        """Demand half of Algorithm 1 line 12: any chunk of this layer
+        still in the RELEASED remote lifecycle pulls in its whole
+        communication group by all-gather before the operator runs."""
+        if self.collective is None:
+            return
+        for n in self._group_tensor_names[gname][layer]:
+            chunk_id = self.cmap.placement(n).chunk_id
+            if self.params_mgr.chunk_state(chunk_id) is ChunkState.RELEASED:
+                self.collective.fetch_group(self.cmap.comm_group(chunk_id))
 
     def _access_layer(self, gname: str, layer: int, mgr: ChunkManager,
                       dev: str, record: bool = True):
@@ -227,80 +307,215 @@ class PatrickStarEngine:
         for n in names:
             mgr.release_tensor(n, state)
 
-    # ------------------------------------------------------------------ step
-    def step(self, batch: dict) -> EngineMetrics:
-        met = EngineMetrics()
-        mgr = self.params_mgr
-        h2d0, d2h0 = self.pool.stats.h2d_bytes, self.pool.stats.d2h_bytes
-        pf0 = dataclasses.replace(self.pool.prefetch)
+    def _groups_completing(self, gname: str, layer: int,
+                           state: TensorState) -> list[int]:
+        """Communication groups this layer touches whose every tensor has
+        now reached ``state`` (Algorithm 2's post-FWD/BWD group check)."""
+        groups = sorted({
+            self.cmap.tensor_comm_group(n)
+            for n in self._group_tensor_names[gname][layer]})
+        return [g for g in groups
+                if self.params_mgr.comm_group_state_complete(g, state)]
+
+    def _release_remote_of_group(self, group: int) -> None:
+        """Algorithm 1 line 18: after the group's post-FWD transition the
+        non-owned chunk replicas are dropped back to RELEASED."""
+        for c in self.cmap.comm_group_chunk_ids(group):
+            if self.cmap.chunk_owner(c) != self.rank and self.cmap.chunk_tensors(c):
+                self.params_mgr.mark_released(c)
+
+    # ------------------------------------------------------------ step phases
+    # step() composes these in order; the rank-parallel driver interleaves
+    # them across ranks in lock-step (layer granularity), inserting the
+    # collectives at communication-group boundaries.
+
+    def begin_step(self, batch: dict) -> _StepState:
         self.tracer.begin_iteration()
-        cdtype = dtype_of(self.cfg.compute_dtype)
+        return _StepState(
+            batch=batch, met=EngineMetrics(),
+            h2d0=self.pool.stats.h2d_bytes, d2h0=self.pool.stats.d2h_bytes,
+            pf0=dataclasses.replace(self.pool.prefetch))
 
-        # ---------------------------------------------------------- forward
-        t0 = time.perf_counter()
-        stem = jax.tree.map(jnp.asarray, self._stem_np)
-        x, extras = self.model.embed(stem, batch)
-        self._live_activation_bytes += x.size * x.dtype.itemsize
-        saved: list[tuple[str, int, Any]] = []  # (group, layer, input x)
-        for g in self.model.groups():
-            x, extras = self.model.between_groups(g.name, x, extras, stem, batch)
-            for i in range(g.length):
-                self._moment(f"{g.name}.{i}", "FWD")
-                names, ptree = self._access_layer(g.name, i, mgr, "device")
-                saved.append((g.name, i, x))
-                x, _aux = g.apply(ptree, x, extras, self.ctx)
-                self._live_activation_bytes += x.size * x.dtype.itemsize
-                self._release_layer(names, mgr, TensorState.HOLD_AFTER_FWD)
-                self._moment(f"{g.name}.{i}.end", "FWD")
-        met.fwd_s = time.perf_counter() - t0
+    def forward_embed(self, st: _StepState) -> None:
+        st.t0 = time.perf_counter()
+        st.stem = jax.tree.map(jnp.asarray, self._stem_np)
+        st.x, st.extras = self.model.embed(st.stem, st.batch)
+        self._live_activation_bytes += st.x.size * st.x.dtype.itemsize
 
-        # --------------------------------------------------------- backward
-        t0 = time.perf_counter()
-        # reset param states to HOLD before BWD (Section 6.2)
-        mgr.reset_states(TensorState.HOLD)
+    def forward_group_start(self, st: _StepState, gname: str) -> None:
+        st.x, st.extras = self.model.between_groups(
+            gname, st.x, st.extras, st.stem, st.batch)
+
+    def forward_layer(self, st: _StepState, g, i: int) -> None:
+        self._moment(f"{g.name}.{i}", "FWD")
+        self._fetch_layer_groups(g.name, i)
+        names, ptree = self._access_layer(g.name, i, self.params_mgr, "device")
+        st.saved.append((g.name, i, st.x))
+        st.x, _aux = g.apply(ptree, st.x, st.extras, self.ctx)
+        self._live_activation_bytes += st.x.size * st.x.dtype.itemsize
+        self._release_layer(names, self.params_mgr, TensorState.HOLD_AFTER_FWD)
+        # distributed: a communication group whose every tensor is now
+        # HOLD_AFTER_FWD is done with forward — remote replicas released
+        # (purely local bookkeeping, no collective)
+        if self.nproc > 1:
+            for grp in self._groups_completing(
+                    g.name, i, TensorState.HOLD_AFTER_FWD):
+                self._release_remote_of_group(grp)
+        self._moment(f"{g.name}.{i}.end", "FWD")
+
+    def end_forward(self, st: _StepState) -> None:
+        st.met.fwd_s = time.perf_counter() - st.t0
+
+    def begin_backward(self, st: _StepState) -> None:
+        st.t0 = time.perf_counter()
+        # reset param states to HOLD before BWD (Section 6.2); RELEASED
+        # remote replicas stay released until their group is re-gathered
+        self.params_mgr.reset_states(TensorState.HOLD)
         loss, head_vjp = jax.vjp(
-            lambda s, xx: self.model.head_loss(s, xx, batch), stem, x)
-        met.loss = float(loss)
-        stem_grad, gx = head_vjp(jnp.float32(1.0))
-        grads_np: dict[str, np.ndarray] = {}
-        groups = list(self.model.groups())
-        for g, i, x_in in reversed(saved):
-            grp = next(gg for gg in groups if gg.name == g)
-            self._moment(f"{g}.{i}", "BWD")
-            names, ptree = self._access_layer(g, i, mgr, "device")
-            # activation checkpointing: recompute fwd inside vjp
-            _, vjp_fn = jax.vjp(
-                lambda p, xx: grp.apply(p, xx, extras, self.ctx)[0], ptree, x_in)
-            gp, gx = vjp_fn(gx)
-            # grad fp16 reuses the param fp16 chunk payload (Fig. 6):
-            # after BWD of this operator the param values are overwritten.
-            for n, gleaf in _leaves_with_names(gp, f"{g}.{i}"):
-                view = mgr.tensor_view(n)
-                view[...] = np.asarray(gleaf, np.float32)
-            self._release_layer(names, mgr, TensorState.HOLD_AFTER_BWD)
-            self._live_activation_bytes -= max(x_in.size * x_in.dtype.itemsize, 0)
-            self._moment(f"{g}.{i}.end", "BWD")
-        met.bwd_s = time.perf_counter() - t0
-        met.h2d_bytes = self.pool.stats.h2d_bytes - h2d0
-        met.d2h_bytes = self.pool.stats.d2h_bytes - d2h0
+            lambda s, xx: self.model.head_loss(s, xx, st.batch), st.stem, st.x)
+        st.met.loss = float(loss)
+        st.stem_grad, st.gx = head_vjp(jnp.float32(1.0))
 
-        # ------------------------------------------------------------- ADAM
-        t0 = time.perf_counter()
+    def backward_layer(self, st: _StepState, idx: int) -> list[int]:
+        """Run BWD for ``st.saved[idx]``; returns the communication groups
+        that completed HOLD_AFTER_BWD on this rank (the driver
+        reduce-scatters them once every rank has finished the layer)."""
+        g, i, x_in = st.saved[idx]
+        grp = next(gg for gg in self.model.groups() if gg.name == g)
+        self._moment(f"{g}.{i}", "BWD")
+        self._fetch_layer_groups(g, i)
+        names, ptree = self._access_layer(g, i, self.params_mgr, "device")
+        # activation checkpointing: recompute fwd inside vjp
+        _, vjp_fn = jax.vjp(
+            lambda p, xx: grp.apply(p, xx, st.extras, self.ctx)[0], ptree, x_in)
+        gp, st.gx = vjp_fn(st.gx)
+        # grad fp16 reuses the param fp16 chunk payload (Fig. 6): after
+        # BWD of this operator the param values are overwritten (on every
+        # rank — each replica now carries that rank's grad contribution,
+        # which is exactly what the reduce-scatter sums onto the owner).
+        for n, gleaf in _leaves_with_names(gp, f"{g}.{i}"):
+            view = self.params_mgr.tensor_view(n)
+            view[...] = np.asarray(gleaf, np.float32)
+        self._release_layer(names, self.params_mgr, TensorState.HOLD_AFTER_BWD)
+        self._live_activation_bytes -= max(x_in.size * x_in.dtype.itemsize, 0)
+        done = self._groups_completing(g, i, TensorState.HOLD_AFTER_BWD) \
+            if self.nproc > 1 else []
+        self._moment(f"{g}.{i}.end", "BWD")
+        return done
+
+    def backward_embed(self, st: _StepState) -> None:
+        """Close the gradient path through the embedding: the head vjp in
+        :meth:`begin_backward` only covers final-norm + LM head, and the
+        layer loop ends with ``gx = d loss / d x_embed`` — without this
+        vjp the embedding table would never see that contribution (and the
+        eager trajectory would drift from the compiled runtime's, whose
+        autodiff spans the whole step).  Exact when ``between_groups`` is
+        the identity (every current eager-engine model)."""
+        _, embed_vjp = jax.vjp(
+            lambda s: self.model.embed(s, st.batch)[0], st.stem)
+        (emb_grad,) = embed_vjp(st.gx)
+        st.stem_grad = jax.tree.map(jnp.add, st.stem_grad, emb_grad)
+
+    def end_backward(self, st: _StepState) -> None:
+        st.met.bwd_s = time.perf_counter() - st.t0
+        st.met.h2d_bytes = self.pool.stats.h2d_bytes - st.h2d0
+        st.met.d2h_bytes = self.pool.stats.d2h_bytes - st.d2h0
+
+    def adam_chunks(self, st: _StepState) -> None:
+        """Chunked ADAM over the chunks THIS rank owns (Section 7: "the
+        ADAM stage is executed locally" — after the reduce-scatter the
+        owner's grad chunk already holds the cross-rank sum)."""
+        st.t0 = time.perf_counter()
         a_h2d0, a_d2h0 = self.pool.stats.h2d_bytes, self.pool.stats.d2h_bytes
-        self._adam(stem_grad)
-        met.adam_h2d_bytes = self.pool.stats.h2d_bytes - a_h2d0
-        met.adam_d2h_bytes = self.pool.stats.d2h_bytes - a_d2h0
-        met.adam_s = time.perf_counter() - t0
+        b1, b2 = self.betas
+        t = self.step_count + 1
+        bc1 = 1.0 - b1**t
+        bc2 = 1.0 - b2**t
+        dev_groups = self.placement.os_device_groups if self.placement else 0
+        for g_idx in range(self.cmap.num_comm_groups):
+            # device-aware operator placement: first `dev_groups` OS chunk
+            # groups update on device (margin space), the rest on host
+            comp_dev = "device" if g_idx < dev_groups else "host"
+            for chunk_id in self.cmap.comm_group_chunk_ids(g_idx):
+                if self.nproc > 1 and self.cmap.chunk_owner(chunk_id) != self.rank:
+                    continue
+                if not self.cmap.chunk_tensors(chunk_id):
+                    continue
+                self._adam_chunk(chunk_id, comp_dev, bc1, bc2)
+        st.met.adam_h2d_bytes = self.pool.stats.h2d_bytes - a_h2d0
+        st.met.adam_d2h_bytes = self.pool.stats.d2h_bytes - a_d2h0
+        st.met.adam_s = time.perf_counter() - st.t0
 
-        # ------------------------------------- overlap / prefetch accounting
+    def _adam_chunk(self, chunk_id: int, comp_dev: str,
+                    bc1: float, bc2: float) -> None:
+        b1, b2 = self.betas
+        self._moment(f"adam.{chunk_id}", "ADAM")
+        if self.tracer.warmup:
+            for s in ("param", "p32", "m", "v"):
+                self.tracer.record_chunk_use(chunk_id, stream=s, dev=comp_dev)
+        # grad chunk (reusing param chunk payload) converted fp32 on the
+        # fly on the computing device; all four streams' chunks must
+        # co-reside for the update, so pin them — the shared pool would
+        # otherwise be free to evict the earlier ones while admitting the
+        # later ones.
+        quad = [self.params_mgr, self.os_mgrs["p32"],
+                self.os_mgrs["m"], self.os_mgrs["v"]]
+        pinned = []
+        try:
+            payloads = []
+            for smgr in quad:
+                payloads.append(smgr.prepare_payload(chunk_id, comp_dev))
+                smgr.pin(chunk_id)
+                pinned.append(smgr)
+            grad_payload, p32, m, v = payloads
+            g = grad_payload
+            m[...] = b1 * m + (1 - b1) * g
+            v[...] = b2 * v + (1 - b2) * g * g
+            upd = (m / bc1) / (np.sqrt(v / bc2) + self.eps)
+            p32[...] = p32 - self.lr * upd
+            # updated param fp32 copied back into the param chunk
+            grad_payload[...] = p32
+        finally:
+            for smgr in pinned:
+                smgr.unpin(chunk_id)
+        for tn in self.cmap.chunk_tensors(chunk_id):
+            self.params_mgr.force_tensor_state(tn.name, TensorState.HOLD)
+
+    def update_stem(self, stem_grad) -> None:
+        """Stem (embedding + norms) update on its own device — real ADAM
+        with per-leaf moments, the same hyperparameters and bias
+        correction as the chunked streams (not the SGD shortcut: the two
+        paths must optimize consistently)."""
+        b1, b2 = self.betas
+        t = self.step_count + 1
+        bc1 = 1.0 - b1**t
+        bc2 = 1.0 - b2**t
+        leaves, treedef = jax.tree_util.tree_flatten(self._stem_np)
+        gleaves = jax.tree_util.tree_leaves(stem_grad)
+        if self._stem_m is None:
+            self._stem_m = [np.zeros_like(p, dtype=np.float32) for p in leaves]
+            self._stem_v = [np.zeros_like(p, dtype=np.float32) for p in leaves]
+        new = []
+        for i, (p, gv) in enumerate(zip(leaves, gleaves)):
+            g = np.asarray(gv, np.float32)
+            self._stem_m[i] = b1 * self._stem_m[i] + (1 - b1) * g
+            self._stem_v[i] = b2 * self._stem_v[i] + (1 - b2) * g * g
+            upd = (self._stem_m[i] / bc1) / (
+                np.sqrt(self._stem_v[i] / bc2) + self.eps)
+            new.append(np.asarray(p - self.lr * upd, dtype=p.dtype))
+        self._stem_np = jax.tree_util.tree_unflatten(treedef, new)
+
+    def end_step(self, st: _StepState) -> EngineMetrics:
+        met = st.met
+        # ----------------------------------- overlap / prefetch accounting
         pf = self.pool.prefetch
-        met.hidden_h2d_bytes = pf.hidden_h2d_bytes - pf0.hidden_h2d_bytes
-        met.critical_h2d_bytes = pf.critical_h2d_bytes - pf0.critical_h2d_bytes
-        met.prefetch_hits = pf.hits - pf0.hits
-        met.demand_misses = pf.demand_misses - pf0.demand_misses
-        met.peak_device_bytes = self.pool.peak_device_bytes
+        met.hidden_h2d_bytes = pf.hidden_h2d_bytes - st.pf0.hidden_h2d_bytes
+        met.critical_h2d_bytes = pf.critical_h2d_bytes - st.pf0.critical_h2d_bytes
+        met.prefetch_hits = pf.hits - st.pf0.hits
+        met.demand_misses = pf.demand_misses - st.pf0.demand_misses
+        met.peak_device_bytes = self.pool.take_step_peak_device_bytes()
 
-        # ------------------------------------------------- end of iteration
+        # ----------------------------------------------- end of iteration
         self._live_activation_bytes = 0
         if self.tracer.warmup:
             self.tracer.end_warmup()
@@ -325,57 +540,25 @@ class PatrickStarEngine:
         self.step_count += 1
         return met
 
-    # ------------------------------------------------------------------ adam
-    def _adam(self, stem_grad) -> None:
-        b1, b2 = self.betas
-        t = self.step_count + 1
-        bc1 = 1.0 - b1**t
-        bc2 = 1.0 - b2**t
-        dev_groups = self.placement.os_device_groups if self.placement else 0
-        for g_idx in range(self.cmap.num_comm_groups):
-            # device-aware operator placement: first `dev_groups` OS chunk
-            # groups update on device (margin space), the rest on host
-            comp_dev = "device" if g_idx < dev_groups else "host"
-            for chunk_id in self.cmap.comm_group_chunk_ids(g_idx):
-                tensors = self.cmap.chunk_tensors(chunk_id)
-                if not tensors:
-                    continue
-                self._moment(f"adam.{chunk_id}", "ADAM")
-                if self.tracer.warmup:
-                    for s in ("param", "p32", "m", "v"):
-                        self.tracer.record_chunk_use(chunk_id, stream=s,
-                                                     dev=comp_dev)
-                # grad chunk (reusing param chunk payload) converted fp32
-                # on the fly on the computing device; all four streams'
-                # chunks must co-reside for the update, so pin them — the
-                # shared pool would otherwise be free to evict the earlier
-                # ones while admitting the later ones.
-                quad = [self.params_mgr, self.os_mgrs["p32"],
-                        self.os_mgrs["m"], self.os_mgrs["v"]]
-                pinned = []
-                try:
-                    payloads = []
-                    for smgr in quad:
-                        payloads.append(smgr.prepare_payload(chunk_id, comp_dev))
-                        smgr.pin(chunk_id)
-                        pinned.append(smgr)
-                    grad_payload, p32, m, v = payloads
-                    g = grad_payload
-                    m[...] = b1 * m + (1 - b1) * g
-                    v[...] = b2 * v + (1 - b2) * g * g
-                    upd = (m / bc1) / (np.sqrt(v / bc2) + self.eps)
-                    p32[...] = p32 - self.lr * upd
-                    # updated param fp32 copied back into the param chunk
-                    grad_payload[...] = p32
-                finally:
-                    for smgr in pinned:
-                        smgr.unpin(chunk_id)
-                for tn in tensors:
-                    self.params_mgr.force_tensor_state(tn.name, TensorState.HOLD)
-        # stem (embedding + norms) updates in place on its own device
-        self._stem_np = jax.tree.map(
-            lambda p, g: np.asarray(p - self.lr * np.asarray(g, np.float32)),
-            self._stem_np, stem_grad)
+    # ------------------------------------------------------------------ step
+    def step(self, batch: dict) -> EngineMetrics:
+        """One fused FWD+BWD+ADAM iteration (single-rank composition of
+        the phase methods above)."""
+        st = self.begin_step(batch)
+        self.forward_embed(st)
+        for g in self.model.groups():
+            self.forward_group_start(st, g.name)
+            for i in range(g.length):
+                self.forward_layer(st, g, i)
+        self.end_forward(st)
+        self.begin_backward(st)
+        for idx in range(len(st.saved) - 1, -1, -1):
+            self.backward_layer(st, idx)
+        self.backward_embed(st)
+        self.end_backward(st)
+        self.adam_chunks(st)
+        self.update_stem(st.stem_grad)
+        return self.end_step(st)
 
     # -------------------------------------------------------------- placement
     def _plan_placement(self) -> None:
@@ -386,11 +569,14 @@ class PatrickStarEngine:
         working = sum(
             int(np.prod(self.cmap.placement(n).shape)) * 4 for n in layer0)
         margin = self.tracer.margin_space(working * 2)
+        # per-rank model bytes: this rank owns 1 chunk of each group's
+        # nproc, so both the OS "local group" unit (3 fp32 chunks) and the
+        # local param-fp16 bytes scale by 1/nproc.
         self.placement = plan_placement(
             margin_bytes=margin,
             num_local_groups=self.cmap.num_comm_groups,
             chunk_size_elems=self.cmap.chunk_size,
-            param_fp16_local_bytes=self.cmap.capacity * 4,
+            param_fp16_local_bytes=self.cmap.capacity * 4 // max(self.nproc, 1),
             device_total_bytes=self.tracer.device_total_bytes,
             peak_nonmodel_bytes=self.tracer.peak_nonmodel_bytes,
             vocab_size=self.cfg.vocab_size, hidden=self.cfg.d_model,

@@ -111,6 +111,7 @@ class ChunkManager:
         # incremental per-chunk state tallies -> O(1) chunk_state
         self._chunk_compute: Counter[int] = Counter()
         self._chunk_hold: Counter[int] = Counter()
+        self._chunk_released: Counter[int] = Counter()
         # incremental per-stream tier usage (pool keeps the global sums)
         self._device_used = 0
         self._host_used = 0
@@ -146,6 +147,8 @@ class ChunkManager:
             return ChunkState.COMPUTE
         if self._chunk_hold[chunk_id] > 0:
             return ChunkState.HOLD
+        if self._chunk_released[chunk_id] > 0:
+            return ChunkState.RELEASED
         return ChunkState.FREE
 
     def _set_state(self, name: str, new: TensorState) -> None:
@@ -156,10 +159,14 @@ class ChunkManager:
         chunk_id = self.cmap.placement(name).chunk_id
         if old is TensorState.COMPUTE:
             self._chunk_compute[chunk_id] -= 1
+        elif old is TensorState.RELEASED:
+            self._chunk_released[chunk_id] -= 1
         elif old is not TensorState.FREE:
             self._chunk_hold[chunk_id] -= 1
         if new is TensorState.COMPUTE:
             self._chunk_compute[chunk_id] += 1
+        elif new is TensorState.RELEASED:
+            self._chunk_released[chunk_id] += 1
         elif new is not TensorState.FREE:
             self._chunk_hold[chunk_id] += 1
         self._tensor_state[name] = new
@@ -181,8 +188,17 @@ class ChunkManager:
         """Algorithm 1 (single-process part): bring the tensor's chunk to
         ``comp_dev``, mark the tensor COMPUTE, return a view of its payload."""
         p = self.cmap.placement(name)
-        rec = self.pool.ensure_on(self, p.chunk_id, comp_dev)
         old = self._tensor_state[name]
+        if old is TensorState.RELEASED:
+            # zero-filling a remote parameter would corrupt the model; the
+            # engine must run the group's all-gather (Algorithm 1 line 12)
+            # before any of its tensors enters COMPUTE.
+            raise RuntimeError(
+                f"tensor {name}: chunk {p.chunk_id} is RELEASED (owned by "
+                f"rank {self.cmap.chunk_owner(p.chunk_id)}); fetch the "
+                f"communication group by all-gather before accessing it"
+            )
+        rec = self.pool.ensure_on(self, p.chunk_id, comp_dev)
         check_transition(old, TensorState.COMPUTE)
         self._set_state(name, TensorState.COMPUTE)
         view = rec.payload[p.offset : p.offset + p.numel]
@@ -203,9 +219,12 @@ class ChunkManager:
         self._set_state(name, target_state)
 
     def reset_states(self, target: TensorState = TensorState.HOLD) -> None:
-        """Reset all non-FREE tensors (e.g. to HOLD before BWD, Section 6.2)."""
+        """Reset all resident tensors (e.g. to HOLD before BWD, Section
+        6.2).  FREE and RELEASED tensors hold no local payload and keep
+        their state — a remote chunk stays released until its group is
+        re-fetched."""
         for name, s in self._tensor_state.items():
-            if s is not TensorState.FREE:
+            if not s.is_payload_free:
                 check_transition(s, target)
                 self._set_state(name, target)
 
@@ -239,6 +258,42 @@ class ChunkManager:
         for p in self.cmap.chunk_tensors(chunk_id):
             self._set_state(p.name, TensorState.FREE)
         self.pool.release_payload(self, chunk_id)
+
+    # ------------------------------------------- remote chunks (Section 7)
+    def mark_released(self, chunk_id: int) -> None:
+        """Enter the remote lifecycle: drop the local replica's payload and
+        put every tensor of the chunk in RELEASED (Algorithm 1 line 18 /
+        Algorithm 2 line 14 — after the group's post-FWD/BWD transition,
+        and at init for chunks this rank does not own)."""
+        for p in self.cmap.chunk_tensors(chunk_id):
+            check_transition(self._tensor_state[p.name], TensorState.RELEASED)
+            self._set_state(p.name, TensorState.RELEASED)
+        self.pool.release_payload(self, chunk_id)
+
+    def materialize_chunk(self, chunk_id: int, comp_dev: Device = "device",
+                          pin: bool = False) -> np.ndarray:
+        """All-gather landing pad: allocate the chunk's payload on
+        ``comp_dev`` (evicting through the pool like any admission — the
+        pool books no H2D, materialization moves no tier bytes) and move
+        its tensors RELEASED -> HOLD.  The caller copies the owner's bytes
+        in and accounts the collective.  ``pin`` holds the chunk resident
+        while the collective is in flight (Algorithm 1 line 12)."""
+        rec = self.pool.ensure_on(self, chunk_id, comp_dev)
+        if pin:
+            self.pin(chunk_id)
+        for p in self.cmap.chunk_tensors(chunk_id):
+            if self._tensor_state[p.name] is TensorState.RELEASED:
+                self._set_state(p.name, TensorState.HOLD)
+        return rec.payload
+
+    def comm_group_state_complete(self, group: int, state: TensorState) -> bool:
+        """Algorithm 2's group-complete query: True iff every tensor of
+        every chunk in communication group ``group`` is in ``state``
+        (padding chunks vacuously complete, empty groups are not)."""
+        tensors = self.cmap.comm_group_tensors(group)
+        if not tensors:
+            return False
+        return all(self._tensor_state[p.name] is state for p in tensors)
 
     # --------------------------------------------------------------- internals
     def _maybe_release_chunk(self, chunk_id: int) -> None:

@@ -47,6 +47,14 @@ chunk, evict a HOLD-like, unpinned chunk of *any* stream.  Policies:
 
 Chunks in COMPUTE state or explicitly pinned (collective communication in
 flight, Algorithm 1 lines 12/18) are never evicted.
+
+On the distributed plane (Section 7) every rank owns one of these pools;
+:class:`CollectiveStats` sits alongside :class:`TransferStats` as the
+rank's cross-rank ledger (all-gather fetches of remote chunks, grad
+reduce-scatter, the stem all-reduce), and :class:`GatherPrefetcher` is
+the collective analogue of :class:`SchedulePrefetcher` — it stages
+upcoming remote-group all-gathers instead of H2D copies, with the same
+hidden/critical split.
 """
 
 from __future__ import annotations
@@ -86,6 +94,50 @@ class TransferStats:
     def reset(self) -> None:
         self.h2d_bytes = self.d2h_bytes = 0
         self.h2d_count = self.d2h_count = 0
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    """Cross-rank communication ledger of one rank's pool (Section 7).
+
+    Sits alongside :class:`TransferStats` (H2D/D2H is the *offload* plane,
+    collectives are the *inter-process* plane): ``allgather_bytes`` counts
+    bytes this rank RECEIVES fetching remote chunks ((p-1) chunks per
+    communication group, padding included — exactly what a tiled
+    ``lax.all_gather`` of the [G, p, S] store moves), and
+    ``reduce_scatter_bytes`` counts grad bytes this rank SENDS to chunk
+    owners ((p-1) non-owned chunks per group).  Both conventions make a
+    rank's per-step total equal the paper's analytic 3(p-1)/p * M model
+    (asserted in benchmarks/comm_volume.py).  ``allreduce_bytes`` tracks
+    the stem (embedding/norm) grad all-reduce, which the paper keeps
+    OUTSIDE chunk management (Section 8.2) — kept in a separate counter so
+    the chunked-volume parity stays exact.  Like H2D bytes, all-gather
+    bytes are split hidden (staged ahead by the gather prefetcher,
+    overlappable) vs critical-path (a demand fetch the operator waits on).
+    """
+
+    allgather_bytes: int = 0
+    reduce_scatter_bytes: int = 0
+    allreduce_bytes: int = 0
+    allgather_count: int = 0
+    reduce_scatter_count: int = 0
+    hidden_allgather_bytes: int = 0
+    critical_allgather_bytes: int = 0
+
+    @property
+    def chunk_collective_bytes(self) -> int:
+        """Chunked-plane volume (the analytic model's 3(p-1)/p * M)."""
+        return self.allgather_bytes + self.reduce_scatter_bytes
+
+    @property
+    def total_bytes(self) -> int:
+        return self.chunk_collective_bytes + self.allreduce_bytes
+
+    def reset(self) -> None:
+        self.allgather_bytes = self.reduce_scatter_bytes = 0
+        self.allreduce_bytes = 0
+        self.allgather_count = self.reduce_scatter_count = 0
+        self.hidden_allgather_bytes = self.critical_allgather_bytes = 0
 
 
 @dataclasses.dataclass
@@ -137,10 +189,13 @@ class HeteroMemory:
         self.policy: EvictionPolicy = policy
         self.stats = TransferStats()  # unified, all streams
         self.prefetch = PrefetchStats()
+        # cross-rank communication ledger (all zeros for single-rank pools)
+        self.collectives = CollectiveStats()
         self._streams: dict[str, "ChunkManager"] = {}
         self._device_used = 0
         self._host_used = 0
-        self.peak_device_bytes = 0
+        self.peak_device_bytes = 0  # cumulative (lifetime) high-water mark
+        self._step_peak_device_bytes = 0  # high-water mark since last take_
         # clock advances on every access; used by LRU/FIFO and as the
         # "moment" cursor for OPT when no tracer moments are registered.
         self._clock = 0
@@ -177,6 +232,8 @@ class HeteroMemory:
             mgr._device_used += nbytes
             if self._device_used > self.peak_device_bytes:
                 self.peak_device_bytes = self._device_used
+            if self._device_used > self._step_peak_device_bytes:
+                self._step_peak_device_bytes = self._device_used
         else:
             self._host_used += nbytes
             mgr._host_used += nbytes
@@ -188,6 +245,14 @@ class HeteroMemory:
         else:
             self._host_used -= nbytes
             mgr._host_used -= nbytes
+
+    def take_step_peak_device_bytes(self) -> int:
+        """Device-tier high-water mark since the previous call, then re-arm
+        at the *current* usage — per-step (not cumulative) peak, so
+        benchmarks see per-phase pressure instead of a monotone max."""
+        peak = self._step_peak_device_bytes
+        self._step_peak_device_bytes = self._device_used
+        return peak
 
     def check_invariants(self) -> None:
         """Recompute usage from the records and compare with the O(1)
@@ -215,6 +280,27 @@ class HeteroMemory:
         if self.device_capacity is not None:
             assert self._device_used <= self.device_capacity, (
                 self._device_used, self.device_capacity)
+
+    # ------------------------------------------------------------ collectives
+    def account_allgather(self, nbytes: int, *, hidden: bool = False) -> None:
+        """Book bytes this rank received in a chunk-group all-gather.
+        ``hidden`` marks a prefetcher-staged gather (overlappable), else
+        the fetch is on the consuming operator's critical path."""
+        self.collectives.allgather_bytes += nbytes
+        self.collectives.allgather_count += 1
+        if hidden:
+            self.collectives.hidden_allgather_bytes += nbytes
+        else:
+            self.collectives.critical_allgather_bytes += nbytes
+
+    def account_reduce_scatter(self, nbytes: int) -> None:
+        """Book grad bytes this rank sent to chunk owners (Algorithm 2)."""
+        self.collectives.reduce_scatter_bytes += nbytes
+        self.collectives.reduce_scatter_count += 1
+
+    def account_allreduce(self, nbytes: int) -> None:
+        """Book non-chunk (stem) grad all-reduce bytes."""
+        self.collectives.allreduce_bytes += nbytes
 
     # -------------------------------------------------------------- schedule
     def register_moments(self, stream: str, moments: dict[int, list[int]]) -> None:
@@ -531,3 +617,59 @@ class SchedulePrefetcher:
             if self.pool.stage(stream, chunk_id):
                 staged += 1
         return staged
+
+
+class GatherPrefetcher:
+    """Schedule-driven staging of upcoming remote-group *all-gathers*.
+
+    The distributed eager plane has a second kind of fetch the paper
+    overlaps with compute (Section 7 / Fig. 9): a chunk whose owner is a
+    remote rank arrives by collective, not by H2D.  After warm-up, the
+    tracer's reference sequence tells us which communication group every
+    upcoming operator reads, so the driver can issue the group's
+    all-gather ahead of the consuming operator — those bytes are booked
+    *hidden* in :class:`CollectiveStats`, while demand gathers triggered
+    inside an access are *critical-path*.  ``fetch_group(group)`` is the
+    driver's collective (it must return True iff a gather actually ran;
+    resident groups return False and don't count against the in-flight
+    cap)."""
+
+    def __init__(
+        self,
+        fetch_group: Callable[[int], bool],
+        *,
+        lookahead: int = 2,
+        max_inflight: int = 1,
+    ) -> None:
+        self.fetch_group = fetch_group
+        self.lookahead = lookahead
+        # a staged gather materializes (p-1)/p of a whole group on every
+        # rank at once, so in-flight gathers are capped much tighter than
+        # in-flight H2D stages.
+        self.max_inflight = max_inflight
+        self._moments: list[int] = []
+        self._refs: list[tuple[int, int]] = []
+
+    @property
+    def installed(self) -> bool:
+        return bool(self._refs)
+
+    def install(self, group_refs: Iterable[tuple[int, int]]) -> None:
+        """``group_refs``: (moment, comm_group) of one whole iteration —
+        one entry per (moment, group), already deduplicated."""
+        self._refs = sorted(set(group_refs))
+        self._moments = [m for m, _ in self._refs]
+
+    def advance(self, moment: int) -> int:
+        """Gather upcoming remote groups; returns how many gathers ran."""
+        if not self._refs or self.lookahead <= 0:
+            return 0
+        lo = bisect.bisect_right(self._moments, moment)
+        hi = bisect.bisect_right(self._moments, moment + self.lookahead)
+        fetched = 0
+        for _m, group in self._refs[lo:hi]:
+            if fetched >= self.max_inflight:
+                break
+            if self.fetch_group(group):
+                fetched += 1
+        return fetched

@@ -162,6 +162,28 @@ class RuntimeMemoryTracer:
                     per[c] = sorted(per.get(c, []) + list(hosted[c]))
         return out
 
+    def gather_reference_sequence(
+        self, cmap, stream: str = "param",
+        phases: tuple[str, ...] = ("FWD", "BWD"),
+    ) -> list[tuple[int, int]]:
+        """Deduplicated (moment, comm_group) pairs of one iteration — the
+        schedule the distributed driver's gather prefetcher walks: at
+        every lock-step moment, the next upcoming *remote-group
+        all-gathers* can be issued ahead of the operator that reads them.
+
+        ADAM moments are excluded by default on purpose: the ADAM stage is
+        local to chunk owners (Section 7), so a post-reduce-scatter
+        reference must never re-gather a group that was just released."""
+        phase_of = {m.index: m.phase for m in self.moments}
+        per = self.stream_chunk_moments.get(stream, {})
+        refs = {
+            (mm, cmap.comm_group(c))
+            for c, ms in per.items()
+            for mm in ms
+            if phase_of.get(mm) in phases
+        }
+        return sorted(refs)
+
     def reference_sequence(
         self, schedules: "dict[str, dict[int, list[int]]] | None" = None
     ) -> list[tuple[int, str, int]]:

@@ -230,19 +230,30 @@ def merge_groups(dev: jax.Array, host: jax.Array) -> jax.Array:
 # ---------------------------------------------------------------------------
 
 
-def comm_volume_bytes(layout: ChunkLayout, *, itemsize: int = 2) -> dict[str, float]:
+def comm_volume_bytes(layout, *, itemsize: int = 2) -> dict[str, float]:
     """The paper's analytic inter-GPU volume per iteration.
 
     chunked (PatrickStar):  2 all-gathers (FWD+BWD) + 1 reduce-scatter
        = 3 * (p-1)/p * 2M = 6(p-1)/p * M bytes (fp16/bf16)
     broadcast (ZeRO-Offload): 2 broadcasts at 2*(p-1)/p*2M each counted on
        the root's link + all-reduce-style grad path = 10(p-1)/p * M.
+
+    ``layout`` may be a :class:`ChunkLayout` or an eager-plane
+    :class:`~repro.core.chunk.ChunkTensorMap` (both expose ``nproc``,
+    ``payload_elems`` and ``capacity``).  ``chunked_capacity_bytes`` is
+    the same 3(p-1)/p model over the padded chunk-store capacity — what
+    chunk-granular collectives *actually* move (a tiled ``all_gather`` of
+    the [G, p, S] store carries padding too); the eager distributed
+    engine's measured ledger matches it exactly, and it exceeds
+    ``chunked_allgather_bytes`` by exactly the layout's fragmentation.
     """
     p = layout.nproc
     m_bytes = layout.payload_elems * itemsize
+    cap_bytes = layout.capacity * itemsize
     frac = (p - 1) / p if p > 1 else 0.0
     return {
         "chunked_allgather_bytes": 3 * frac * m_bytes,
+        "chunked_capacity_bytes": 3 * frac * cap_bytes,
         "broadcast_baseline_bytes": 5 * frac * m_bytes,
         "params_bytes": float(m_bytes),
     }

@@ -12,9 +12,13 @@ import jax
 
 
 def _mesh(shape, axes):
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(shape)
-    )
+    # axis_types / AxisType only exist on newer jax; older releases have
+    # Auto semantics by default, so the plain call is equivalent there.
+    if hasattr(jax.sharding, "AxisType"):
+        return jax.make_mesh(
+            shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(shape)
+        )
+    return jax.make_mesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False):

@@ -82,6 +82,22 @@ def all_axes(ctx: "AxisCtx") -> tuple[str, ...]:
     return tuple(a for a in (ctx.pod_axis, ctx.data_axis, ctx.model_axis) if a)
 
 
+def shard_map_compat(fn, *, mesh, in_specs, out_specs, check_vma=True):
+    """jax >= 0.6 spells this ``jax.shard_map(check_vma=...)``; older
+    releases only have ``jax.experimental.shard_map.shard_map`` with
+    ``check_rep``.  The vma helpers below already degrade to no-ops
+    there.  check_rep maps from check_vma: replication checking is what
+    gives the legacy psum its correct (identity-style) transpose in
+    training; serve paths that ask for check_vma=False get it off."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _legacy
+
+    return _legacy(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                   check_rep=check_vma)
+
+
 def vary_to(x, axes: tuple[str, ...]):
     """pcast ``x`` to varying over ``axes`` (idempotent, typing-only)."""
     if not axes or not hasattr(x, "dtype"):

@@ -42,7 +42,11 @@ def _grad_psum(axis_name: str):
         # psum makes the cotangent invariant over the model axis; pvary
         # restores the varying type expected for the store-shard input
         # (the value is invariant in fact — all ranks hold the same sum).
-        return (jax.lax.pvary(jax.lax.psum(g, axis_name), axis_name),)
+        # pvary is typing-only and absent on jax without the vma system.
+        g = jax.lax.psum(g, axis_name)
+        if hasattr(jax.lax, "pvary"):
+            g = jax.lax.pvary(g, axis_name)
+        return (g,)
 
     f.defvjp(fwd, bwd)
     return f

@@ -18,6 +18,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import InputShape, dtype_of
 from repro.core import zero
+from repro.models.layers import shard_map_compat as _shard_map
 from repro.runtime.step import ChunkedRuntime
 
 
@@ -171,8 +172,8 @@ def _smap(rt, fn, in_specs, out_specs, *, check_vma=True):
     # transposes in training; serve paths (no autodiff) run with it off,
     # since batch-replicated decode (global_batch=1) produces values that
     # are invariant in fact but typed varying.
-    return jax.shard_map(fn, mesh=rt.mesh, in_specs=in_specs,
-                         out_specs=out_specs, check_vma=check_vma)
+    return _shard_map(fn, mesh=rt.mesh, in_specs=in_specs,
+                      out_specs=out_specs, check_vma=check_vma)
 
 
 def build_train_step(rt: ChunkedRuntime, shape: InputShape):
@@ -341,8 +342,8 @@ def _smap_nullary(rt, fn, out_specs):
     def wrapper(dummy):
         return fn()
     return functools.partial(
-        jax.shard_map(wrapper, mesh=rt.mesh, in_specs=(P(),),
-                      out_specs=out_specs, check_vma=True),
+        _shard_map(wrapper, mesh=rt.mesh, in_specs=(P(),),
+                   out_specs=out_specs, check_vma=True),
         jnp.zeros((), jnp.int32))
 
 

@@ -10,6 +10,7 @@ from jax.sharding import PartitionSpec as P
 from repro.configs.base import BaseConfig, MoEConfig
 from repro.models import layers as L
 from repro.models import mla as MLA
+from repro.models.layers import shard_map_compat
 
 
 def _qkv(key, b, sq, sk, h, kv, d, dtype=jnp.float32):
@@ -47,8 +48,9 @@ def test_sliding_window_masks():
 
 
 def _mesh(tp):
-    return jax.make_mesh((1, tp), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import _mesh as mk
+
+    return mk((1, tp), ("data", "model"))
 
 
 @pytest.mark.parametrize("h,kv,tp", [(8, 2, 4), (8, 8, 4), (4, 2, 2)])
@@ -90,7 +92,7 @@ def test_tp_attention_matches_single_device(h, kv, tp):
             y_dec, cache2 = L.attention_decode(p, x[:, i:i + 1], cache2, i, cfg, ctx)
         return y_fwd, y_pre, y_dec
 
-    f = jax.jit(jax.shard_map(run, mesh=_mesh(tp), in_specs=(P(),),
+    f = jax.jit(shard_map_compat(run, mesh=_mesh(tp), in_specs=(P(),),
                               out_specs=P(), check_vma=False))
     y_fwd, y_pre, y_dec = f(x)
     np.testing.assert_allclose(np.asarray(y_fwd), np.asarray(ref), atol=2e-4)
@@ -130,7 +132,7 @@ def test_prefill_then_decode_continues():
                                           S + i, cfg, ctx)
         return y
 
-    f = jax.jit(jax.shard_map(run, mesh=_mesh(tp), in_specs=(P(),),
+    f = jax.jit(shard_map_compat(run, mesh=_mesh(tp), in_specs=(P(),),
                               out_specs=P(), check_vma=False))
     y = f(x)
     np.testing.assert_allclose(np.asarray(y[:, 0]), np.asarray(ref[:, -1]),
@@ -180,7 +182,7 @@ def test_mla_decode_matches_fwd(tp):
             y, cache = MLA.mla_decode(p, x[:, i:i + 1], cache, i, cfg, ctx)
         return y
 
-    f = jax.jit(jax.shard_map(run, mesh=_mesh(tp), in_specs=(P(),),
+    f = jax.jit(shard_map_compat(run, mesh=_mesh(tp), in_specs=(P(),),
                               out_specs=P(), check_vma=False))
     y = f(x)
     np.testing.assert_allclose(np.asarray(y[:, 0]), np.asarray(ref[:, -1]),

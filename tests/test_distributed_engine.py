@@ -1,0 +1,241 @@
+"""Rank-parallel eager memory plane (paper Section 7, Algorithms 1-2):
+chunk ownership, RELEASED remote lifecycle, all-gather fetch /
+reduce-scatter grads, collective-volume parity with the analytic model,
+and loss parity with both the single-rank engine and the compiled
+ChunkedRuntime."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, model_class
+from repro.core import zero
+from repro.core.distributed import DistributedPatrickStarEngine
+from repro.core.engine import PatrickStarEngine
+from repro.core.state import ChunkState, TensorState, derive_chunk_state
+
+
+def _cfg(**over):
+    return get_config("gpt2-paper-1b", smoke=True).replace(
+        param_dtype="float32", compute_dtype="float32", **over)
+
+
+def _batch(cfg, b=4, s=32, seed=1):
+    tok = jax.random.randint(jax.random.key(seed), (b, s), 0, cfg.vocab_size)
+    return {"tokens": tok, "labels": jnp.roll(tok, -1, 1),
+            "global_tokens": jnp.float32(b * s)}
+
+
+def _exact_chunked_volume(dist):
+    """3(p-1)/p of the chunk-store capacity, as exact integer bytes."""
+    g = dist.cmap.num_comm_groups
+    cb = dist.ranks[0].params_mgr.chunk_bytes
+    return 3 * (dist.nproc - 1) * g * cb
+
+
+# ---------------------------------------------------------------------------
+# acceptance: p=2 matches single-rank losses AND the analytic volume model
+# ---------------------------------------------------------------------------
+
+
+def test_p2_matches_single_rank_and_analytic_volume():
+    cfg = _cfg()
+    batch = _batch(cfg)
+    single = PatrickStarEngine(model_class(cfg), cfg,
+                               device_memory_bytes=4_000_000, lr=1e-2)
+    dist = DistributedPatrickStarEngine(model_class(cfg), cfg, nproc=2,
+                                        device_memory_bytes=4_000_000,
+                                        lr=1e-2)
+    exact = _exact_chunked_volume(dist)
+    vol = zero.comm_volume_bytes(dist.cmap, itemsize=4)
+    # the capacity-based analytic figure is the measured quantity; the
+    # payload-based one differs from it by exactly the fragmentation
+    assert exact == int(vol["chunked_capacity_bytes"])
+    assert vol["chunked_allgather_bytes"] <= vol["chunked_capacity_bytes"]
+
+    for step in range(4):
+        ms = single.step(batch)
+        md = dist.step(batch)
+        # loss trajectory: same math (grads reduce-scatter-summed, shard
+        # losses carry 1/global_tokens), only float association differs
+        assert abs(ms.loss - md.loss) < 1e-4, (step, ms.loss, md.loss)
+        # measured all-gather + reduce-scatter bytes == analytic chunked
+        # volume, exactly, on every step (warm-up included)
+        assert md.chunk_collective_bytes == exact, (
+            step, md.chunk_collective_bytes, exact)
+        # 2 gather passes : 1 reduce-scatter
+        assert md.allgather_bytes == 2 * md.reduce_scatter_bytes
+    assert md.loss < 0.7 * 6.8  # and it actually learns
+    dist.check_invariants()
+
+
+def test_p4_volume_and_loss_under_eviction_pressure():
+    cfg = _cfg(num_layers=4)
+    batch = _batch(cfg)
+    single = PatrickStarEngine(model_class(cfg), cfg,
+                               device_memory_bytes=8_000_000, lr=1e-2)
+    # per-rank budget far below the full model: remote fetch + cross-stream
+    # eviction must cooperate
+    dist = DistributedPatrickStarEngine(model_class(cfg), cfg, nproc=4,
+                                        device_memory_bytes=2_000_000,
+                                        lr=1e-2)
+    exact = _exact_chunked_volume(dist)
+    for step in range(3):
+        ms = single.step(batch)
+        md = dist.step(batch)
+        assert abs(ms.loss - md.loss) < 1e-3, (step, ms.loss, md.loss)
+        assert md.chunk_collective_bytes == exact
+    dist.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# compiled-runtime parity (the paper's two planes agree step-for-step)
+# ---------------------------------------------------------------------------
+
+
+def test_p2_matches_compiled_chunked_runtime():
+    from repro.configs.base import InputShape
+    from repro.launch.mesh import make_smoke_mesh
+    from repro.runtime import driver
+    from repro.runtime.step import ChunkedRuntime, RuntimeOptions
+
+    cfg = _cfg()
+    lr, betas, eps, seed = 1e-2, (0.9, 0.95), 1e-8, 0
+    mesh = make_smoke_mesh(2, 1)
+    rt = ChunkedRuntime(model_class(cfg), cfg, mesh,
+                        RuntimeOptions(lr=lr, betas=betas, eps=eps))
+    # identical init values packed into the [G, p, S] stores
+    params = rt.model.init_params(jax.random.key(seed))
+    pstores, osstores = {}, {}
+    for name, lay in rt.layouts.items():
+        if name == "stem":
+            store = zero.flatten_to_store(lay, params["stem"])[None]
+            gax = 1
+        else:
+            stacked = params["groups"][name]
+            store = jax.vmap(
+                lambda t, _l=lay: zero.flatten_to_store(_l, t))(stacked)[None]
+            gax = 2
+        pstores[name] = store
+        dev_g, host_g = rt.os_split(name)
+        p32 = store.astype(jnp.float32)
+        zeros = jnp.zeros_like(p32)
+        sl = lambda x, a, b: jax.lax.slice_in_dim(x, a, b, axis=gax)
+        osstores[name] = {
+            k: {"dev": sl(src, 0, dev_g), "host": sl(src, dev_g, dev_g + host_g)}
+            for k, src in (("p32", p32), ("m", zeros), ("v", zeros))}
+    jf, _, _ = driver.build_train_step(rt, InputShape("parity", 32, 4, "train"))
+
+    batch = _batch(cfg)
+    dist = DistributedPatrickStarEngine(model_class(cfg), cfg, nproc=2,
+                                        device_memory_bytes=4_000_000,
+                                        lr=lr, betas=betas, eps=eps, seed=seed)
+    for step in range(4):
+        pstores, osstores, metrics = jf(pstores, osstores, batch,
+                                        jnp.int32(step))
+        md = dist.step(batch)
+        cl = float(metrics["loss"])
+        assert np.isfinite(cl)
+        assert abs(cl - md.loss) < 1e-4, (step, cl, md.loss)
+
+
+# ---------------------------------------------------------------------------
+# remote lifecycle mechanics
+# ---------------------------------------------------------------------------
+
+
+def test_remote_lifecycle_and_ownership():
+    cfg = _cfg()
+    dist = DistributedPatrickStarEngine(model_class(cfg), cfg, nproc=2,
+                                        device_memory_bytes=4_000_000)
+    cmap = dist.cmap
+    # at init and between steps: every non-owned payload chunk is RELEASED
+    # (no local payload), every owned chunk has an authoritative payload
+    def assert_shard_invariant():
+        for r, core in enumerate(dist.ranks):
+            for c in range(cmap.num_chunks):
+                if not cmap.chunk_tensors(c):
+                    continue
+                if cmap.chunk_owner(c) == r:
+                    assert core.params_mgr._records[c].payload is not None
+                    assert core.params_mgr.chunk_state(c) is not ChunkState.RELEASED
+                else:
+                    assert core.params_mgr.chunk_state(c) is ChunkState.RELEASED
+                    assert core.params_mgr._records[c].payload is None
+
+    assert_shard_invariant()
+    dist.step(_batch(cfg))
+    assert_shard_invariant()  # post-RS the replicas are dropped again
+
+    # OS streams exist only for owned chunks (ADAM is local, Section 7)
+    for r, core in enumerate(dist.ranks):
+        for c in range(cmap.num_chunks):
+            if not cmap.chunk_tensors(c) or cmap.chunk_owner(c) == r:
+                continue
+            for m in core.os_mgrs.values():
+                assert m._records[c].payload is None
+
+    # accessing a RELEASED tensor without the collective is an error, not
+    # a silent zero-fill
+    core = dist.ranks[0]
+    remote = next(p.name for p in cmap.placements
+                  if cmap.chunk_owner(p.chunk_id) != 0)
+    with pytest.raises(RuntimeError, match="RELEASED"):
+        core.params_mgr.access_tensor(remote)
+
+
+def test_gather_prefetch_hides_collective_bytes():
+    """Post-warm-up the gather prefetcher must convert critical-path
+    all-gather bytes into hidden ones WITHOUT changing total collective
+    volume (the H2D staging property, lifted to the collective plane)."""
+    cfg = _cfg()
+    batch = _batch(cfg)
+    mets = {}
+    for look in (0, 2):
+        dist = DistributedPatrickStarEngine(model_class(cfg), cfg, nproc=2,
+                                            device_memory_bytes=4_000_000,
+                                            gather_lookahead=look)
+        dist.step(batch)  # warm-up
+        mets[look] = dist.step(batch)
+    demand, staged = mets[0], mets[2]
+    assert demand.hidden_allgather_bytes == 0
+    assert staged.allgather_bytes == demand.allgather_bytes > 0
+    assert staged.hidden_allgather_bytes > 0
+    assert staged.critical_allgather_bytes < demand.critical_allgather_bytes
+    assert (staged.hidden_allgather_bytes + staged.critical_allgather_bytes
+            == staged.allgather_bytes)
+
+
+def test_stem_allreduce_counted_separately():
+    cfg = _cfg()
+    dist = DistributedPatrickStarEngine(model_class(cfg), cfg, nproc=2,
+                                        device_memory_bytes=4_000_000)
+    m = dist.step(_batch(cfg))
+    assert m.allreduce_bytes > 0
+    # the chunked-plane parity quantity excludes it
+    assert m.chunk_collective_bytes == _exact_chunked_volume(dist)
+
+
+# ---------------------------------------------------------------------------
+# state machine: RELEASED
+# ---------------------------------------------------------------------------
+
+
+def test_released_state_machine():
+    assert derive_chunk_state([TensorState.RELEASED]) is ChunkState.RELEASED
+    assert derive_chunk_state(
+        [TensorState.RELEASED, TensorState.HOLD]) is ChunkState.HOLD
+    assert derive_chunk_state(
+        [TensorState.RELEASED, TensorState.COMPUTE]) is ChunkState.COMPUTE
+    assert derive_chunk_state([TensorState.FREE]) is ChunkState.FREE
+
+    from repro.core.state import IllegalTransition, check_transition
+    check_transition(TensorState.HOLD_AFTER_FWD, TensorState.RELEASED)
+    check_transition(TensorState.HOLD_AFTER_BWD, TensorState.RELEASED)
+    check_transition(TensorState.RELEASED, TensorState.HOLD)
+    check_transition(TensorState.RELEASED, TensorState.COMPUTE)
+    with pytest.raises(IllegalTransition):
+        check_transition(TensorState.RELEASED, TensorState.FREE)
+    with pytest.raises(IllegalTransition):
+        check_transition(TensorState.COMPUTE, TensorState.RELEASED)

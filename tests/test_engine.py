@@ -77,9 +77,13 @@ def test_unified_budget_all_streams():
         for m in [eng.params_mgr, *eng.os_mgrs.values()])
     assert total_model_bytes > budget  # genuinely oversubscribed
     batch = _batch(cfg)
-    losses = [eng.step(batch).loss for _ in range(3)]  # no OutOfMemory
-    assert all(np.isfinite(l) for l in losses)
+    mets = [eng.step(batch) for _ in range(3)]  # no OutOfMemory
+    assert all(np.isfinite(m.loss) for m in mets)
     assert eng.pool.peak_device_bytes <= budget
+    # metrics report the PER-STEP device peak: bounded by the budget and
+    # by the pool's cumulative mark, and present on every step
+    assert all(0 < m.peak_device_bytes <= eng.pool.peak_device_bytes
+               for m in mets)
     eng.pool.check_invariants()
     # the per-stream views share the pool's accounting
     assert sum(m.device_bytes_used()

@@ -127,6 +127,31 @@ def test_chunk_tensors_index_matches_linear_scan():
             p for p in cmap.placements if p.chunk_id == c]
 
 
+def test_per_step_peak_resets_between_snapshots():
+    """take_step_peak_device_bytes reports the high-water mark SINCE the
+    previous snapshot (per-phase pressure), while pool.peak_device_bytes
+    stays the cumulative lifetime mark."""
+    pool, mgrs, _ = _pool(n_tensors=4, device_chunks=4)
+    mgr = mgrs["param"]
+    cb = mgr.chunk_bytes
+    # phase 1: three chunks resident
+    for i in range(3):
+        mgr.access_tensor(f"t{i}")
+        mgr.release_tensor(f"t{i}", TensorState.HOLD)
+    assert pool.take_step_peak_device_bytes() == 3 * cb
+    # phase 2 STARTS with those three still resident (occupancy carries
+    # over, so its peak is still 3 chunks), then drops to two
+    mgr.free_chunk(1)
+    mgr.free_chunk(2)
+    mgr.access_tensor("t3")
+    mgr.release_tensor("t3", TensorState.HOLD)
+    assert pool.take_step_peak_device_bytes() == 3 * cb
+    # phase 3 starts at the post-drop occupancy: per-step peak falls to 2
+    # chunks even though the lifetime mark stays 3
+    assert pool.take_step_peak_device_bytes() == 2 * cb
+    assert pool.peak_device_bytes == 3 * cb
+
+
 # ------------------------------------------------------------------ prefetch
 
 def _pattern_run(pattern, n_tensors, prefetch, device_chunks=3):

@@ -1,0 +1,93 @@
+"""Device-aware placement (paper Section 8.2): plan_placement edge cases
+— zero margin, margin exceeding all OS groups, single comm group, the
+Table-4 spill diagnostic, and the embedding-on-host heuristic."""
+
+from repro.core.chunk import TensorSpec, build_chunk_map
+from repro.core.placement import plan_placement
+
+
+def _plan(**over):
+    kw = dict(
+        margin_bytes=0,
+        num_local_groups=4,
+        chunk_size_elems=1024,
+        param_fp16_local_bytes=8 * 1024 * 2,
+        device_total_bytes=1 << 20,
+        peak_nonmodel_bytes=1 << 16,
+    )
+    kw.update(over)
+    return plan_placement(**kw)
+
+
+def test_zero_margin_keeps_all_os_on_host():
+    plan = _plan(margin_bytes=0)
+    assert plan.os_device_groups == 0
+    assert plan.os_device_fraction == 0.0
+    assert plan.margin_or_spill_groups == 0
+
+
+def test_margin_smaller_than_one_group():
+    # one OS group = 3 fp32 chunks = 12 KiB elems*4; just under -> 0 groups
+    group_bytes = 3 * 1024 * 4
+    plan = _plan(margin_bytes=group_bytes - 1)
+    assert plan.os_device_groups == 0
+    plan = _plan(margin_bytes=group_bytes)
+    assert plan.os_device_groups == 1
+
+
+def test_margin_larger_than_all_os_groups_is_capped():
+    group_bytes = 3 * 1024 * 4
+    plan = _plan(margin_bytes=100 * group_bytes, num_local_groups=4)
+    assert plan.os_device_groups == 4  # never more than exist
+    assert plan.os_device_fraction == 1.0
+    assert plan.margin_or_spill_groups == 4
+
+
+def test_single_comm_group():
+    group_bytes = 3 * 1024 * 4
+    plan = _plan(num_local_groups=1, margin_bytes=10 * group_bytes)
+    assert plan.os_device_groups == 1
+    assert plan.os_device_fraction == 1.0
+    plan = _plan(num_local_groups=1, margin_bytes=0)
+    assert plan.os_device_groups == 0
+
+
+def test_no_groups_fraction_is_zero():
+    plan = _plan(num_local_groups=0, margin_bytes=1 << 30)
+    assert plan.os_device_groups == 0
+    assert plan.os_device_fraction == 0.0
+
+
+def test_spill_diagnostic_negative_groups():
+    """Table 4: when even the param-fp16 working set exceeds the fp16
+    budget, the diagnostic reports NEGATIVE spilled groups."""
+    plan = _plan(
+        param_fp16_local_bytes=1 << 20,
+        device_total_bytes=1 << 19,
+        peak_nonmodel_bytes=1 << 18,
+    )
+    assert plan.margin_or_spill_groups < 0
+    # ceil((2^20 - (2^19 - 2^18)) / (2 * 1024))
+    spill_bytes = (1 << 20) - ((1 << 19) - (1 << 18))
+    expect = -(-spill_bytes // (2 * 1024))
+    assert plan.margin_or_spill_groups == -expect
+
+
+def test_embedding_on_host_heuristic():
+    assert _plan(vocab_size=50_000, hidden=512, batch_tokens=4_096
+                 ).embedding_on_host
+    assert not _plan(vocab_size=1_000, hidden=512, batch_tokens=4_096
+                     ).embedding_on_host
+    assert not _plan(vocab_size=50_000, hidden=512, batch_tokens=0
+                     ).embedding_on_host  # unknown batch -> no claim
+
+
+def test_os_device_chunk_ids_cover_placed_groups():
+    specs = [TensorSpec(f"t{i}", (64,)) for i in range(8)]
+    cmap = build_chunk_map(specs, 64, nproc=2)  # 8 chunks, 4 groups of 2
+    plan = _plan(num_local_groups=cmap.num_comm_groups,
+                 chunk_size_elems=64,
+                 margin_bytes=2 * 3 * 64 * 4)  # exactly two OS groups fit
+    assert plan.os_device_groups == 2
+    ids = plan.os_device_chunk_ids(cmap)
+    assert ids == {0, 1, 2, 3}  # the first two comm groups' chunks

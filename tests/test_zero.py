@@ -11,6 +11,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core import zero
 from repro.core.tracer import RuntimeMemoryTracer
+from repro.models.layers import shard_map_compat
 
 
 @st.composite
@@ -38,8 +39,9 @@ def test_flatten_roundtrip(tree, nproc):
 
 def test_gather_and_grad_reduce_scatter():
     """all_gather fetch + autodiff reduce-scatter = paper Section 7."""
-    mesh = jax.make_mesh((4,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import _mesh
+
+    mesh = _mesh((4,), ("data",))
     tree = {"a": jnp.arange(24, dtype=jnp.float32).reshape(4, 6),
             "b": jnp.ones((5,), jnp.float32)}
     layout = zero.make_layout(tree, nproc=4, dtype=jnp.float32, chunk_size=32)
@@ -52,7 +54,7 @@ def test_gather_and_grad_reduce_scatter():
         val, g = jax.value_and_grad(loss)(local)
         return jax.lax.psum(val, "data") / 4.0, g
 
-    f = jax.jit(jax.shard_map(
+    f = jax.jit(shard_map_compat(
         step, mesh=mesh, in_specs=(P(None, "data", None),),
         out_specs=(P(), P(None, "data", None)), check_vma=True))
     val, g = f(store)
