@@ -212,6 +212,26 @@ def build_chunk_map(
     )
 
 
+def build_act_chunk_map(
+    names: Sequence[str], numel: int, *, align: int = 256
+) -> ChunkTensorMap:
+    """Chunk map for the activation stream: one checkpointed layer input
+    per chunk.
+
+    Activations differ from model data in two ways that shape the layout:
+    they are all the same size (every layer's saved input is the embed
+    output's shape), and they are rank-local (never all-gathered or
+    reduce-scattered), so the map is built with ``nproc=1`` — act chunks
+    have no communication groups.  The chunk size is the activation numel
+    rounded up to ``align``, so exactly one activation occupies each
+    chunk and FWD-write / BWD-read / free maps 1:1 onto chunk
+    materialize / access / release.
+    """
+    size = int(math.ceil(max(numel, 1) / align) * align)
+    specs = [TensorSpec(n, (numel,)) for n in names]
+    return build_chunk_map(specs, size, nproc=1)
+
+
 # ---------------------------------------------------------------------------
 # Chunk-size search (Section 9.1, Table 3)
 # ---------------------------------------------------------------------------

@@ -25,6 +25,11 @@ communication group:
   * **ADAM** runs purely on local shards (each rank updates only its
     owned chunks; the stem stays replicated and its grads all-reduce —
     counted separately, outside the chunked plane).
+  * **activations are rank-local**: each rank core owns its own act
+    stream (the fifth managed stream) over its batch shard's
+    checkpointed layer inputs — act chunks never appear in communication
+    groups, are never gathered or reduced, and spill/restage purely
+    through the rank's own H2D/D2H plane.
   * **gather prefetch**: after warm-up, rank 0's tracer schedule drives a
     :class:`~repro.core.memory.GatherPrefetcher` that issues upcoming
     FWD/BWD group gathers ahead of their operator, classifying those
@@ -100,6 +105,8 @@ class DistributedPatrickStarEngine:
         prefetch: bool = True,
         prefetch_lookahead: int = 6,
         gather_lookahead: int = 2,
+        manage_activations: bool = True,
+        strict_device_budget: bool = False,
     ) -> None:
         if nproc < 2:
             raise ValueError("nproc must be >= 2 (use PatrickStarEngine)")
@@ -123,6 +130,8 @@ class DistributedPatrickStarEngine:
                 lr=lr, betas=betas, eps=eps, seed=seed,
                 device_aware_placement=device_aware_placement,
                 prefetch=prefetch, prefetch_lookahead=prefetch_lookahead,
+                manage_activations=manage_activations,
+                strict_device_budget=strict_device_budget,
                 nproc=nproc, rank=r, collective=self,
                 init_params=init_params)
 

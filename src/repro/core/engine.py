@@ -20,7 +20,16 @@ with
     host (Section 8.2),
   * block-granular activation checkpointing (inputs saved, fwd recomputed
     inside jax.vjp during BWD — the re-COMPUTE transitions that make
-    HOLD_AFTER_FWD/BWD states necessary).
+    HOLD_AFTER_FWD/BWD states necessary),
+  * an **activation chunk stream** (``manage_activations``, on by
+    default): the checkpointed inputs themselves live as chunks in a
+    fifth ChunkManager view of the same pool — written once in FWD, read
+    once at the mirrored BWD layer, then freed — so OPT eviction can
+    spill cold activations to host mid-step and the prefetcher stages
+    them back ahead of ``backward_layer``.  This is what turns the fixed
+    device budget into *batch-size* headroom (the paper's "larger batch
+    sizes" claim), measured by benchmarks/max_batch.py under
+    ``strict_device_budget``.
 
 The class doubles as the **single-rank core of the distributed plane**
 (Section 7): constructed with ``nproc > 1`` it owns only the chunk shard
@@ -49,9 +58,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.chunk import TensorSpec, build_chunk_map, search_chunk_size
+from repro.core.chunk import (
+    TensorSpec,
+    build_act_chunk_map,
+    build_chunk_map,
+    search_chunk_size,
+)
 from repro.core.manager import ChunkManager
-from repro.core.memory import HeteroMemory, SchedulePrefetcher
+from repro.core.memory import HeteroMemory, OutOfMemory, SchedulePrefetcher
 from repro.core.placement import PlacementPlan, plan_placement
 from repro.core.state import ChunkState, TensorState
 from repro.core.tracer import RuntimeMemoryTracer
@@ -99,6 +113,18 @@ class EngineMetrics:
         return self.prefetch_hits / total if total else 0.0
 
 
+@dataclasses.dataclass(frozen=True)
+class _ActRef:
+    """A checkpointed layer input parked in the activation chunk stream
+    (instead of held live on the device): the saved jax array is released
+    and only the chunk name + original shape/dtype survive until the
+    mirrored BWD read re-materializes it."""
+
+    name: str
+    shape: tuple[int, ...]
+    dtype: Any
+
+
 @dataclasses.dataclass
 class _StepState:
     """Mutable per-step context threaded through the phase methods, so a
@@ -113,7 +139,8 @@ class _StepState:
     stem: Any = None
     x: Any = None
     extras: Any = None
-    saved: list = dataclasses.field(default_factory=list)  # (group, layer, x)
+    # (group, layer, x | _ActRef) per checkpointed layer input
+    saved: list = dataclasses.field(default_factory=list)
     gx: Any = None
     stem_grad: Any = None
 
@@ -137,6 +164,8 @@ class PatrickStarEngine:
         embedding_on_host: bool = True,
         prefetch: bool = True,
         prefetch_lookahead: int = 6,
+        manage_activations: bool = True,
+        strict_device_budget: bool = False,
         nproc: int = 1,
         rank: int = 0,
         collective: "Any | None" = None,
@@ -221,10 +250,27 @@ class PatrickStarEngine:
         max_layer_chunks = max(
             len({self.cmap.placement(n).chunk_id for n in layer})
             for layers in self._group_tensor_names.values() for layer in layers)
-        floor = max(max_layer_chunks + max(nproc, 1), 5) \
+        self._model_floor_bytes = max(max_layer_chunks + max(nproc, 1), 5) \
             * self.params_mgr.chunk_bytes
-        self.pool.set_chunkable_memory_fn(
-            lambda: max(self.tracer.chunkable_memory(), floor))
+        self.pool.set_chunkable_memory_fn(self._chunkable_budget)
+
+        # ---- activation chunk stream (the fifth managed stream) ---------
+        # Checkpointed layer inputs become chunks in the same pool: written
+        # once in FWD, read once at the mirrored BWD layer, then freed.  No
+        # fp32 master / ADAM refs, and rank-local under nproc > 1 (never
+        # gathered or reduced).  Built lazily at the first forward_embed —
+        # the act chunk layout is batch-shape-dependent.
+        self.manage_activations = manage_activations
+        # strict mode: refuse to clamp the chunkable budget up to the
+        # working-set floor — when the traced non-model footprint leaves
+        # less device memory than one operator's working set, raise
+        # OutOfMemory instead (the honest "does this batch fit" signal the
+        # max-batch benchmark binary-searches on).
+        self.strict_device_budget = strict_device_budget
+        self.act_mgr: ChunkManager | None = None
+        self.act_cmap = None
+        self._act_numel = 0
+        self._batch_sig: tuple | None = None
         # schedule-driven prefetcher (installed after the warm-up
         # iteration).  OPT only: staging consumes the same future-reference
         # schedule, and running it under lru/fifo would contaminate those
@@ -275,6 +321,111 @@ class PatrickStarEngine:
         if self.collective is not None and self.rank == self.nproc - 1 \
                 and not self.tracer.warmup:
             self.collective.advance_prefetch(m)
+
+    # ------------------------------------------------------ activation stream
+    def _chunkable_budget(self) -> int:
+        """Device bytes the pool may use for chunks right now: the traced
+        chunkable memory, floored at one operator's working set (layer
+        param chunks + in-flight comm group + ADAM quad + the act chunks
+        the operator reads/writes).  In strict mode the floor is a
+        feasibility CHECK, not a clamp: a post-warm-up moment whose
+        non-model footprint leaves less than the floor raises
+        OutOfMemory — that batch does not fit this device."""
+        floor = self._model_floor_bytes + self._act_floor_bytes()
+        dyn = self.tracer.chunkable_memory()
+        if dyn < floor and self.strict_device_budget and not self.tracer.warmup:
+            raise OutOfMemory(
+                f"strict device budget: chunkable memory {dyn} at the "
+                f"current moment is below the working-set floor {floor} "
+                f"(device {self.tracer.device_total_bytes} bytes cannot "
+                f"hold this batch's non-model footprint plus one "
+                f"operator's chunks)")
+        return max(dyn, floor)
+
+    def _act_floor_bytes(self) -> int:
+        """Act chunks co-resident with one operator: the input being
+        written (FWD) or read (BWD) plus one staged neighbour."""
+        return 2 * self.act_mgr.chunk_bytes if self.act_mgr is not None else 0
+
+    def _ensure_act_stream(self, x) -> None:
+        """(Re)build the act stream for this batch's activation shape.
+        Called from forward_embed, where the embed output — the input of
+        every checkpointed layer — is first known."""
+        if not self.manage_activations:
+            return
+        numel = int(x.size)
+        if self.act_mgr is not None and numel == self._act_numel:
+            return
+        if self.act_mgr is not None:
+            # batch shape changed: the act chunk layout is stale (and the
+            # traced schedules with it — they re-form on the next warm-up)
+            self.pool.unregister_stream("act")
+        names = [f"act.{g.name}.{i}"
+                 for g in self.model.groups() for i in range(g.length)]
+        self.act_cmap = build_act_chunk_map(names, numel)
+        self.act_mgr = ChunkManager(
+            self.act_cmap, dtype=np.float32, name="act", pool=self.pool)
+        self._act_numel = numel
+
+    def _save_activation(self, gname: str, layer: int, x):
+        """FWD half of the act lifecycle: park the checkpointed input in
+        its act chunk (FREE -> COMPUTE -> HOLD_AFTER_FWD) and return the
+        reference stored in ``st.saved``.  Falls back to holding the live
+        array when the stream is off or the shape does not match the
+        stream's layout (defensive: no current eager model changes x
+        shape between layers)."""
+        if self.act_mgr is None or int(x.size) != self._act_numel:
+            return x
+        cb = self.act_mgr.chunk_bytes
+        budget = self.pool.device_budget()
+        host_cap = self.pool.host_capacity
+        if (budget is not None and host_cap is not None
+                and self.pool.device_bytes_used() + cb > budget
+                and self.pool.host_bytes_used() + cb > host_cap):
+            # Fig. 10's dual-constrained corner: the device is over its
+            # dynamic budget (margin-overflow spills) AND the host is
+            # full, so admitting would only ping-pong evictions between
+            # the full tiers.  Refuse up-front — eviction attempts are
+            # not free, they relocate chunks — and hold the input live,
+            # honestly counted as non-model bytes.
+            return x
+        name = f"act.{gname}.{layer}"
+        try:
+            view = self.act_mgr.access_tensor(name, "device")
+        except OutOfMemory:
+            # backstop for admission failures the cheap pre-check above
+            # cannot see; same graceful degradation
+            return x
+        if self.tracer.warmup:
+            self.tracer.record_chunk_use(
+                self.act_cmap.placement(name).chunk_id, stream="act")
+        view[...] = np.asarray(x, np.float32).reshape(-1)
+        self.act_mgr.release_tensor(name, TensorState.HOLD_AFTER_FWD)
+        return _ActRef(name, tuple(x.shape), x.dtype)
+
+    def _fetch_activation(self, saved):
+        """BWD half: re-materialize the checkpointed input from its act
+        chunk (HOLD_AFTER_FWD -> COMPUTE -> FREE; read once, then the
+        payload is dropped)."""
+        if not isinstance(saved, _ActRef):
+            return saved
+        if self.tracer.warmup:
+            self.tracer.record_chunk_use(
+                self.act_cmap.placement(saved.name).chunk_id, stream="act")
+        try:
+            view = self.act_mgr.access_tensor(saved.name, "device")
+        except OutOfMemory:
+            # pathological dual-tight budgets can refuse the H2D move;
+            # the data must still be read — consume it in place (the one
+            # transfer this skips is exactly the move the pool refused)
+            view = self.act_mgr.tensor_view(saved.name)
+            self.act_mgr.force_tensor_state(saved.name, TensorState.COMPUTE)
+        # fp32 chunk payload -> original dtype: exact for fp32 compute,
+        # exact upcast round-trip for bf16
+        x_in = jnp.asarray(
+            np.array(view, copy=True).reshape(saved.shape)).astype(saved.dtype)
+        self.act_mgr.release_tensor(saved.name, TensorState.FREE)
+        return x_in
 
     def _fetch_layer_groups(self, gname: str, layer: int) -> None:
         """Demand half of Algorithm 1 line 12: any chunk of this layer
@@ -330,6 +481,16 @@ class PatrickStarEngine:
     # collectives at communication-group boundaries.
 
     def begin_step(self, batch: dict) -> _StepState:
+        # the warm-up profile predicts later iterations only while the
+        # compute pattern repeats (Section 8.1); a batch-shape change
+        # invalidates the traced non-model curve, the per-stream OPT
+        # schedules AND the act chunk layout — re-arm the warm-up so this
+        # step re-traces and end_step re-installs everything fresh
+        sig = tuple(sorted(
+            (k, tuple(getattr(v, "shape", ()))) for k, v in batch.items()))
+        if self._batch_sig is not None and sig != self._batch_sig:
+            self.tracer.warmup = True
+        self._batch_sig = sig
         self.tracer.begin_iteration()
         return _StepState(
             batch=batch, met=EngineMetrics(),
@@ -340,6 +501,7 @@ class PatrickStarEngine:
         st.t0 = time.perf_counter()
         st.stem = jax.tree.map(jnp.asarray, self._stem_np)
         st.x, st.extras = self.model.embed(st.stem, st.batch)
+        self._ensure_act_stream(st.x)
         self._live_activation_bytes += st.x.size * st.x.dtype.itemsize
 
     def forward_group_start(self, st: _StepState, gname: str) -> None:
@@ -350,9 +512,16 @@ class PatrickStarEngine:
         self._moment(f"{g.name}.{i}", "FWD")
         self._fetch_layer_groups(g.name, i)
         names, ptree = self._access_layer(g.name, i, self.params_mgr, "device")
-        st.saved.append((g.name, i, st.x))
-        st.x, _aux = g.apply(ptree, st.x, st.extras, self.ctx)
+        x_in = st.x
+        saved = self._save_activation(g.name, i, x_in)
+        st.saved.append((g.name, i, saved))
+        st.x, _aux = g.apply(ptree, x_in, st.extras, self.ctx)
         self._live_activation_bytes += st.x.size * st.x.dtype.itemsize
+        if isinstance(saved, _ActRef):
+            # the checkpointed input now lives in the act chunk plane
+            # (pool-managed, spillable) instead of pinned device memory —
+            # this is the batch-size headroom the paper claims
+            self._live_activation_bytes -= x_in.size * x_in.dtype.itemsize
         self._release_layer(names, self.params_mgr, TensorState.HOLD_AFTER_FWD)
         # distributed: a communication group whose every tensor is now
         # HOLD_AFTER_FWD is done with forward — remote replicas released
@@ -380,10 +549,11 @@ class PatrickStarEngine:
         """Run BWD for ``st.saved[idx]``; returns the communication groups
         that completed HOLD_AFTER_BWD on this rank (the driver
         reduce-scatters them once every rank has finished the layer)."""
-        g, i, x_in = st.saved[idx]
+        g, i, saved = st.saved[idx]
         grp = next(gg for gg in self.model.groups() if gg.name == g)
         self._moment(f"{g}.{i}", "BWD")
         self._fetch_layer_groups(g, i)
+        x_in = self._fetch_activation(saved)
         names, ptree = self._access_layer(g, i, self.params_mgr, "device")
         # activation checkpointing: recompute fwd inside vjp
         _, vjp_fn = jax.vjp(
@@ -397,7 +567,11 @@ class PatrickStarEngine:
             view = self.params_mgr.tensor_view(n)
             view[...] = np.asarray(gleaf, np.float32)
         self._release_layer(names, self.params_mgr, TensorState.HOLD_AFTER_BWD)
-        self._live_activation_bytes -= max(x_in.size * x_in.dtype.itemsize, 0)
+        if not isinstance(saved, _ActRef):
+            # chunk-managed inputs were uncounted at save time; only live
+            # (fallback-held) arrays still contribute to the footprint
+            self._live_activation_bytes -= max(
+                x_in.size * x_in.dtype.itemsize, 0)
         done = self._groups_completing(g, i, TensorState.HOLD_AFTER_BWD) \
             if self.nproc > 1 else []
         self._moment(f"{g}.{i}.end", "BWD")
@@ -534,6 +708,11 @@ class PatrickStarEngine:
             self.params_mgr.register_moments(by_stream.get("param", {}))
             for name, m in self.os_mgrs.items():
                 m.register_moments(by_stream.get(name, {}))
+            if self.act_mgr is not None:
+                # act chunks: exactly two refs each (FWD write, mirrored
+                # BWD read) — the reuse distance OPT and the prefetcher
+                # exploit to spill/restage activations mid-step
+                self.act_mgr.register_moments(by_stream.get("act", {}))
             if self.prefetcher is not None:
                 self.prefetcher.install(
                     self.tracer.reference_sequence(by_stream))
@@ -581,6 +760,7 @@ class PatrickStarEngine:
             peak_nonmodel_bytes=self.tracer.peak_nonmodel_bytes,
             vocab_size=self.cfg.vocab_size, hidden=self.cfg.d_model,
             batch_tokens=0,
+            act_working_bytes=self._act_floor_bytes(),
         )
 
 

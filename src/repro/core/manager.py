@@ -115,6 +115,7 @@ class ChunkManager:
         # incremental per-stream tier usage (pool keeps the global sums)
         self._device_used = 0
         self._host_used = 0
+        self._peak_device_used = 0  # this stream's device high-water mark
 
     # ------------------------------------------------- pool-compat properties
     @property
@@ -135,6 +136,12 @@ class ChunkManager:
 
     def host_bytes_used(self) -> int:
         return self._host_used
+
+    def peak_device_bytes(self) -> int:
+        """This stream's lifetime device high-water mark (the pool keeps
+        the cross-stream mark) — e.g. the activation plane's real device
+        footprint for honest margin accounting."""
+        return self._peak_device_used
 
     def location(self, chunk_id: int) -> Device | None:
         return self._records[chunk_id].location

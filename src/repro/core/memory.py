@@ -215,6 +215,19 @@ class HeteroMemory:
             raise ValueError(f"stream name {mgr.name!r} already registered")
         self._streams[mgr.name] = mgr
 
+    def unregister_stream(self, name: str) -> None:
+        """Detach a stream and release every byte it holds (used when the
+        activation stream is rebuilt for a new batch shape: act chunk
+        layouts are batch-dependent, unlike the four model-data streams)."""
+        mgr = self._streams.pop(name)
+        for rec in mgr._records:
+            if rec.payload is not None:
+                self._uncharge(mgr, rec.location, mgr.chunk_bytes)
+                rec.payload = None
+                rec.location = None
+            self._staged.discard((name, rec.chunk_id))
+        self._moments.pop(name, None)
+
     @property
     def streams(self) -> dict[str, "ChunkManager"]:
         return dict(self._streams)
@@ -230,6 +243,8 @@ class HeteroMemory:
         if dev == "device":
             self._device_used += nbytes
             mgr._device_used += nbytes
+            if mgr._device_used > mgr._peak_device_used:
+                mgr._peak_device_used = mgr._device_used
             if self._device_used > self.peak_device_bytes:
                 self.peak_device_bytes = self._device_used
             if self._device_used > self._step_peak_device_bytes:

@@ -36,6 +36,10 @@ class PlacementPlan:
     embedding_on_host: bool
     # >0: margin chunks; <0: param-fp16 chunks spilled to host (Table 4)
     margin_or_spill_groups: int
+    # device bytes reserved for the activation stream's working set (the
+    # act chunks that must co-reside with compute during FWD/BWD); margin
+    # OS groups only claim what is left after this reservation
+    act_reserved_bytes: int = 0
 
     @property
     def os_device_fraction(self) -> float:
@@ -66,16 +70,24 @@ def plan_placement(
     vocab_size: int = 0,
     hidden: int = 0,
     batch_tokens: int = 0,
+    act_working_bytes: int = 0,
 ) -> PlacementPlan:
     """Derive the placement plan from warm-up statistics.
 
     ``margin_bytes`` should come from ``RuntimeMemoryTracer.margin_space``.
+    ``act_working_bytes`` is the activation stream's device working set
+    (chunk-managed checkpointed inputs pinned alongside compute); it is
+    carved out of the margin BEFORE optimizer-state groups claim it, so a
+    margin-placed OS group can never force the act chunks an operator is
+    reading/writing off the device.
     """
     # one OS group = param fp32 + momentum + variance, all fp32
     group_bytes = 3 * chunk_size_elems * 4
+    os_margin_bytes = max(margin_bytes - act_working_bytes, 0)
     os_device_groups = 0
     if group_bytes > 0:
-        os_device_groups = max(0, min(num_local_groups, margin_bytes // group_bytes))
+        os_device_groups = max(
+            0, min(num_local_groups, os_margin_bytes // group_bytes))
 
     # Table 4 diagnostic: positive margin groups, or negative spilled
     # param-fp16 groups when even the fp16 working set does not fit.
@@ -96,4 +108,5 @@ def plan_placement(
         margin_bytes=int(margin_bytes),
         embedding_on_host=emb_on_host,
         margin_or_spill_groups=margin_or_spill,
+        act_reserved_bytes=int(act_working_bytes),
     )

@@ -25,6 +25,19 @@ FREE in exactly one way that matters: a FREE tensor's first access
 zero-fills (Algorithm 1 line 31), while a RELEASED tensor's first access
 must FETCH the owner's bytes — zero-filling a remote parameter would
 corrupt the model.
+
+The **activation stream** (the fifth managed stream) reuses this same
+machine with a strictly simpler trajectory — each checkpointed layer
+input is written once during FWD, read once during BWD at the mirrored
+layer index, then dropped:
+
+    FREE -> COMPUTE (FWD write) -> HOLD_AFTER_FWD
+         -> COMPUTE (BWD read)  -> FREE (payload released)
+
+No act tensor ever enters RELEASED (activations are rank-local: there is
+no remote owner to fetch from) and none survives the step, so the act
+stream needs no new states or transitions — only the FREE<->COMPUTE and
+HOLD_AFTER_FWD->COMPUTE edges that already exist.
 """
 
 from __future__ import annotations

@@ -11,8 +11,11 @@ warm-up profile predicts every later iteration, giving:
   * per-chunk *reference moments*, the future-knowledge schedule consumed
     by the OPT eviction policy (Section 8.3) — recorded per stream (param
     chunks are referenced in FWD/BWD/ADAM, optimizer-state chunks only in
-    ADAM), which also yields the total reference order the
-    schedule-driven prefetcher stages chunks from;
+    ADAM, activation chunks exactly twice: their FWD write and their
+    mirrored BWD read — the FWD->BWD reuse distance is what lets OPT
+    spill cold act chunks to host mid-step and the prefetcher stage them
+    back ahead of ``backward_layer``), which also yields the total
+    reference order the schedule-driven prefetcher stages chunks from;
   * ``peak_nonmodel`` / GPU **margin space** for device-aware operator
     placement (Section 8.2).
 

@@ -98,6 +98,37 @@ def shard_map_compat(fn, *, mesh, in_specs, out_specs, check_vma=True):
                    check_rep=check_vma)
 
 
+def replicated_loss_compat(x, tp: int):
+    """Gradient-correctness shim for model-axis-replicated losses on jax
+    without the vma type system (legacy ``experimental.shard_map``).
+
+    A TP step computes the SAME total loss redundantly on every model
+    rank (activations are psum-combined, so each rank's scalar is the
+    full loss).  Under vma-typed jax the pcast/psum transpose rules know
+    the value is one invariant object and gradients come out right.  The
+    legacy transpose machinery instead differentiates each rank's copy
+    with cotangent 1 — the effective objective is ``tp * loss`` and every
+    gradient leaf (sharded and replicated alike) is tp-times too large.
+    Scaling the loss cotangent by ``1/tp`` on that path makes the
+    per-rank redundant copies sum to the true gradient; on vma-typed jax
+    (where ``jax.shard_map`` exists) this is the identity."""
+    if tp <= 1 or hasattr(jax, "shard_map"):
+        return x
+
+    @jax.custom_vjp
+    def _once(y):
+        return y
+
+    def fwd(y):
+        return y, None
+
+    def bwd(_, g):
+        return (g / tp,)
+
+    _once.defvjp(fwd, bwd)
+    return _once(x)
+
+
 def vary_to(x, axes: tuple[str, ...]):
     """pcast ``x`` to varying over ``axes`` (idempotent, typing-only)."""
     if not axes or not hasattr(x, "dtype"):

@@ -216,7 +216,11 @@ class ChunkedRuntime:
                 (x, aux), _ = jax.lax.scan(self._remat(body2),
                                            vary_tree((x, aux), va), flat)
         loss = self.model.head_loss(stem, x, batch)
-        return loss + aux, (loss, aux)
+        # the total is replicated over the model axis (every TP rank
+        # computes the full loss); on legacy jax its cotangent must carry
+        # 1/tp or all gradients come out tp-times too large
+        from repro.models.layers import replicated_loss_compat
+        return replicated_loss_compat(loss + aux, self.ctx.tp), (loss, aux)
 
     def train_step_fn(self) -> Callable:
         """Returns f(pstores, osstores, batch, step) -> (pstores', os', metrics),

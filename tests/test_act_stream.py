@@ -1,0 +1,264 @@
+"""Activation chunk stream (the fifth managed stream): differential
+parity (placement-only change), lifecycle, mid-step spill/restage, honest
+margin accounting, strict-budget batch headroom, and p=2 distributed
+parity with the stream enabled."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, model_class
+from repro.core.distributed import DistributedPatrickStarEngine
+from repro.core.engine import PatrickStarEngine
+from repro.core.memory import OutOfMemory
+from repro.core.state import ChunkState, TensorState
+
+
+def _cfg(**over):
+    return get_config("gpt2-paper-1b", smoke=True).replace(
+        param_dtype="float32", compute_dtype="float32", **over)
+
+
+def _batch(cfg, b=4, s=32, seed=1):
+    tok = jax.random.randint(jax.random.key(seed), (b, s), 0, cfg.vocab_size)
+    return {"tokens": tok, "labels": jnp.roll(tok, -1, 1),
+            "global_tokens": jnp.float32(b * s)}
+
+
+def _engine(cfg, budget, act, **kw):
+    return PatrickStarEngine(model_class(cfg), cfg,
+                             device_memory_bytes=budget,
+                             manage_activations=act, **kw)
+
+
+# ---------------------------------------------------------------------------
+# differential: the act stream never changes the math
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("policy", ["opt", "lru", "fifo"])
+@pytest.mark.parametrize("budget", [2_500_000, 16_000_000])
+def test_act_on_off_loss_parity(policy, budget):
+    """Eager losses with activation offload on vs off agree to <= 1e-6 on
+    every step, on tight and loose budgets, under all three eviction
+    policies (the stream changes where checkpointed inputs LIVE, never
+    what is computed)."""
+    cfg = _cfg()
+    batch = _batch(cfg)
+    losses = {}
+    for act in (True, False):
+        eng = _engine(cfg, budget, act, policy=policy, lr=1e-2)
+        losses[act] = [eng.step(batch).loss for _ in range(3)]
+        eng.pool.check_invariants()
+    for a, b in zip(losses[True], losses[False]):
+        assert abs(a - b) <= 1e-6, (losses[True], losses[False])
+
+
+def test_act_lifecycle_written_read_freed():
+    """Every act chunk is written once in FWD, read once at the mirrored
+    BWD layer, then freed: after a step the act stream holds zero bytes
+    and every act tensor is FREE; the stream never grows ADAM/fp32
+    companions."""
+    cfg = _cfg()
+    eng = _engine(cfg, 8_000_000, True)
+    eng.step(_batch(cfg))
+    assert eng.act_mgr is not None
+    # one chunk per checkpointed layer input
+    n_layers = sum(g.length for g in eng.model.groups())
+    assert eng.act_cmap.num_payload_chunks == n_layers
+    # all consumed and released...
+    assert eng.act_mgr.device_bytes_used() == 0
+    assert eng.act_mgr.host_bytes_used() == 0
+    # ...but the stream really was device-resident during the step: the
+    # per-stream high-water mark proves the footprint the margin
+    # accounting reserves for is real
+    assert eng.act_mgr.peak_device_bytes() >= eng.act_mgr.chunk_bytes
+    assert eng.act_mgr.peak_device_bytes() <= eng.pool.peak_device_bytes
+    for c in range(eng.act_cmap.num_chunks):
+        assert eng.act_mgr.chunk_state(c) is ChunkState.FREE
+    # rank-local layout: no communication groups beyond the trivial ones
+    assert eng.act_cmap.nproc == 1
+    # the fifth stream registers alongside the four model-data streams
+    assert set(eng.pool.streams) == {"param", "p32", "m", "v", "act"}
+    # no optimizer state exists for activations (nothing to check beyond
+    # the stream set: os_mgrs is exactly the three OS streams)
+    assert set(eng.os_mgrs) == {"p32", "m", "v"}
+
+
+def test_act_chunks_spill_and_restage_mid_step():
+    """On a tight budget, cold activation chunks must spill to host
+    between their FWD write and BWD read (the FWD->BWD reuse distance the
+    tracer exposes), and the post-warm-up prefetcher must stage act
+    chunks back ahead of backward_layer (hidden H2D on the act stream)."""
+    cfg = _cfg(num_layers=4)
+    eng = _engine(cfg, 2_500_000, True, policy="opt")
+    batch = _batch(cfg, b=8)
+    eng.step(batch)  # warm-up
+    d2h0, h2d0 = eng.act_mgr.stats.d2h_bytes, eng.act_mgr.stats.h2d_bytes
+    eng.step(batch)
+    d2h = eng.act_mgr.stats.d2h_bytes - d2h0
+    h2d = eng.act_mgr.stats.h2d_bytes - h2d0
+    assert d2h > 0, "no act chunk ever spilled despite the tight budget"
+    assert h2d > 0, "spilled act chunks never came back for their BWD read"
+    # per-stream peaks stay within the shared budget's high-water mark
+    assert 0 < eng.act_mgr.peak_device_bytes() <= eng.pool.peak_device_bytes
+    # losses still match the unmanaged baseline exactly
+    base = _engine(cfg, 2_500_000, False, policy="opt")
+    base.step(batch)
+    m_base = base.step(batch)
+    eng2 = _engine(cfg, 2_500_000, True, policy="opt")
+    eng2.step(batch)
+    m_act = eng2.step(batch)
+    assert abs(m_base.loss - m_act.loss) <= 1e-6
+
+
+def test_act_schedule_reaches_opt_and_prefetcher():
+    """The warm-up must record act-chunk reference moments (FWD write +
+    mirrored BWD read) and install them for OPT eviction and staging."""
+    cfg = _cfg()
+    eng = _engine(cfg, 8_000_000, True)
+    eng.step(_batch(cfg))
+    sched = eng.tracer.schedule_by_stream().get("act", {})
+    n_layers = sum(g.length for g in eng.model.groups())
+    assert len(sched) == n_layers
+    for chunk_id, moments in sched.items():
+        assert len(moments) == 2, (chunk_id, moments)  # write + read
+        assert moments[0] < moments[1]
+    # reverse order: the first-written act chunk is read LAST (the
+    # longest reuse distance — the best eviction victim mid-FWD)
+    writes = sorted((ms[0], c) for c, ms in sched.items())
+    reads = sorted((ms[1], c) for c, ms in sched.items())
+    assert [c for _, c in writes] == [c for _, c in reads][::-1]
+    # and the pool's OPT view consumes them
+    assert eng.pool._moments.get("act")
+
+
+def test_placement_reserves_act_working_set():
+    """plan_placement carves the act working set out of the margin before
+    OS groups claim it: with the stream on, never MORE margin-placed OS
+    groups than with it off."""
+    cfg = _cfg()
+    plans = {}
+    for act in (True, False):
+        eng = _engine(cfg, 16_000_000, act)
+        eng.step(_batch(cfg))
+        plans[act] = eng.placement
+    assert plans[True].act_reserved_bytes > 0
+    assert plans[False].act_reserved_bytes == 0
+    assert plans[True].os_device_groups <= plans[False].os_device_groups
+
+
+def test_strict_budget_act_stream_buys_batch_headroom():
+    """Under strict_device_budget a batch whose unmanaged activation
+    footprint exceeds the device budget OOMs with the stream off but
+    trains with it on — the max_batch.py acceptance in miniature."""
+    cfg = _cfg(num_layers=4)
+    budget = 6_000_000
+    big = _batch(cfg, b=28, s=64)
+
+    eng_off = _engine(cfg, budget, False, strict_device_budget=True)
+    with pytest.raises(OutOfMemory):
+        for _ in range(2):
+            eng_off.step(big)
+
+    eng_on = _engine(cfg, budget, True, strict_device_budget=True)
+    mets = [eng_on.step(big) for _ in range(2)]
+    assert all(np.isfinite(m.loss) for m in mets)
+    assert eng_on.pool.peak_device_bytes <= budget
+
+
+def test_batch_shape_change_retraces_and_rebuilds_act_stream():
+    """A batch-shape change invalidates the warm-up profile and the act
+    chunk layout: the engine must re-trace (fresh OPT/prefetch schedules,
+    fresh act layout sized to the new batch) instead of running the new
+    shape against the old batch's statistics."""
+    cfg = _cfg()
+    eng = _engine(cfg, 8_000_000, True)
+    small = _batch(cfg, b=2)
+    big = _batch(cfg, b=8)
+    eng.step(small)
+    assert not eng.tracer.warmup
+    numel_small = eng._act_numel
+    m = eng.step(big)  # re-warm-up: retrace + act rebuild
+    assert np.isfinite(m.loss)
+    assert not eng.tracer.warmup
+    assert eng._act_numel == 4 * numel_small
+    sched = eng.tracer.schedule_by_stream().get("act", {})
+    n_layers = sum(g.length for g in eng.model.groups())
+    assert len(sched) == n_layers  # act schedule re-formed for the new shape
+    assert all(len(ms) == 2 for ms in sched.values())
+    m2 = eng.step(big)  # and the re-traced profile drives the next step
+    assert np.isfinite(m2.loss)
+    eng.pool.check_invariants()
+
+
+def test_dual_tight_budgets_degrade_gracefully():
+    """Fig. 10's dual-constrained corner (host too small for all OS, so
+    init spills push the device over its dynamic budget): the act stream
+    must refuse management up-front and hold inputs live — the engine
+    trains anyway, exactly like the unmanaged baseline."""
+    cfg = _cfg(num_layers=6)
+    probe = _engine(cfg, 24_000_000, False)
+    host = probe.cmap.capacity * 4 * 2  # host holds only 2 of 4 streams
+    losses = {}
+    for act in (True, False):
+        eng = PatrickStarEngine(
+            model_class(cfg), cfg, device_memory_bytes=24_000_000,
+            host_memory_bytes=host, manage_activations=act)
+        batch = _batch(cfg, b=4, s=64)
+        losses[act] = [eng.step(batch).loss for _ in range(2)]
+        eng.pool.check_invariants()
+    for a, b in zip(losses[True], losses[False]):
+        assert abs(a - b) <= 1e-6, (losses[True], losses[False])
+
+
+# ---------------------------------------------------------------------------
+# distributed: act stream is rank-local and parity still holds
+# ---------------------------------------------------------------------------
+
+
+def test_p2_parity_with_act_stream():
+    """p=2 lock-step parity (test_distributed_engine's acceptance) holds
+    with the act stream enabled, collective volume stays EXACTLY the
+    analytic figure (act chunks never enter the collective plane), and
+    each rank owns a private act stream."""
+    from repro.core import zero
+
+    cfg = _cfg()
+    batch = _batch(cfg)
+    single = PatrickStarEngine(model_class(cfg), cfg,
+                               device_memory_bytes=4_000_000, lr=1e-2,
+                               manage_activations=True)
+    dist = DistributedPatrickStarEngine(model_class(cfg), cfg, nproc=2,
+                                        device_memory_bytes=4_000_000,
+                                        lr=1e-2, manage_activations=True)
+    g = dist.cmap.num_comm_groups
+    cb = dist.ranks[0].params_mgr.chunk_bytes
+    exact = 3 * (dist.nproc - 1) * g * cb
+    for step in range(3):
+        ms = single.step(batch)
+        md = dist.step(batch)
+        assert abs(ms.loss - md.loss) < 1e-4, (step, ms.loss, md.loss)
+        assert md.chunk_collective_bytes == exact
+    dist.check_invariants()
+    for core in dist.ranks:
+        assert core.act_mgr is not None
+        # rank-local: the act layout has no multi-rank comm groups and
+        # holds nothing between steps
+        assert core.act_cmap.nproc == 1
+        assert core.act_mgr.device_bytes_used() == 0
+        assert core.act_mgr.host_bytes_used() == 0
+
+
+def test_p2_act_on_off_loss_parity():
+    cfg = _cfg()
+    batch = _batch(cfg)
+    losses = {}
+    for act in (True, False):
+        dist = DistributedPatrickStarEngine(model_class(cfg), cfg, nproc=2,
+                                            device_memory_bytes=4_000_000,
+                                            manage_activations=act)
+        losses[act] = [dist.step(batch).loss for _ in range(3)]
+    for a, b in zip(losses[True], losses[False]):
+        assert abs(a - b) <= 1e-6, (losses[True], losses[False])

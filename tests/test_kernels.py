@@ -10,6 +10,9 @@ from repro.kernels.chunked_adam import BLOCK, chunked_adam_kernel
 from repro.kernels.flash_attention import flash_attention_kernel
 
 
+pytestmark = pytest.mark.kernels  # whole module: the kernel-sweep CI job
+
+
 @pytest.mark.parametrize("n_blocks", [1, 3])
 @pytest.mark.parametrize("gdtype", [jnp.float32, jnp.bfloat16])
 @pytest.mark.parametrize("wd", [0.0, 0.1])

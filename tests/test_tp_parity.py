@@ -15,6 +15,8 @@ from repro.runtime.step import ChunkedRuntime, RuntimeOptions
 
 TP = 2
 
+pytestmark = pytest.mark.slow  # per-arch grad sweeps: the sweeps CI job
+
 
 def _split_tree(tree, ax_tree, rank, tp, shift=0):
     def split(p, ax):
