@@ -36,12 +36,18 @@ def adversarial_microbench():
     from repro.core.manager import ChunkManager
     from repro.core.state import TensorState
 
+    import numpy as np
+
     specs = [TensorSpec(f"t{i}", (64,)) for i in range(8)]
     cmap = build_chunk_map(specs, 64)
     pattern = [0, 1, 2, 3] * 16
     out = {}
+    # 3-chunk device tier, in the stream's real bytes (cmap chunk size x
+    # the manager dtype) rather than a hardcoded fp32 itemsize
+    dtype = np.dtype(np.float32)
+    budget = 3 * cmap.chunk_size * dtype.itemsize
     for policy in ("opt", "lru", "fifo"):
-        mgr = ChunkManager(cmap, device_capacity_bytes=3 * 64 * 4,
+        mgr = ChunkManager(cmap, dtype=dtype, device_capacity_bytes=budget,
                            policy=policy)
         moments = {}
         for m, t in enumerate(pattern):

@@ -4,6 +4,8 @@ are the signal, as the paper's Tflops are hardware-bound)."""
 
 import time
 
+import numpy as np
+
 from benchmarks.common import csv, lm_batch
 from repro.configs import get_config, model_class
 from repro.core.engine import PatrickStarEngine
@@ -24,9 +26,12 @@ def run(layers, policy, device_bytes, placement=True):
         m = eng.step(batch)
         moved += m.moved_bytes
     dt = (time.perf_counter() - t0) / n
-    # model flops per iteration ~ 6*N*D
+    # model flops per iteration ~ 6*N*D, D from the ACTUAL batch shape
+    # (a literal 4*64 here silently diverged whenever the lm_batch args
+    # above were edited)
     n_params = eng.cmap.total_numel
-    flops = 6 * n_params * 4 * 64
+    tokens = int(np.prod(batch["tokens"].shape))
+    flops = 6 * n_params * tokens
     return dt, flops / dt / 1e9, moved / n
 
 

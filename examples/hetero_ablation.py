@@ -26,7 +26,9 @@ def main():
     tight_dev = 2_600_000  # < param stream (so a static layout cannot fit)
     eng = PatrickStarEngine(model_class(cfg), cfg,
                             device_memory_bytes=tight_dev)
-    need = eng.cmap.capacity * 4
+    # size from the stream's real chunk bytes (cmap capacity x the
+    # manager dtype), not a hardcoded fp32 itemsize
+    need = eng.cmap.num_chunks * eng.params_mgr.chunk_bytes
     print(f"param stream {need/1e6:.1f}MB vs device {tight_dev/1e6:.1f}MB "
           f"-> static partition would OOM")
     m = eng.step(batch(cfg))
@@ -35,7 +37,7 @@ def main():
 
     # ---- CPU-too-small case ----------------------------------------------
     dev = 24_000_000
-    host = int(eng.cmap.capacity * 4 * 2.0)  # host can't hold all 3 OS streams
+    host = int(need * 2.0)  # host can't hold all 3 OS streams
     eng2 = PatrickStarEngine(model_class(cfg), cfg,
                              device_memory_bytes=dev,
                              host_memory_bytes=host)

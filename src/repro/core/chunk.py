@@ -232,6 +232,110 @@ def build_act_chunk_map(
     return build_chunk_map(specs, size, nproc=1)
 
 
+class DynamicChunkMap:
+    """Mutable chunk<->tensor map for *dynamically populated* streams.
+
+    The four model-data streams and the activation stream have layouts
+    fixed for a whole iteration (the act stream is rebuilt wholesale on a
+    batch-shape change).  The serving plane's KV stream is different: a
+    sequence's KV chunks are allocated when its request is **admitted**
+    and freed when it **completes**, while other sequences' chunks live
+    on — the map must grow and shrink tensor-by-tensor mid-flight.
+
+    Layout: one tensor per chunk (every KV tensor is chunk-sized by
+    construction, exactly like the act stream's one-activation-per-chunk
+    rule), chunk ids of removed tensors are recycled through a free list
+    so the id space — and with it the manager's record table — stays
+    bounded by the peak concurrent tensor count.  ``nproc`` is fixed at 1:
+    KV state is rank-local, it is never all-gathered or reduce-scattered,
+    so there are no communication groups.
+
+    The query surface mirrors :class:`ChunkTensorMap` (``placement`` /
+    ``chunk_tensors`` / ``num_chunks`` / ``chunk_size`` ...), so
+    :class:`~repro.core.manager.ChunkManager` and the pool consume either
+    interchangeably.
+    """
+
+    nproc = 1
+
+    def __init__(self, chunk_size: int) -> None:
+        if chunk_size <= 0:
+            raise ChunkMapError(f"chunk_size must be positive, got {chunk_size}")
+        self.chunk_size = chunk_size
+        self._by_name: dict[str, TensorPlacement] = {}
+        self._by_chunk: dict[int, TensorPlacement] = {}
+        self._free: list[int] = []
+        self._next_chunk = 0
+
+    # ---------------------------------------------------------------- mutate
+    def add_tensor(self, spec: TensorSpec) -> TensorPlacement:
+        if spec.name in self._by_name:
+            raise ChunkMapError(f"tensor {spec.name} already mapped")
+        if spec.numel > self.chunk_size:
+            raise ChunkMapError(
+                f"tensor {spec.name} ({spec.numel} elems) exceeds chunk size "
+                f"{self.chunk_size}")
+        chunk_id = self._free.pop() if self._free else self._next_chunk
+        if chunk_id == self._next_chunk:
+            self._next_chunk += 1
+        p = TensorPlacement(name=spec.name, shape=spec.shape,
+                            chunk_id=chunk_id, offset=0)
+        self._by_name[spec.name] = p
+        self._by_chunk[chunk_id] = p
+        return p
+
+    def remove_tensor(self, name: str) -> int:
+        """Unmap a tensor; its chunk id goes back to the free list."""
+        p = self._by_name.pop(name)
+        del self._by_chunk[p.chunk_id]
+        self._free.append(p.chunk_id)
+        return p.chunk_id
+
+    # ---------------------------------------------------------------- lookup
+    def placement(self, name: str) -> TensorPlacement:
+        return self._by_name[name]
+
+    def chunk_tensors(self, chunk_id: int) -> list[TensorPlacement]:
+        p = self._by_chunk.get(chunk_id)
+        return [p] if p is not None else []
+
+    @property
+    def placements(self) -> tuple[TensorPlacement, ...]:
+        return tuple(self._by_name.values())
+
+    @property
+    def num_chunks(self) -> int:
+        """High-water chunk-id bound (recycled ids included): the record
+        table a manager must be able to index."""
+        return self._next_chunk
+
+    @property
+    def num_payload_chunks(self) -> int:
+        return len(self._by_chunk)
+
+    @property
+    def total_numel(self) -> int:
+        return sum(p.numel for p in self._by_name.values())
+
+    @property
+    def capacity(self) -> int:
+        return self.num_payload_chunks * self.chunk_size
+
+    def chunk_owner(self, chunk_id: int) -> int:
+        return 0  # rank-local stream: this process owns everything
+
+    def comm_group(self, chunk_id: int) -> int:
+        raise ChunkMapError("dynamic (rank-local) streams have no comm groups")
+
+
+def build_kv_chunk_map(numel: int, *, align: int = 256) -> DynamicChunkMap:
+    """Empty dynamic map for the serving KV stream: one (sequence, layer)
+    cache per chunk, sized for the largest layer cache rounded to
+    ``align`` (the same vreg-tiling alignment as the act stream)."""
+    size = int(math.ceil(max(numel, 1) / align) * align)
+    return DynamicChunkMap(size)
+
+
 # ---------------------------------------------------------------------------
 # Chunk-size search (Section 9.1, Table 3)
 # ---------------------------------------------------------------------------

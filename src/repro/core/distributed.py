@@ -226,6 +226,24 @@ class DistributedPatrickStarEngine:
                 if cmap.chunk_owner(c) != r and cmap.chunk_tensors(c):
                     core.params_mgr.mark_released(c)
             core.pool.account_reduce_scatter((self.nproc - 1) * chunk_bytes)
+        self.retire_group(group)
+
+    def retire_group(self, group: int) -> None:
+        """A rank dropped its replicas of ``group`` (post-FWD release or
+        the reduce-scatter above): once EVERY rank's non-owned replicas
+        are back in RELEASED, the group's staged-gather slot is retired —
+        the gather prefetcher's in-flight cap bounds replicas actually
+        held, so the slot must not free while any rank still holds
+        (p-1)/p of the group."""
+        if self.gather_prefetcher is None:
+            return
+        cmap = self.cmap
+        ids = [c for c in cmap.comm_group_chunk_ids(group)
+               if cmap.chunk_tensors(c)]
+        if all(core.params_mgr.chunk_state(c) is ChunkState.RELEASED
+               for r, core in enumerate(self.ranks)
+               for c in ids if cmap.chunk_owner(c) != r):
+            self.gather_prefetcher.retire(group)
 
     def advance_prefetch(self, moment: int) -> None:
         """Called by rank 0's moment cursor: stage upcoming group gathers."""

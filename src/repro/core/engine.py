@@ -470,10 +470,15 @@ class PatrickStarEngine:
 
     def _release_remote_of_group(self, group: int) -> None:
         """Algorithm 1 line 18: after the group's post-FWD transition the
-        non-owned chunk replicas are dropped back to RELEASED."""
+        non-owned chunk replicas are dropped back to RELEASED.  The
+        driver is notified so the gather prefetcher can retire the
+        group's staged-gather slot once every rank has dropped (its
+        in-flight cap bounds replicas actually held)."""
         for c in self.cmap.comm_group_chunk_ids(group):
             if self.cmap.chunk_owner(c) != self.rank and self.cmap.chunk_tensors(c):
                 self.params_mgr.mark_released(c)
+        if self.collective is not None:
+            self.collective.retire_group(group)
 
     # ------------------------------------------------------------ step phases
     # step() composes these in order; the rank-parallel driver interleaves

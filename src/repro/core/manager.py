@@ -243,6 +243,31 @@ class ChunkManager:
             raise KeyError(f"tensor {name}: chunk {p.chunk_id} has no payload")
         return rec.payload[p.offset : p.offset + p.numel].reshape(p.shape)
 
+    # -------------------------------------------- dynamic streams (serving)
+    def add_tensor(self, name: str, shape: tuple[int, ...]):
+        """Map a new tensor into a dynamically-populated stream (KV): the
+        map assigns (or recycles) a chunk, the record table grows to
+        cover it, and the tensor starts FREE — its first access
+        zero-fills (Algorithm 1 line 31), which is exactly a fresh
+        decode cache."""
+        from repro.core.chunk import TensorSpec
+
+        p = self.cmap.add_tensor(TensorSpec(name, tuple(shape)))
+        while len(self._records) < self.cmap.num_chunks:
+            self._records.append(_ChunkRecord(
+                chunk_id=len(self._records), payload=None, location=None))
+        self._tensor_state[name] = TensorState.FREE
+        return p
+
+    def remove_tensor(self, name: str) -> None:
+        """Unmap a dynamic tensor (request completed): payload released,
+        bytes uncharged, chunk id recycled for the next admission."""
+        chunk_id = self.cmap.placement(name).chunk_id
+        self._set_state(name, TensorState.FREE)
+        del self._tensor_state[name]
+        self.pool.release_payload(self, chunk_id)
+        self.cmap.remove_tensor(name)
+
     # -------------------------------------------------------------- chunk API
     def pin(self, chunk_id: int) -> None:
         self._records[chunk_id].pinned += 1

@@ -541,7 +541,9 @@ class HeteroMemory:
         Returns True if the chunk is on-device and marked staged."""
         if self.policy != "opt":
             return False
-        mgr = self._streams[stream]
+        mgr = self._streams.get(stream)
+        if mgr is None:
+            return False  # dynamic stream unregistered after refs installed
         rec = mgr._records[chunk_id]
         key = (stream, chunk_id)
         if rec.payload is None or rec.location == "device":
@@ -647,7 +649,17 @@ class GatherPrefetcher:
     inside an access are *critical-path*.  ``fetch_group(group)`` is the
     driver's collective (it must return True iff a gather actually ran;
     resident groups return False and don't count against the in-flight
-    cap)."""
+    cap).
+
+    The in-flight cap is **global across calls**, mirroring
+    :class:`SchedulePrefetcher`'s ``pool._staged`` check: a staged gather
+    materializes (p-1)/p of a whole group on every rank and those bytes
+    stay resident until the group's replicas are dropped after its
+    post-FWD/BWD transition, so the driver must :meth:`retire` the group
+    at that drop — only then does a staging slot free up.  (A per-call
+    counter would let up to ``lookahead`` unconsumed groups pile up
+    across consecutive ``advance()`` calls, silently exceeding the
+    documented memory bound.)"""
 
     def __init__(
         self,
@@ -664,16 +676,31 @@ class GatherPrefetcher:
         self.max_inflight = max_inflight
         self._moments: list[int] = []
         self._refs: list[tuple[int, int]] = []
+        # groups staged by this prefetcher whose replicas are still held
+        # (gathered, not yet dropped post-FWD/BWD) — the in-flight set
+        # the cap bounds.
+        self._inflight: set[int] = set()
 
     @property
     def installed(self) -> bool:
         return bool(self._refs)
+
+    @property
+    def inflight(self) -> frozenset[int]:
+        """Staged-but-not-yet-dropped groups (test/debug surface)."""
+        return frozenset(self._inflight)
 
     def install(self, group_refs: Iterable[tuple[int, int]]) -> None:
         """``group_refs``: (moment, comm_group) of one whole iteration —
         one entry per (moment, group), already deduplicated."""
         self._refs = sorted(set(group_refs))
         self._moments = [m for m, _ in self._refs]
+        self._inflight.clear()
+
+    def retire(self, group: int) -> None:
+        """The staged group's replicas were dropped (post-FWD release or
+        post-BWD reduce-scatter): its staging slot frees up."""
+        self._inflight.discard(group)
 
     def advance(self, moment: int) -> int:
         """Gather upcoming remote groups; returns how many gathers ran."""
@@ -683,8 +710,11 @@ class GatherPrefetcher:
         hi = bisect.bisect_right(self._moments, moment + self.lookahead)
         fetched = 0
         for _m, group in self._refs[lo:hi]:
-            if fetched >= self.max_inflight:
+            if len(self._inflight) >= self.max_inflight:
                 break
+            if group in self._inflight:
+                continue
             if self.fetch_group(group):
+                self._inflight.add(group)
                 fetched += 1
         return fetched

@@ -1,0 +1,639 @@
+"""Chunk-managed serving plane: KV-cache as a managed stream with
+continuous batching.
+
+The paper organizes *training* model data as chunks orchestrated across
+a CPU+GPU heterogeneous space; this module extends that thesis to the
+serving path (the ZeRO-Infinity / Angel-PTM "one manager pages ALL
+state" direction).  :class:`ServingEngine` runs eager prefill + greedy
+decode with BOTH kinds of serving state inside one
+:class:`~repro.core.memory.HeteroMemory` pool:
+
+  * **params** — the familiar chunk stream (read-only here: no grads, no
+    optimizer state, the stem stays host-side exactly like training's
+    Section 8.2 embedding rule);
+  * **kv** — the first *dynamically populated* stream: every admitted
+    sequence owns one chunk per (block-group, layer) holding that
+    layer's decode cache, mapped through
+    :class:`~repro.core.chunk.DynamicChunkMap` when the request is
+    admitted and unmapped when it completes.  A freshly mapped tensor is
+    FREE, so its first access zero-fills — which is precisely an empty
+    decode cache.  When the engine fully drains, the kv stream is
+    unregistered from the pool and re-registered on the next admission
+    (the act stream's rebuild path, now exercised mid-flight).
+
+Cold sequences spill their KV chunks to host under cross-stream OPT
+eviction and are restaged by the :class:`~repro.core.memory.SchedulePrefetcher`
+ahead of their turn in the **decode round-robin schedule**: each round
+the engine plans the exact (moment, stream, chunk) reference sequence of
+this round plus a synthetic next round, registers it as the OPT/prefetch
+schedule, and then executes it layer-major (one param fetch per layer
+per round, all active sequences' kv chunks visited under it).
+
+**Continuous batching**: ``submit()`` queues a request; each round the
+admission loop activates queued requests while the pool can hold the
+param working set plus the active KV footprint, and completed sequences
+free their chunks immediately — admission capacity returns to the pool
+mid-flight, not at batch boundaries.
+
+Correctness is anchored to the compiled path: chunk-managed greedy
+decode emits token-for-token identical output to
+``driver.build_decode_step`` (tests/test_serving_engine.py), sharing the
+same :func:`~repro.models.layers.greedy_token` tie-break.
+
+With ``manage_kv=False`` the engine reproduces the unmanaged baseline
+(the seed's ``examples/serve_chunked.py`` behaviour): caches live as raw
+device arrays outside every budget decision except a hard reservation
+against the device capacity — decode concurrency is whatever fits on the
+device.  benchmarks/serving.py measures the managed stream's capacity
+win over this baseline at a fixed tight device budget.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.chunk import (
+    TensorSpec,
+    build_chunk_map,
+    build_kv_chunk_map,
+    search_chunk_size,
+)
+from repro.core.manager import ChunkManager
+from repro.core.memory import HeteroMemory, SchedulePrefetcher
+from repro.core.state import TensorState
+
+# shared with the training engine: leaf names MUST be byte-identical
+# across planes for chunk placements to line up
+from repro.core.engine import _leaves_with_names
+from repro.models.api import Model
+from repro.models.layers import AxisCtx, greedy_token
+
+
+@dataclasses.dataclass
+class ServeRequest:
+    """One inference request's lifecycle through the admission queue."""
+
+    rid: int
+    prompt: np.ndarray  # [S] int32 token ids
+    max_new_tokens: int
+    state: str = "queued"  # queued -> active -> done
+    pos: int = 0  # positions already written into the KV cache
+    generated: list[int] = dataclasses.field(default_factory=list)
+
+
+@dataclasses.dataclass
+class ServeRoundMetrics:
+    """One continuous-batching round (admission + prefill + decode)."""
+
+    round_index: int
+    admitted: int
+    completed: int
+    active: int
+    queued: int
+    prefill_tokens: int
+    decode_tokens: int
+    h2d_bytes: int
+    d2h_bytes: int
+    hidden_h2d_bytes: int
+    critical_h2d_bytes: int
+    prefetch_hits: int
+    demand_misses: int
+    peak_device_bytes: int  # pool device high-water mark this round
+    wall_s: float
+
+    @property
+    def tokens(self) -> int:
+        return self.prefill_tokens + self.decode_tokens
+
+
+class ServingEngine:
+    """Eager prefill/decode over the chunked heterogeneous memory pool."""
+
+    def __init__(
+        self,
+        model_cls,
+        cfg,
+        *,
+        device_memory_bytes: int,
+        host_memory_bytes: int | None = None,
+        policy: str = "opt",
+        chunk_size: int | None = None,
+        max_seq_len: int = 128,
+        manage_kv: bool = True,
+        prefetch: bool = True,
+        prefetch_lookahead: int = 8,
+        seed: int = 0,
+        init_params: Any | None = None,
+    ) -> None:
+        self.cfg = cfg
+        self.ctx = AxisCtx()  # single device, no mesh axes
+        self.model: Model = model_cls(cfg, self.ctx)
+        self.max_seq_len = max_seq_len
+        self.manage_kv = manage_kv
+        self.device_capacity = device_memory_bytes
+        self.host_capacity = host_memory_bytes
+        if cfg.arch_type in ("audio", "vlm"):
+            raise ValueError(
+                "ServingEngine serves token prompts; encoder-input archs "
+                f"({cfg.arch_type}) need a modality front-end")
+        self._decode_groups = [g for g in self.model.groups()
+                               if g.decode is not None]
+        if len(self._decode_groups) != len(self.model.groups()):
+            raise ValueError("every block group must define decode/prefill "
+                             "to serve with the chunk-managed engine")
+        for g in self._decode_groups:
+            if g.prefill is None or g.init_cache is None:
+                raise ValueError(f"group {g.name} lacks prefill/init_cache")
+
+        # ---- param chunk stream (read-only; stem stays host-side) -------
+        params = init_params if init_params is not None \
+            else self.model.init_params(jax.random.key(seed))
+        self._stem_np = jax.tree.map(np.asarray, params["stem"])
+        named: list[tuple[str, np.ndarray]] = []
+        self._group_tensor_names: dict[str, list[list[str]]] = {}
+        for g in self.model.groups():
+            stacked = params["groups"][g.name]
+            per_layer: list[list[str]] = []
+            for i in range(g.length):
+                layer_tree = jax.tree.map(lambda t: np.asarray(t[i]), stacked)
+                pairs = _leaves_with_names(layer_tree, f"{g.name}.{i}")
+                per_layer.append([n for n, _ in pairs])
+                named.extend(pairs)
+            self._group_tensor_names[g.name] = per_layer
+        self._layer_trees = {
+            g.name: jax.tree_util.tree_structure(
+                jax.tree.map(lambda t: t[0], params["groups"][g.name]))
+            for g in self.model.groups()
+        }
+        specs = [TensorSpec(n, tuple(v.shape)) for n, v in named]
+        if chunk_size is None:
+            chunk_size = search_chunk_size(specs, align=256).chunk_size
+        self.cmap = build_chunk_map(specs, chunk_size)
+        self.pool = HeteroMemory(
+            device_capacity_bytes=device_memory_bytes,
+            host_capacity_bytes=host_memory_bytes, policy=policy)
+        self.params_mgr = ChunkManager(
+            self.cmap, dtype=np.float32, name="param", pool=self.pool)
+        for name, val in named:
+            view = self.params_mgr.access_tensor(name, "host")
+            view[...] = np.asarray(val, np.float32)
+            self.params_mgr.release_tensor(name, TensorState.HOLD)
+        self._layer_chunks = {
+            (g.name, i): sorted({self.cmap.placement(n).chunk_id
+                                 for n in self._group_tensor_names[g.name][i]})
+            for g in self.model.groups() for i in range(g.length)
+        }
+        self._param_stream_bytes = (
+            self.cmap.num_payload_chunks * self.params_mgr.chunk_bytes)
+        self._param_floor_bytes = max(
+            len(c) for c in self._layer_chunks.values()
+        ) * self.params_mgr.chunk_bytes
+
+        # ---- KV layout: one (group, layer) cache per chunk --------------
+        # template = init_cache(1, max_seq_len) flattened; the chunk holds
+        # the leaves concatenated (k then v for attention; any cache
+        # pytree works — SSM states included).
+        self._cache_tmpl: dict[str, Any] = {}
+        max_numel = 1
+        self._kv_seq_raw_bytes = 0  # actual (unaligned, true-dtype) bytes
+        for g in self._decode_groups:
+            one = g.init_cache(1, max_seq_len)
+            leaves, treedef = jax.tree_util.tree_flatten(one)
+            shapes = [tuple(l.shape) for l in leaves]
+            dtypes = [l.dtype for l in leaves]
+            numels = [int(np.prod(s)) for s in shapes]
+            self._cache_tmpl[g.name] = (treedef, shapes, dtypes, numels)
+            max_numel = max(max_numel, sum(numels))
+            self._kv_seq_raw_bytes += g.length * sum(
+                n * np.dtype(d).itemsize for n, d in zip(numels, dtypes))
+        self._kv_chunk_elems = build_kv_chunk_map(max_numel).chunk_size
+        self.kv_chunk_bytes = self._kv_chunk_elems * 4  # fp32 payloads
+        self._total_layers = sum(g.length for g in self._decode_groups)
+        # one sequence's whole managed KV footprint
+        self.kv_seq_bytes = self._total_layers * self.kv_chunk_bytes
+
+        floor = self._param_floor_bytes + (
+            2 * self.kv_chunk_bytes if manage_kv else 0)
+        if device_memory_bytes < floor:
+            raise ValueError(
+                f"device budget {device_memory_bytes} below the serving "
+                f"working-set floor {floor} (one layer's param chunks plus "
+                f"two kv chunks)")
+
+        self.kv_mgr: ChunkManager | None = None
+        self._raw_kv: dict[tuple[int, str, int], Any] = {}
+        self._raw_kv_bytes = 0
+        if not manage_kv:
+            # unmanaged caches are raw device arrays: reserve their bytes
+            # out of the pool's chunkable device budget so params and raw
+            # KV honestly share the same fixed device capacity.
+            self.pool.set_chunkable_memory_fn(
+                lambda: self.device_capacity - self._raw_kv_bytes)
+        self.prefetcher = SchedulePrefetcher(
+            self.pool, lookahead=prefetch_lookahead) \
+            if prefetch and policy == "opt" and manage_kv else None
+
+        self._queue: deque[ServeRequest] = deque()
+        self._active: list[ServeRequest] = []
+        self._done: dict[int, ServeRequest] = {}
+        self._next_rid = 0
+        self._moment = 0
+        self._planned: deque[tuple[int, tuple]] = deque()
+        self.rounds = 0
+        self.total_prefill_tokens = 0
+        self.total_decode_tokens = 0
+        self.peak_concurrency = 0
+
+    # --------------------------------------------------------------- intake
+    def submit(self, prompt, max_new_tokens: int = 16) -> int:
+        """Queue a request; returns its id.  The admission loop activates
+        it once the pool can hold its KV alongside the current load."""
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        if prompt.size < 1:
+            raise ValueError("prompt must hold at least one token")
+        if max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1")
+        # the last generated token is never fed back, so the cache holds
+        # prompt + (max_new_tokens - 1) positions
+        if prompt.size + max_new_tokens - 1 > self.max_seq_len:
+            raise ValueError(
+                f"prompt {prompt.size} + {max_new_tokens} new tokens "
+                f"exceeds max_seq_len {self.max_seq_len}")
+        if not self._admissible(0):
+            raise ValueError(
+                "request can never be admitted: one sequence's KV plus the "
+                "param working set exceeds the configured budgets")
+        rid = self._next_rid
+        self._next_rid += 1
+        self._queue.append(ServeRequest(
+            rid=rid, prompt=prompt, max_new_tokens=max_new_tokens))
+        return rid
+
+    def _admissible(self, n_active: int) -> bool:
+        """Can the pool hold the param working set plus ``n_active + 1``
+        sequences' KV?  Managed KV may spill to host, so the bound is the
+        two-tier total; unmanaged KV is device-resident raw arrays, so
+        the device budget alone decides."""
+        if self.manage_kv:
+            if self.host_capacity is None:
+                return True  # unbounded host tier
+            # swap headroom: with both tiers packed exactly full no
+            # eviction can land anywhere and paging deadlocks (the
+            # cascade-cycle OutOfMemory), so admission must leave room
+            # to swap the largest chunk of ANY stream — at long horizons
+            # a kv chunk can outgrow a param chunk.
+            headroom = max(self.params_mgr.chunk_bytes, self.kv_chunk_bytes)
+            need = (self._param_stream_bytes + headroom
+                    + (n_active + 1) * self.kv_seq_bytes)
+            return need <= self.device_capacity + self.host_capacity
+        need = (self._param_floor_bytes
+                + (n_active + 1) * self._kv_seq_raw_bytes)
+        return need <= self.device_capacity
+
+    def _admit(self) -> list[ServeRequest]:
+        newly: list[ServeRequest] = []
+        while self._queue and self._admissible(len(self._active)):
+            req = self._queue.popleft()
+            req.state = "active"
+            if self.manage_kv:
+                self._ensure_kv_stream()
+                for g in self._decode_groups:
+                    for i in range(g.length):
+                        self.kv_mgr.add_tensor(
+                            self._kv_name(req.rid, g.name, i),
+                            (self._kv_chunk_elems,))
+            else:
+                self._raw_kv_bytes += self._kv_seq_raw_bytes
+            self._active.append(req)
+            newly.append(req)
+        self.peak_concurrency = max(self.peak_concurrency, len(self._active))
+        return newly
+
+    def _ensure_kv_stream(self) -> None:
+        """(Re)register the kv stream — dropped whenever the engine fully
+        drains, so admission after a drain exercises the same
+        unregister/re-register path as the act stream's batch-shape
+        rebuild."""
+        if self.kv_mgr is None:
+            self.kv_mgr = ChunkManager(
+                build_kv_chunk_map(self._kv_chunk_elems), dtype=np.float32,
+                name="kv", pool=self.pool)
+
+    @staticmethod
+    def _kv_name(rid: int, gname: str, layer: int) -> str:
+        return f"kv.{rid}.{gname}.{layer}"
+
+    # ------------------------------------------------------------- schedule
+    def _round_ops(self, newly, decode_reqs) -> list[tuple]:
+        """The round's exact op order: per new request a seq-major prefill
+        pass, then one layer-major decode sweep over the running set
+        (params fetched once per layer per round, every active sequence's
+        kv chunk visited under that fetch — the decode round-robin)."""
+        ops: list[tuple] = []
+        for req in newly:
+            for g in self._decode_groups:
+                for i in range(g.length):
+                    ops.append(("param", g.name, i))
+                    if self.manage_kv:
+                        ops.append(("kv", req.rid, g.name, i))
+        if decode_reqs:
+            for g in self._decode_groups:
+                for i in range(g.length):
+                    ops.append(("param", g.name, i))
+                    if self.manage_kv:
+                        for req in decode_reqs:
+                            ops.append(("kv", req.rid, g.name, i))
+        return ops
+
+    def _plan_round(self, newly, decode_reqs) -> None:
+        """Register this round's reference schedule (plus a synthetic
+        next round) as the OPT eviction future and the prefetcher's
+        staging queue — the serving analogue of the tracer's warm-up
+        schedule, re-derived every round because the active set is
+        dynamic."""
+        ops = self._round_ops(newly, decode_reqs)
+        survivors = [r for r in decode_reqs + newly
+                     if len(r.generated) + 1 < r.max_new_tokens]
+        future = self._round_ops([], survivors or (decode_reqs + newly))
+        param_sched: dict[int, list[int]] = {}
+        kv_sched: dict[int, list[int]] = {}
+        refs: list[tuple[int, str, int]] = []
+        self._planned.clear()
+        m = self._moment
+        for k, op in enumerate(ops + future):
+            if op[0] == "param":
+                for cid in self._layer_chunks[(op[1], op[2])]:
+                    param_sched.setdefault(cid, []).append(m + k)
+                    refs.append((m + k, "param", cid))
+            else:
+                cid = self.kv_mgr.cmap.placement(
+                    self._kv_name(op[1], op[2], op[3])).chunk_id
+                kv_sched.setdefault(cid, []).append(m + k)
+                refs.append((m + k, "kv", cid))
+            if k < len(ops):
+                self._planned.append((m + k, op))
+        self._moment = m + len(ops) + len(future)
+        self.pool.register_moments("param", param_sched)
+        if self.kv_mgr is not None:
+            self.pool.register_moments("kv", kv_sched)
+        if self.prefetcher is not None:
+            self.prefetcher.install(refs)
+
+    def _begin_op(self, op: tuple) -> None:
+        """Advance the moment cursor to the next planned op (asserting the
+        executor walks exactly the planned order) and stage upcoming
+        references ahead of it."""
+        m, planned = self._planned.popleft()
+        assert planned == op, (planned, op)
+        self.pool.set_moment(m)
+        if self.prefetcher is not None:
+            self.prefetcher.advance(m)
+
+    # -------------------------------------------------------- cache chunks
+    def _pad_to_tmpl(self, arr: np.ndarray, tshape: tuple[int, ...]) -> np.ndarray:
+        if tuple(arr.shape) == tshape:
+            return arr
+        pads = []
+        for a, b in zip(arr.shape, tshape):
+            if b < a:
+                raise ValueError(f"cache leaf {arr.shape} exceeds template "
+                                 f"{tshape}")
+            pads.append((0, b - a))
+        return np.pad(arr, pads)
+
+    def _store_cache(self, rid: int, gname: str, layer: int, cache) -> None:
+        """Write a layer cache into its kv chunk and release it HOLD.
+        Works both for the first (prefill) write — the FREE access
+        zero-fills, then prefill leaves are padded to the decode-horizon
+        template, matching the slot layout decode expects — and for the
+        COMPUTE write-back after a decode step."""
+        name = self._kv_name(rid, gname, layer)
+        if self.kv_mgr.tensor_state(name) is TensorState.COMPUTE:
+            view = self.kv_mgr.tensor_view(name)
+        else:
+            view = self.kv_mgr.access_tensor(name, "device")
+        _, shapes, _, numels = self._cache_tmpl[gname]
+        leaves = jax.tree_util.tree_leaves(cache)
+        off = 0
+        for leaf, tshape, n in zip(leaves, shapes, numels):
+            arr = self._pad_to_tmpl(np.asarray(leaf, np.float32), tshape)
+            view[off:off + n] = arr.reshape(-1)
+            off += n
+        self.kv_mgr.release_tensor(name, TensorState.HOLD)
+
+    def _load_cache(self, rid: int, gname: str, layer: int):
+        """Bring the kv chunk on-device (COMPUTE — unevictable while the
+        decode op runs) and rebuild the layer cache pytree.  Leaves are
+        COPIED out of the payload: the store after the op overwrites it
+        in place."""
+        name = self._kv_name(rid, gname, layer)
+        view = self.kv_mgr.access_tensor(name, "device")
+        treedef, shapes, dtypes, numels = self._cache_tmpl[gname]
+        leaves = []
+        off = 0
+        for shape, dtype, n in zip(shapes, dtypes, numels):
+            leaves.append(jnp.asarray(
+                np.array(view[off:off + n], copy=True).reshape(shape)
+            ).astype(dtype))
+            off += n
+        return jax.tree_util.tree_unflatten(treedef, leaves)
+
+    def _raw_cache(self, rid: int, gname: str, layer: int):
+        key = (rid, gname, layer)
+        if self._raw_kv.get(key) is None:
+            g = next(g for g in self._decode_groups if g.name == gname)
+            self._raw_kv[key] = g.init_cache(1, self.max_seq_len)
+        return self._raw_kv[key]
+
+    def _raw_store(self, rid: int, gname: str, layer: int, cache) -> None:
+        _, shapes, dtypes, _ = self._cache_tmpl[gname]
+        treedef = self._cache_tmpl[gname][0]
+        leaves = [
+            jnp.asarray(self._pad_to_tmpl(np.asarray(l), ts)).astype(dt)
+            for l, ts, dt in zip(jax.tree_util.tree_leaves(cache), shapes,
+                                 dtypes)]
+        self._raw_kv[(rid, gname, layer)] = jax.tree_util.tree_unflatten(
+            treedef, leaves)
+
+    # ------------------------------------------------------------ layer ops
+    def _access_layer(self, gname: str, layer: int):
+        names = self._group_tensor_names[gname][layer]
+        # COPY at the numpy->jax boundary: the payload may be evicted (and
+        # its buffer reused by a later admission) while lazy jax values
+        # still reference it.
+        arrs = [jnp.array(self.params_mgr.access_tensor(n, "device"),
+                          copy=True) for n in names]
+        tree = jax.tree_util.tree_unflatten(self._layer_trees[gname], arrs)
+        return names, tree
+
+    def _release_layer(self, names) -> None:
+        for n in names:
+            self.params_mgr.release_tensor(n, TensorState.HOLD)
+
+    # ------------------------------------------------------------- phases
+    def _prefill(self, req: ServeRequest, stem) -> None:
+        batch = {"tokens": jnp.asarray(req.prompt[None, :])}
+        x, extras = self.model.embed(stem, batch)
+        for g in self._decode_groups:
+            x, extras = self.model.between_groups(
+                g.name, x, extras, stem, batch)
+            for i in range(g.length):
+                self._begin_op(("param", g.name, i))
+                names, ptree = self._access_layer(g.name, i)
+                x, cache = g.prefill(ptree, x, extras, self.ctx)
+                self._release_layer(names)
+                if self.manage_kv:
+                    self._begin_op(("kv", req.rid, g.name, i))
+                    self._store_cache(req.rid, g.name, i, cache)
+                else:
+                    self._raw_store(req.rid, g.name, i, cache)
+        logits = self.model.head_logits(stem, x[:, -1:, :])
+        tok = int(greedy_token(logits, self.cfg.vocab_size, self.ctx)[0])
+        req.pos = int(req.prompt.size)
+        req.generated.append(tok)
+        self.total_prefill_tokens += int(req.prompt.size)
+
+    def _decode_round(self, decode_reqs, stem) -> None:
+        xs: dict[int, list] = {}
+        for req in decode_reqs:
+            tok = jnp.asarray([[req.generated[-1]]], jnp.int32)
+            x = self.model.embed_decode(stem, tok, jnp.int32(req.pos), None)
+            xs[req.rid] = [x, self.model.decode_extras(stem, x)]
+        for g in self._decode_groups:
+            for i in range(g.length):
+                self._begin_op(("param", g.name, i))
+                names, ptree = self._access_layer(g.name, i)
+                for req in decode_reqs:
+                    if self.manage_kv:
+                        self._begin_op(("kv", req.rid, g.name, i))
+                        cache = self._load_cache(req.rid, g.name, i)
+                    else:
+                        cache = self._raw_cache(req.rid, g.name, i)
+                    st = xs[req.rid]
+                    y, c2 = g.decode(ptree, st[0], cache, jnp.int32(req.pos),
+                                     st[1], self.ctx)
+                    if self.manage_kv:
+                        self._store_cache(req.rid, g.name, i, c2)
+                    else:
+                        self._raw_kv[(req.rid, g.name, i)] = c2
+                    st[0] = y
+                self._release_layer(names)
+        for req in decode_reqs:
+            logits = self.model.head_logits(stem, xs[req.rid][0])
+            tok = int(greedy_token(logits, self.cfg.vocab_size, self.ctx)[0])
+            req.pos += 1
+            req.generated.append(tok)
+            self.total_decode_tokens += 1
+
+    def _retire_finished(self) -> int:
+        done = [r for r in self._active
+                if len(r.generated) >= r.max_new_tokens]
+        for req in done:
+            req.state = "done"
+            self._active.remove(req)
+            self._done[req.rid] = req
+            if self.manage_kv:
+                for g in self._decode_groups:
+                    for i in range(g.length):
+                        self.kv_mgr.remove_tensor(
+                            self._kv_name(req.rid, g.name, i))
+            else:
+                for g in self._decode_groups:
+                    for i in range(g.length):
+                        self._raw_kv.pop((req.rid, g.name, i), None)
+                self._raw_kv_bytes -= self._kv_seq_raw_bytes
+        if not self._active and not self._queue and self.kv_mgr is not None:
+            # full drain: drop the kv stream; the next admission
+            # re-registers it from scratch
+            self.pool.unregister_stream("kv")
+            self.kv_mgr = None
+        return len(done)
+
+    # ------------------------------------------------------------------ run
+    def step_round(self) -> ServeRoundMetrics | None:
+        """One continuous-batching round: admit, prefill the newly
+        admitted, decode one token for everyone else, retire finished
+        sequences.  Returns None when there is nothing to do."""
+        if not self._queue and not self._active:
+            return None
+        t0 = time.perf_counter()
+        st0 = dataclasses.replace(self.pool.stats)
+        pf0 = dataclasses.replace(self.pool.prefetch)
+        prefill0 = self.total_prefill_tokens
+        decode0 = self.total_decode_tokens
+        newly = self._admit()
+        newly_ids = {r.rid for r in newly}
+        decode_reqs = [r for r in self._active if r.rid not in newly_ids]
+        self._plan_round(newly, decode_reqs)
+        stem = jax.tree.map(jnp.asarray, self._stem_np)
+        for req in newly:
+            self._prefill(req, stem)
+        if decode_reqs:
+            self._decode_round(decode_reqs, stem)
+        completed = self._retire_finished()
+        self.rounds += 1
+        pf = self.pool.prefetch
+        return ServeRoundMetrics(
+            round_index=self.rounds - 1,
+            admitted=len(newly),
+            completed=completed,
+            active=len(self._active),
+            queued=len(self._queue),
+            prefill_tokens=self.total_prefill_tokens - prefill0,
+            decode_tokens=self.total_decode_tokens - decode0,
+            h2d_bytes=self.pool.stats.h2d_bytes - st0.h2d_bytes,
+            d2h_bytes=self.pool.stats.d2h_bytes - st0.d2h_bytes,
+            hidden_h2d_bytes=pf.hidden_h2d_bytes - pf0.hidden_h2d_bytes,
+            critical_h2d_bytes=pf.critical_h2d_bytes - pf0.critical_h2d_bytes,
+            prefetch_hits=pf.hits - pf0.hits,
+            demand_misses=pf.demand_misses - pf0.demand_misses,
+            peak_device_bytes=self.pool.take_step_peak_device_bytes(),
+            wall_s=time.perf_counter() - t0,
+        )
+
+    def run(self, max_rounds: int = 10_000) -> list[ServeRoundMetrics]:
+        """Round until every submitted request has completed."""
+        out: list[ServeRoundMetrics] = []
+        while self._queue or self._active:
+            if len(out) >= max_rounds:
+                raise RuntimeError(
+                    f"serving did not drain within {max_rounds} rounds "
+                    f"({len(self._active)} active, {len(self._queue)} queued)")
+            m = self.step_round()
+            assert m is not None
+            out.append(m)
+        return out
+
+    # ------------------------------------------------------------- results
+    def result(self, rid: int) -> list[int]:
+        """Generated token ids of a completed request."""
+        return list(self._done[rid].generated)
+
+    @property
+    def active_count(self) -> int:
+        return len(self._active)
+
+    @property
+    def queued_count(self) -> int:
+        return len(self._queue)
+
+    def device_bytes_in_use(self) -> int:
+        """Pool device bytes plus (unmanaged) raw KV reservations — the
+        quantity that must stay within the fixed device capacity."""
+        return self.pool.device_bytes_used() + self._raw_kv_bytes
+
+    def check_invariants(self) -> None:
+        self.pool.check_invariants()
+        if self.kv_mgr is not None:
+            expect = len(self._active) * self._total_layers
+            assert self.kv_mgr.cmap.num_payload_chunks == expect, (
+                self.kv_mgr.cmap.num_payload_chunks, expect)
+        assert self.device_bytes_in_use() <= self.device_capacity, (
+            self.device_bytes_in_use(), self.device_capacity)

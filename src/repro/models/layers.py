@@ -753,6 +753,27 @@ def lm_logits_local(p, x, ctx: AxisCtx):
     )
 
 
+def greedy_token(local_logits, vocab: int, ctx: AxisCtx):
+    """Argmax across vocab-parallel logits. local_logits: [B,1,V_local].
+
+    Shared by the compiled decode step and the eager serving engine so
+    both planes resolve ties identically (max first, then the lowest
+    global token id): token-for-token parity between them must not hinge
+    on two argmax implementations agreeing.  With ``tp == 1`` the psum /
+    pmax degenerate and this is a plain masked argmax."""
+    vl = local_logits.shape[-1]
+    start = ctx.model_rank() * vl
+    gid = start + jnp.arange(vl)
+    ll = jnp.where(gid < vocab, local_logits, -jnp.inf)
+    lmax = jnp.max(ll, axis=-1)
+    lidx = jnp.argmax(ll, axis=-1) + start
+    gmax = ctx.pmax_model(lmax)
+    cand = jnp.where(lmax >= gmax, lidx, vocab + 1)
+    if ctx.model_axis:
+        cand = -jax.lax.pmax(-cand, ctx.model_axis)  # pmin
+    return cand[..., 0].astype(jnp.int32)  # [B]
+
+
 def vocab_parallel_xent(local_logits, labels, vocab: int, ctx: AxisCtx, *, mask=None):
     """Cross-entropy over a vocab-sharded logits tensor without gathering.
 

@@ -34,7 +34,7 @@ from repro.core import zero
 from repro.core.zero import ChunkLayout
 from repro.models import tp as tpmod
 from repro.models.api import Model
-from repro.models.layers import AxisCtx, all_axes, vary_tree
+from repro.models.layers import AxisCtx, all_axes, greedy_token, vary_tree
 
 
 @dataclasses.dataclass(frozen=True)
@@ -407,22 +407,7 @@ class ChunkedRuntime:
                 x, ys = jax.lax.scan(body, x, (store, cache))
                 new_caches[g.name] = jax.tree.map(lambda t: t[None], ys)
             logits = model.head_logits(stem, x)
-            next_tok = _greedy_token(logits, self.cfg.vocab_size, ctx)
+            next_tok = greedy_token(logits, self.cfg.vocab_size, ctx)
             return next_tok, new_caches
 
         return step
-
-
-def _greedy_token(local_logits, vocab: int, ctx: AxisCtx):
-    """Argmax across vocab-parallel logits. local_logits: [B,1,V_local]."""
-    vl = local_logits.shape[-1]
-    start = ctx.model_rank() * vl
-    gid = start + jnp.arange(vl)
-    ll = jnp.where(gid < vocab, local_logits, -jnp.inf)
-    lmax = jnp.max(ll, axis=-1)
-    lidx = jnp.argmax(ll, axis=-1) + start
-    gmax = ctx.pmax_model(lmax)
-    cand = jnp.where(lmax >= gmax, lidx, vocab + 1)
-    if ctx.model_axis:
-        cand = -jax.lax.pmax(-cand, ctx.model_axis)  # pmin
-    return cand[..., 0].astype(jnp.int32)  # [B]

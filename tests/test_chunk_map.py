@@ -101,3 +101,37 @@ def test_search_respects_budget():
     specs = [TensorSpec(f"t{i}", (100,)) for i in range(20)]
     res = search_chunk_size(specs, align=4, memory_budget_elems=2600)
     assert res.num_chunks * res.chunk_size <= 2600
+
+
+# ---------------------------------------------------------------------------
+# DynamicChunkMap — the serving KV stream's mutable mapping
+# ---------------------------------------------------------------------------
+
+
+@given(st.lists(st.integers(0, 30), min_size=1, max_size=120))
+@settings(max_examples=100, deadline=None)
+def test_dynamic_map_id_space_bounded_by_peak(ops):
+    """Random add/remove traffic: live tensors map to distinct chunks and
+    the id space never exceeds the peak concurrent tensor count."""
+    from repro.core.chunk import DynamicChunkMap
+
+    dm = DynamicChunkMap(8)
+    live: list[str] = []
+    peak = 0
+    nxt = 0
+    for op in ops:
+        if live and op % 3 == 0:  # remove roughly a third of the time
+            dm.remove_tensor(live.pop(op % len(live)))
+        else:
+            name = f"t{nxt}"
+            nxt += 1
+            dm.add_tensor(TensorSpec(name, (1 + op % 8,)))
+            live.append(name)
+        peak = max(peak, len(live))
+        ids = [dm.placement(n).chunk_id for n in live]
+        assert len(set(ids)) == len(ids)
+        assert dm.num_payload_chunks == len(live)
+        assert dm.num_chunks <= peak
+        for n in live:
+            p = dm.placement(n)
+            assert dm.chunk_tensors(p.chunk_id) == [p]

@@ -1,0 +1,229 @@
+"""Regression tests pinning the two prefetchers' in-flight-cap semantics
+and the pool's ``_staged`` set lifecycle.
+
+The caps are MEMORY bounds, not rate limits: staged-but-unconsumed state
+(device chunks for :class:`SchedulePrefetcher`, gathered (p-1)/p group
+replicas for :class:`GatherPrefetcher`) must never exceed ``max_inflight``
+ACROSS calls — a per-call counter would let up to ``lookahead`` entries
+pile up over consecutive ``advance()`` calls (the bug this file pins)."""
+
+import numpy as np
+import pytest
+
+from repro.core.chunk import TensorSpec, build_chunk_map
+from repro.core.manager import ChunkManager
+from repro.core.memory import GatherPrefetcher, HeteroMemory, SchedulePrefetcher
+from repro.core.state import TensorState
+
+
+def _pool(n=8, chunk_elems=16, device_chunks=4):
+    specs = [TensorSpec(f"t{i}", (chunk_elems,)) for i in range(n)]
+    cmap = build_chunk_map(specs, chunk_elems)  # one tensor per chunk
+    pool = HeteroMemory(
+        device_capacity_bytes=device_chunks * chunk_elems * 4, policy="opt")
+    mgr = ChunkManager(cmap, name="param", pool=pool)
+    return pool, mgr, cmap
+
+
+def _park_on_host(mgr, n):
+    """Materialize chunks host-side in HOLD (stageable residents)."""
+    for i in range(n):
+        mgr.access_tensor(f"t{i}", "host")
+        mgr.release_tensor(f"t{i}", TensorState.HOLD)
+
+
+# ---------------------------------------------------------------------------
+# SchedulePrefetcher: staged-but-unconsumed <= max_inflight across calls
+# ---------------------------------------------------------------------------
+
+
+def test_schedule_prefetcher_inflight_cap_across_advances():
+    pool, mgr, _ = _pool(n=8, device_chunks=8)
+    _park_on_host(mgr, 8)
+    refs = [(m, "param", m) for m in range(8)]  # chunk m used at moment m
+    pool.register_moments("param", {c: [m] for m, _, c in refs})
+    pf = SchedulePrefetcher(pool, lookahead=6, max_inflight=2)
+    pf.install(refs)
+    # advance at successive moments WITHOUT consuming anything: a
+    # per-call cap would stage up to `lookahead` chunks here
+    for m in range(4):
+        pool.set_moment(m)
+        pf.advance(m)
+        assert len(pool._staged) <= pf.max_inflight, (m, pool._staged)
+    assert len(pool._staged) == 2
+    # consuming a staged chunk frees a slot; the next advance refills it
+    staged_ids = sorted(c for _s, c in pool._staged)
+    mgr.access_tensor(f"t{staged_ids[0]}")
+    mgr.release_tensor(f"t{staged_ids[0]}", TensorState.HOLD)
+    assert len(pool._staged) == 1
+    assert pool.prefetch.hits == 1
+    pf.advance(staged_ids[0])
+    assert len(pool._staged) == 2
+
+
+def test_schedule_prefetcher_multi_moment_schedule_never_exceeds_cap():
+    """Denser schedule (several chunks per moment), tight device tier:
+    the staged set stays bounded while demand traffic churns the tier."""
+    pool, mgr, _ = _pool(n=8, device_chunks=3)
+    _park_on_host(mgr, 8)
+    refs = [(m // 2, "param", m) for m in range(8)]  # 2 chunks per moment
+    sched = {}
+    for m, _s, c in refs:
+        sched.setdefault(c, []).append(m)
+    pool.register_moments("param", sched)
+    pf = SchedulePrefetcher(pool, lookahead=4, max_inflight=2)
+    pf.install(refs)
+    for m in range(4):
+        pool.set_moment(m)
+        pf.advance(m)
+        assert len(pool._staged) <= pf.max_inflight
+        for c in (2 * m, 2 * m + 1):  # consume the moment's chunks
+            mgr.access_tensor(f"t{c}")
+            mgr.release_tensor(f"t{c}", TensorState.HOLD)
+        assert len(pool._staged) <= pf.max_inflight
+    pool.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# _staged lifecycle: eviction / release / unregister all retire entries
+# ---------------------------------------------------------------------------
+
+
+def test_staged_entry_retired_by_eviction_and_counted_wasted():
+    pool, mgr, _ = _pool(n=4, device_chunks=1)
+    _park_on_host(mgr, 4)
+    pool.register_moments("param", {0: [5], 1: [1], 2: [2], 3: [3]})
+    pool.set_moment(0)
+    assert pool.stage("param", 0)
+    assert ("param", 0) in pool._staged
+    # a COMPUTE admission of another chunk must evict the staged one
+    # (only resident, device holds 1 chunk) and book it wasted
+    mgr.access_tensor("t1")
+    assert ("param", 0) not in pool._staged
+    assert pool.prefetch.wasted_stages == 1
+    mgr.release_tensor("t1", TensorState.HOLD)
+    pool.check_invariants()
+
+
+def test_staged_entry_retired_by_release_and_free():
+    pool, mgr, _ = _pool(n=4, device_chunks=2)
+    _park_on_host(mgr, 2)
+    pool.register_moments("param", {0: [5], 1: [6]})
+    pool.set_moment(0)
+    assert pool.stage("param", 0)
+    assert pool.stage("param", 1)
+    # FREEing every tensor of a staged chunk drops the payload AND the
+    # staged entry (release_payload path)
+    mgr.release_tensor("t0", TensorState.FREE)
+    assert ("param", 0) not in pool._staged
+    assert pool.device_bytes_used() == mgr.chunk_bytes
+    pool.check_invariants()
+
+
+def test_staged_entries_cleared_on_unregister_stream():
+    pool, mgr, _ = _pool(n=4, device_chunks=4)
+    _park_on_host(mgr, 4)
+    pool.register_moments("param", {c: [c + 5] for c in range(4)})
+    pool.set_moment(0)
+    assert pool.stage("param", 0)
+    assert pool.stage("param", 1)
+    pool.unregister_stream("param")
+    assert not pool._staged
+    assert pool.device_bytes_used() == 0 and pool.host_bytes_used() == 0
+    # refs naming the unregistered stream are a no-op, not a KeyError
+    assert pool.stage("param", 0) is False
+
+
+# ---------------------------------------------------------------------------
+# GatherPrefetcher: unconsumed staged gathers <= max_inflight ACROSS calls
+# ---------------------------------------------------------------------------
+
+
+def test_gather_prefetcher_inflight_cap_across_advances():
+    """THE satellite bug: the old per-call counter let every advance()
+    stage another group, so up to `lookahead` unconsumed groups could
+    hold (p-1)/p bytes each.  The cap must be global until retire()."""
+    fetched = []
+    pf = GatherPrefetcher(lambda g: fetched.append(g) or True,
+                          lookahead=4, max_inflight=1)
+    pf.install([(m, m) for m in range(6)])  # group m read at moment m
+    pf.advance(0)
+    assert fetched == [1] and pf.inflight == {1}
+    # consecutive advances WITHOUT a retire must not stage more groups
+    assert pf.advance(0) == 0
+    assert pf.advance(1) == 0
+    assert fetched == [1] and pf.inflight == {1}
+    # dropping the group post-FWD/BWD frees the slot
+    pf.retire(1)
+    pf.advance(1)
+    assert fetched == [1, 2] and pf.inflight == {2}
+
+
+def test_gather_prefetcher_cap_two_and_failed_fetch_not_counted():
+    calls = []
+
+    def fetch(g):
+        calls.append(g)
+        return g % 2 == 0  # odd groups refuse (mixed state / resident)
+
+    pf = GatherPrefetcher(fetch, lookahead=6, max_inflight=2)
+    pf.install([(m, m) for m in range(8)])
+    pf.advance(0)  # window (0, 6]: groups 1..6; 1 refuses, 2 stages, ...
+    assert pf.inflight == {2, 4}
+    n0 = len(calls)
+    assert pf.advance(1) == 0  # still full: no new staged gathers
+    # a full in-flight set must not even probe further fetches
+    assert len(calls) == n0
+    pf.retire(2)
+    pf.advance(2)
+    assert pf.inflight == {4, 6}
+
+
+def test_gather_prefetcher_install_resets_inflight():
+    pf = GatherPrefetcher(lambda g: True, lookahead=2, max_inflight=1)
+    pf.install([(0, 0), (1, 1)])
+    pf.advance(0)
+    assert pf.inflight
+    pf.install([(0, 0), (1, 1)])  # new iteration schedule
+    assert not pf.inflight
+
+
+# ---------------------------------------------------------------------------
+# distributed integration: staged groups retired when replicas drop
+# ---------------------------------------------------------------------------
+
+
+def test_distributed_gather_inflight_bounded_over_steps():
+    jax = pytest.importorskip("jax")
+    from repro.configs import get_config, model_class
+    from repro.core.distributed import DistributedPatrickStarEngine
+
+    cfg = get_config("gpt2-paper-1b", smoke=True).replace(
+        param_dtype="float32", compute_dtype="float32")
+    tok = np.asarray(jax.random.randint(
+        jax.random.key(1), (4, 32), 0, cfg.vocab_size))
+    batch = {"tokens": tok, "labels": np.roll(tok, -1, 1),
+             "global_tokens": np.float32(4 * 32)}
+    dist = DistributedPatrickStarEngine(model_class(cfg), cfg, nproc=2,
+                                        device_memory_bytes=4_000_000,
+                                        gather_lookahead=3)
+    gpf = dist.gather_prefetcher
+    cap = gpf.max_inflight
+    seen_inflight = 0
+    orig = gpf.advance
+
+    def tracked(moment):
+        out = orig(moment)
+        nonlocal seen_inflight
+        seen_inflight = max(seen_inflight, len(gpf.inflight))
+        assert len(gpf.inflight) <= cap, moment
+        return out
+
+    gpf.advance = tracked
+    dist.step(batch)  # warm-up installs the gather schedule
+    m = dist.step(batch)
+    assert seen_inflight >= 1  # the prefetcher actually staged gathers
+    assert m.hidden_allgather_bytes > 0
+    # every staged group was retired by its post-FWD/BWD drop
+    assert not gpf.inflight
+    dist.check_invariants()

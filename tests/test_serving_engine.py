@@ -1,0 +1,288 @@
+"""Chunk-managed serving plane (core/serving.py): token-for-token parity
+with the compiled decode path, continuous-batching admission, the dynamic
+kv stream's alloc/free/unregister lifecycle, and the managed-vs-unmanaged
+capacity win."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, model_class
+from repro.core.serving import ServingEngine
+from repro.core.state import TensorState
+
+
+def _cfg():
+    return get_config("qwen3-0.6b", smoke=True).replace(
+        param_dtype="float32", compute_dtype="float32")
+
+
+def _engine(cfg, *, device=1_200_000, host=8_000_000, horizon=24, **kw):
+    return ServingEngine(model_class(cfg), cfg, device_memory_bytes=device,
+                         host_memory_bytes=host, max_seq_len=horizon, **kw)
+
+
+# ---------------------------------------------------------------------------
+# acceptance: chunk-managed greedy decode == compiled build_decode_step
+# ---------------------------------------------------------------------------
+
+
+def test_managed_decode_matches_compiled_decode_step():
+    """Greedy continuation through the kv chunk stream — under a device
+    budget tight enough to force mid-round KV spills — must equal the
+    compiled ``driver.build_decode_step`` replay token for token."""
+    from repro.configs.base import InputShape
+    from repro.core import zero
+    from repro.launch.mesh import make_smoke_mesh
+    from repro.runtime import driver
+    from repro.runtime.step import ChunkedRuntime, RuntimeOptions
+
+    cfg = _cfg()
+    mesh = make_smoke_mesh(2, 1)
+    rt = ChunkedRuntime(model_class(cfg), cfg, mesh, RuntimeOptions())
+    # one init tree shared by both planes (tp=1: local == full tensors)
+    params = rt.model.init_params(jax.random.key(0))
+    pstores = {}
+    for name, lay in rt.layouts.items():
+        if name == "stem":
+            pstores[name] = zero.flatten_to_store(lay, params["stem"])[None]
+        else:
+            stacked = params["groups"][name]
+            pstores[name] = jax.vmap(
+                lambda t, _l=lay: zero.flatten_to_store(_l, t))(stacked)[None]
+
+    B, S, new = 4, 10, 6
+    horizon = S + new
+    prompts = jax.random.randint(jax.random.key(1), (B, S), 0, cfg.vocab_size)
+    shape = InputShape("serve", horizon, B, "decode")
+    dec, _ = driver.build_decode_step(rt, shape)
+    caches = driver.init_caches(rt, shape)
+    tok = prompts[:, :1]
+    gen = []
+    for i in range(horizon - 1):
+        nxt, caches = dec(pstores, caches,
+                          prompts[:, i:i + 1] if i < S else tok, jnp.int32(i))
+        if i >= S - 1:
+            tok = nxt[:, None].astype(jnp.int32)
+            gen.append(np.asarray(nxt))
+    compiled = np.stack(gen, 1)  # [B, new]
+
+    # device budget below the param stream alone: params AND kv must page
+    eng = _engine(cfg, device=1_200_000, horizon=horizon, init_params=params)
+    assert eng.device_capacity < eng._param_stream_bytes + B * eng.kv_seq_bytes
+    pn = np.asarray(prompts)
+    rids = [eng.submit(pn[i], new) for i in range(B)]
+    eng.run()
+    for b, rid in enumerate(rids):
+        assert eng.result(rid) == compiled[b].tolist(), b
+    eng.check_invariants()
+    # the tight budget actually exercised the spill path
+    assert eng.pool.stats.d2h_bytes > 0
+    assert eng.pool.peak_device_bytes <= eng.device_capacity
+
+
+def test_round_peak_device_within_budget_and_prefetch_hides_bytes():
+    cfg = _cfg()
+    eng = _engine(cfg, device=1_200_000, horizon=24)
+    prompts = np.asarray(jax.random.randint(
+        jax.random.key(2), (6, 8), 0, cfg.vocab_size))
+    for p in prompts:
+        eng.submit(p, 8)
+    for m in eng.run():
+        assert m.peak_device_bytes <= eng.device_capacity
+    eng.check_invariants()
+    pf = eng.pool.prefetch
+    assert pf.hits > 0 and pf.hidden_h2d_bytes > 0
+
+
+# ---------------------------------------------------------------------------
+# continuous batching: admission queue, mid-flight frees, drain/re-register
+# ---------------------------------------------------------------------------
+
+
+def test_admission_queues_when_budget_full_then_drains():
+    """With budgets sized for ~2 concurrent sequences the rest must wait
+    in the queue and be admitted as earlier sequences complete — and the
+    whole backlog still finishes with the same tokens an uncontended
+    engine produces."""
+    cfg = _cfg()
+    # a long horizon makes one sequence's KV larger than a param chunk,
+    # so the total-capacity admission bound binds on KV increments
+    horizon = 512
+    prompts = np.asarray(jax.random.randint(
+        jax.random.key(3), (5, 6), 0, cfg.vocab_size))
+
+    wide = _engine(cfg, device=4_000_000, host=16_000_000, horizon=horizon)
+    wide_rids = [wide.submit(p, 5) for p in prompts]
+    wide.run()
+
+    # capacity sized so param stream + 2 sequences' kv (+ swap headroom)
+    # fit, the third queues
+    probe = _engine(cfg, device=1_500_000, host=16_000_000, horizon=horizon)
+    host = (probe._param_stream_bytes + probe.params_mgr.chunk_bytes
+            + 2 * probe.kv_seq_bytes + probe.kv_seq_bytes // 2 - 1_500_000)
+    eng = ServingEngine(model_class(cfg), cfg,
+                        device_memory_bytes=1_500_000,
+                        host_memory_bytes=host, max_seq_len=horizon)
+    rids = [eng.submit(p, 5) for p in prompts]
+    first = eng.step_round()
+    assert first.admitted == 2 and first.queued == 3
+    mets = [first] + eng.run()
+    assert sum(m.admitted for m in mets) == 5
+    assert all(m.active <= 2 for m in mets)
+    for rid, wrid in zip(rids, wide_rids):
+        assert eng.result(rid) == wide.result(wrid)
+    eng.check_invariants()
+
+
+def test_kv_stream_unregisters_on_drain_and_reregisters():
+    cfg = _cfg()
+    eng = _engine(cfg, device=1_500_000, horizon=16)
+    p = np.arange(4, dtype=np.int32) % cfg.vocab_size
+    r0 = eng.submit(p, 3)
+    eng.run()
+    # fully drained: the kv stream is gone from the pool
+    assert eng.kv_mgr is None
+    assert "kv" not in eng.pool.streams
+    out0 = eng.result(r0)
+    # second wave re-registers the stream from scratch; a fresh engine
+    # with the same seed must agree (determinism across re-registration)
+    r1 = eng.submit(p, 3)
+    eng.run()
+    assert eng.result(r1) == out0
+    assert eng.kv_mgr is None  # drained again
+    eng.check_invariants()
+
+
+def test_completion_frees_chunks_mid_flight():
+    """A short sequence finishing early returns its kv chunks to the pool
+    while longer ones keep decoding (continuous batching's whole point)."""
+    cfg = _cfg()
+    eng = _engine(cfg, device=1_500_000, horizon=24)
+    p = np.arange(6, dtype=np.int32) % cfg.vocab_size
+    eng.submit(p, 2)   # short
+    eng.submit(p, 10)  # long
+    eng.step_round()   # prefill both (1 token each)
+    assert eng.kv_mgr.cmap.num_payload_chunks == 2 * eng._total_layers
+    eng.step_round()   # short completes (2nd token), long continues
+    assert eng.active_count == 1
+    assert eng.kv_mgr.cmap.num_payload_chunks == eng._total_layers
+    eng.run()
+    eng.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# capacity: managed kv stream vs unmanaged device-resident caches
+# ---------------------------------------------------------------------------
+
+
+def test_managed_kv_at_least_doubles_concurrency():
+    """Fixed tight device budget: the managed kv stream (spillable to
+    host) must admit >= 2x the concurrent sequences of the unmanaged
+    baseline (raw device arrays), with identical outputs."""
+    cfg = _cfg()
+    N = 16
+    prompts = np.asarray(jax.random.randint(
+        jax.random.key(4), (N, 8), 0, cfg.vocab_size))
+
+    def serve(manage_kv, host):
+        eng = _engine(cfg, device=1_200_000, host=host, horizon=40,
+                      manage_kv=manage_kv)
+        rids = [eng.submit(p, 10) for p in prompts]
+        eng.run(max_rounds=300)
+        eng.check_invariants()
+        return eng, [eng.result(r) for r in rids]
+
+    managed, out_m = serve(True, 8_000_000)
+    unmanaged, out_u = serve(False, None)
+    assert out_m == out_u
+    assert managed.peak_concurrency >= 2 * unmanaged.peak_concurrency, (
+        managed.peak_concurrency, unmanaged.peak_concurrency)
+
+
+def test_unmanaged_kv_reserves_device_budget():
+    cfg = _cfg()
+    eng = _engine(cfg, device=1_200_000, host=None, horizon=40,
+                  manage_kv=False)
+    p = np.arange(8, dtype=np.int32) % cfg.vocab_size
+    for _ in range(12):
+        eng.submit(p, 6)
+    while eng.queued_count or eng.active_count:
+        eng.step_round()
+        assert eng.device_bytes_in_use() <= eng.device_capacity
+    eng.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# guard rails
+# ---------------------------------------------------------------------------
+
+
+def test_submit_validations():
+    cfg = _cfg()
+    eng = _engine(cfg, horizon=8)
+    with pytest.raises(ValueError, match="max_seq_len"):
+        eng.submit(np.arange(6, dtype=np.int32), 4)
+    with pytest.raises(ValueError, match="at least one token"):
+        eng.submit(np.zeros((0,), np.int32), 4)
+    # a budget that can never host one sequence refuses at submit
+    small = ServingEngine(
+        model_class(cfg), cfg, device_memory_bytes=1_000_000,
+        host_memory_bytes=1_000_000, max_seq_len=8)
+    small.host_capacity = 0
+    small.pool.host_capacity = 0
+    with pytest.raises(ValueError, match="never be admitted"):
+        small.submit(np.arange(2, dtype=np.int32), 2)
+
+
+def test_kv_first_access_zero_fills_like_fresh_cache():
+    """A freshly mapped kv tensor is FREE; its first access zero-fills —
+    which IS an empty decode cache, so admission needs no init write."""
+    cfg = _cfg()
+    eng = _engine(cfg, horizon=16)
+    eng.submit(np.arange(3, dtype=np.int32), 2)
+    newly = eng._admit()
+    name = eng._kv_name(newly[0].rid, eng._decode_groups[0].name, 0)
+    assert eng.kv_mgr.tensor_state(name) is TensorState.FREE
+    view = eng.kv_mgr.access_tensor(name, "device")
+    assert not view.any()
+    eng.kv_mgr.release_tensor(name, TensorState.HOLD)
+
+
+# ---------------------------------------------------------------------------
+# DynamicChunkMap — the kv stream's mutable mapping (deterministic checks;
+# the random-traffic property test lives in test_chunk_map.py)
+# ---------------------------------------------------------------------------
+
+
+def test_dynamic_map_add_remove_recycles_chunk_ids():
+    from repro.core.chunk import DynamicChunkMap, TensorSpec
+
+    dm = DynamicChunkMap(64)
+    a = dm.add_tensor(TensorSpec("a", (64,)))
+    b = dm.add_tensor(TensorSpec("b", (32,)))
+    assert (a.chunk_id, a.offset) == (0, 0)
+    assert (b.chunk_id, b.offset) == (1, 0)  # one tensor per chunk
+    assert dm.num_payload_chunks == 2
+    dm.remove_tensor("a")
+    assert dm.num_payload_chunks == 1
+    with pytest.raises(KeyError):
+        dm.placement("a")
+    # the freed id is recycled before the id space grows
+    c = dm.add_tensor(TensorSpec("c", (64,)))
+    assert c.chunk_id == 0
+    assert dm.num_chunks == 2  # high-water bound, not live count
+
+
+def test_dynamic_map_rejects_dup_and_oversize_and_groups():
+    from repro.core.chunk import ChunkMapError, DynamicChunkMap, TensorSpec
+
+    dm = DynamicChunkMap(16)
+    dm.add_tensor(TensorSpec("a", (16,)))
+    with pytest.raises(ChunkMapError):
+        dm.add_tensor(TensorSpec("a", (8,)))
+    with pytest.raises(ChunkMapError):
+        dm.add_tensor(TensorSpec("big", (17,)))
+    with pytest.raises(ChunkMapError):
+        dm.comm_group(0)  # rank-local: no communication groups
