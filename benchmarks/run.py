@@ -21,6 +21,9 @@ MODULES = [
     "benchmarks.chunk_search",    # Table 3 / Fig. 12
     "benchmarks.eviction",        # Sec. 8.3
     "benchmarks.tracer_bench",    # Fig. 2 / Sec. 8.1
+    "benchmarks.max_batch",       # Sec. 6 "larger batch" / act stream
+    "benchmarks.serving",         # serving plane: kv stream capacity
+    "benchmarks.timeline",        # transfer timeline / Fig. 16 stalls
 ]
 
 

@@ -1,0 +1,183 @@
+"""Transfer-timeline benchmark (Fig. 16-style step breakdown with stall
+bars): the two-queue DMA model surfaces hidden bytes that exceed their
+operator's overlap window as stall seconds, and bandwidth-aware prefetch
+(issue depth/time chosen against the timeline's projected idle windows)
+must cut those stalls vs the fixed ``lookahead=6 / max_inflight=2``
+policy at IDENTICAL H2D/D2H byte volumes and identical training losses.
+
+Asserted acceptance bars (--smoke runs them in CI):
+
+  * infinite bandwidth => zero stall and step time == summed compute;
+  * tight bandwidth    => aware_stall <= STALL_RATIO_BAR * fixed_stall,
+    with per-step H2D and D2H byte volumes equal and losses bit-equal;
+  * conservation: hidden + critical == h2d, wall == compute + stalls.
+
+The differentiating scenario is the paper's device-aware placement
+(Section 8.2): OS chunk groups living in GPU margin space are evicted by
+FWD/activation pressure mid-step and must be restaged before their ADAM
+moments.  The fixed-depth prefetcher issues at most 2 transfers ahead,
+so the dense ADAM reference burst (4 streams per moment) arrives late;
+the bandwidth-aware policy pre-stages the quads through BWD's long idle
+window.  Emits a JSON report.
+"""
+
+import argparse
+import json
+
+from benchmarks.common import csv, lm_batch
+from repro.analysis.costmodel import train_operator_costs
+from repro.configs import get_config, model_class
+from repro.core.engine import PatrickStarEngine
+from repro.core.timeline import TransferTimeline
+
+BUDGET = 4_000_000
+STEPS = 3  # measured post-warm-up steps
+STALL_RATIO_BAR = 0.85  # aware must cut total stall to <= this x fixed
+
+
+def _cfg():
+    return get_config("gpt2-paper-1b", smoke=True).replace(
+        num_layers=4, param_dtype="float32", compute_dtype="float32")
+
+
+def run(cfg, batch, *, h2d_bw, d2h_bw, aware):
+    tl = TransferTimeline(h2d_bandwidth=h2d_bw, d2h_bandwidth=d2h_bw)
+    eng = PatrickStarEngine(
+        model_class(cfg), cfg, device_memory_bytes=BUDGET, policy="opt",
+        device_aware_placement=True, timeline=tl,
+        bandwidth_aware_prefetch=aware)
+    eng.step(batch)  # warm-up (tracer + schedules + durations)
+    out = {"h2d_bytes": 0, "d2h_bytes": 0, "hidden": 0, "critical": 0,
+           "compute_s": 0.0, "h2d_stall_s": 0.0, "d2h_stall_s": 0.0,
+           "gather_stall_s": 0.0, "wall_s": 0.0, "losses": []}
+    for _ in range(STEPS):
+        m = eng.step(batch)
+        t = m.timeline
+        out["h2d_bytes"] += m.h2d_bytes + m.adam_h2d_bytes
+        out["d2h_bytes"] += m.d2h_bytes + m.adam_d2h_bytes
+        out["hidden"] += m.hidden_h2d_bytes
+        out["critical"] += m.critical_h2d_bytes
+        out["compute_s"] += t.compute_s
+        out["h2d_stall_s"] += t.h2d_stall_s
+        out["d2h_stall_s"] += t.d2h_stall_s
+        out["gather_stall_s"] += t.gather_stall_s
+        out["wall_s"] += t.wall_s
+        out["losses"].append(m.loss)
+        # conservation: every wall second is classified exactly once
+        assert abs(t.wall_s - t.step_s) <= 1e-9 * max(t.wall_s, 1e-30), (
+            t.wall_s, t.step_s)
+        assert m.hidden_h2d_bytes + m.critical_h2d_bytes \
+            == m.h2d_bytes + m.adam_h2d_bytes
+    out["stall_s"] = (out["h2d_stall_s"] + out["d2h_stall_s"]
+                      + out["gather_stall_s"])
+    eng.pool.check_invariants()
+    return out
+
+
+def bar(label, r, scale):
+    """One Fig. 16-style horizontal breakdown bar (text)."""
+    seg = lambda s, ch: ch * max(int(round(s / scale * 60)), 1 if s > 0 else 0)
+    print(f"  {label:<18} |{seg(r['compute_s'], '#')}"
+          f"{seg(r['h2d_stall_s'], 'h')}{seg(r['d2h_stall_s'], 'd')}"
+          f"{seg(r['gather_stall_s'], 'g')}| "
+          f"step={r['wall_s']:.3e}s stall={r['stall_s']:.3e}s")
+
+
+def distributed_breakdown(report):
+    """Full mode: p=2 eager plane with a finite collective lane — the
+    step decomposition gains a gather_stall term and the hidden/critical
+    gather split becomes temporal."""
+    from repro.core.distributed import DistributedPatrickStarEngine
+
+    cfg = _cfg().replace(num_layers=2)
+    batch = lm_batch(cfg, 4, 32)
+    eng = DistributedPatrickStarEngine(
+        model_class(cfg), cfg, nproc=2, device_memory_bytes=BUDGET,
+        device_aware_placement=False,
+        timeline_factory=lambda: TransferTimeline(collective_bandwidth=5e9))
+    eng.step(batch)
+    agg = {"compute_s": 0.0, "gather_stall_s": 0.0, "wall_s": 0.0}
+    for _ in range(2):
+        m = eng.step(batch)
+        t = m.rank_metrics[0].timeline
+        agg["compute_s"] += t.compute_s
+        agg["gather_stall_s"] += t.gather_stall_s
+        agg["wall_s"] += t.wall_s
+        assert abs(t.wall_s - t.step_s) <= 1e-9 * max(t.wall_s, 1e-30)
+    eng.check_invariants()
+    assert agg["gather_stall_s"] > 0.0  # the collective lane is finite
+    report["distributed_p2"] = agg
+    csv("timeline/distributed_p2", 0.0,
+        f"compute={agg['compute_s']:.3e};gather_stall={agg['gather_stall_s']:.3e}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI subset: one bandwidth point, assertions intact")
+    args = ap.parse_args()
+    cfg = _cfg()
+    batch = lm_batch(cfg, 4, 64)
+
+    # per-operator durations + chunk size fix the bandwidth scale: a
+    # chunk's wire time in units of one forward layer's compute
+    probe = PatrickStarEngine(model_class(cfg), cfg,
+                              device_memory_bytes=BUDGET, policy="opt")
+    cb = probe.params_mgr.chunk_bytes
+    costs = train_operator_costs(cfg, global_batch=4, seq_len=64,
+                                 num_layer_ops=4, chunk_bytes=cb)
+    del probe
+
+    report = {"budget_bytes": BUDGET, "chunk_bytes": cb,
+              "fwd_layer_s": costs.fwd_layer_s}
+
+    # -------- infinite bandwidth: stall is exactly zero ------------------
+    inf = run(cfg, batch, h2d_bw=None, d2h_bw=None, aware=True)
+    assert inf["stall_s"] == 0.0, inf
+    assert abs(inf["wall_s"] - inf["compute_s"]) \
+        <= 1e-9 * max(inf["wall_s"], 1e-30)
+    report["infinite_bw"] = inf
+    csv("timeline/infinite_bw", 0.0,
+        f"compute={inf['compute_s']:.3e};stall={inf['stall_s']:.3e}")
+
+    # -------- tight bandwidth: aware vs fixed at equal volumes -----------
+    mults = (1.0,) if args.smoke else (0.5, 1.0, 2.0)
+    print("step breakdown (#=compute h=h2d-stall d=d2h-stall g=gather-stall)")
+    for mult in mults:
+        bw = cb / (mult * costs.fwd_layer_s)  # chunk wire = mult fwd layers
+        fixed = run(cfg, batch, h2d_bw=bw, d2h_bw=bw, aware=False)
+        aware = run(cfg, batch, h2d_bw=bw, d2h_bw=bw, aware=True)
+        # byte-volume neutrality: bandwidth-awareness changes WHEN bytes
+        # move, never how many
+        assert aware["h2d_bytes"] == fixed["h2d_bytes"], (aware, fixed)
+        assert aware["d2h_bytes"] == fixed["d2h_bytes"], (aware, fixed)
+        # training loss parity: prefetch policy never changes the math
+        assert aware["losses"] == fixed["losses"], (aware["losses"],
+                                                    fixed["losses"])
+        ratio = aware["stall_s"] / fixed["stall_s"]
+        assert ratio <= STALL_RATIO_BAR, (
+            f"bandwidth-aware prefetch must cut stall to <= "
+            f"{STALL_RATIO_BAR}x fixed-depth: got {ratio:.3f} "
+            f"({aware['stall_s']:.3e} vs {fixed['stall_s']:.3e})")
+        scale = max(fixed["wall_s"], aware["wall_s"])
+        print(f"chunk wire = {mult} x fwd layer (bw={bw:.3e} B/s):")
+        bar("fixed-depth", fixed, scale)
+        bar("bandwidth-aware", aware, scale)
+        report[f"tight_bw_x{mult}"] = {
+            "bandwidth_bytes_per_s": bw,
+            "fixed": {k: v for k, v in fixed.items() if k != "losses"},
+            "aware": {k: v for k, v in aware.items() if k != "losses"},
+            "stall_ratio": round(ratio, 4),
+        }
+        csv(f"timeline/stall_x{mult}", 0.0,
+            f"fixed={fixed['stall_s']:.3e};aware={aware['stall_s']:.3e};"
+            f"ratio={ratio:.3f};h2d_bytes={aware['h2d_bytes']}")
+
+    if not args.smoke:
+        distributed_breakdown(report)
+
+    print(json.dumps(report, indent=2))
+
+
+if __name__ == "__main__":
+    main()

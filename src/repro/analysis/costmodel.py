@@ -282,6 +282,91 @@ def analyze_pair(cfg: BaseConfig, shape: InputShape, *, dp: int, tp: int,
     return ct
 
 
+# ---------------------------------------------------------------------------
+# Per-operator compute durations for the transfer timeline
+# (core/timeline.py): the eager engines advance a simulated clock
+# moment-by-moment; each operator's duration is its roofline time —
+# max(flops/PEAK, hbm/BW) — carved out of the analytical step ledger.
+# ---------------------------------------------------------------------------
+
+
+def _roofline_seconds(ct: CostTerms) -> float:
+    return max(ct.flops / PEAK_FLOPS, ct.hbm_bytes / HBM_BW)
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainOperatorCosts:
+    """Durations of the training engine's moment kinds (seconds)."""
+
+    fwd_layer_s: float
+    bwd_layer_s: float  # recompute + grad under full remat: 3x fwd
+    adam_chunk_s: float  # one chunk's 4-stream quad update
+
+    def of_moment(self, op_name: str, phase: str) -> float:
+        """Duration of one tracer moment.  ``.end`` moments mark the
+        operator's finish and carry no compute of their own."""
+        if op_name.endswith(".end"):
+            return 0.0
+        if phase == "FWD":
+            return self.fwd_layer_s
+        if phase == "BWD":
+            return self.bwd_layer_s
+        if phase == "ADAM":
+            return self.adam_chunk_s
+        return 0.0
+
+
+def train_operator_costs(
+    cfg: BaseConfig,
+    *,
+    global_batch: int,
+    seq_len: int,
+    num_layer_ops: int,
+    chunk_bytes: int,
+    dp: int = 1,
+) -> TrainOperatorCosts:
+    """Per-operator durations of one training iteration.
+
+    The analytical train ledger is 4x forward under full remat
+    (fwd + recompute + 2x bwd), so one layer's forward is a quarter of
+    the step divided over the layer count, and a backward_layer moment
+    (recompute inside vjp + both grads) is the remaining 3x.  The ADAM
+    chunk update is memory-bound: read+write of the grad/p32/m/v quad at
+    HBM bandwidth."""
+    shape = InputShape("timeline", seq_len, max(global_batch, 1), "train")
+    ct = analyze_pair(cfg, shape, dp=dp, tp=1, remat="full")
+    fwd_layer = _roofline_seconds(ct) / 4.0 / max(num_layer_ops, 1)
+    return TrainOperatorCosts(
+        fwd_layer_s=fwd_layer,
+        bwd_layer_s=3.0 * fwd_layer,
+        adam_chunk_s=2.0 * 4.0 * chunk_bytes / HBM_BW,
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeOperatorCosts:
+    """Durations of the serving engine's per-layer ops (seconds)."""
+
+    prefill_layer_s: float  # one layer over one prompt
+    decode_layer_s: float  # one layer, one token, one sequence
+
+
+def serve_operator_costs(
+    cfg: BaseConfig, *, prompt_tokens: int, horizon: int, num_layers: int
+) -> ServeOperatorCosts:
+    """Per-layer prefill/decode durations for one sequence (batch 1)."""
+    n = max(num_layers, 1)
+    pre = analyze_pair(
+        cfg, InputShape("timeline", max(prompt_tokens, 1), 1, "prefill"),
+        dp=1, tp=1)
+    dec = analyze_pair(
+        cfg, InputShape("timeline", max(horizon, 1), 1, "decode"), dp=1, tp=1)
+    return ServeOperatorCosts(
+        prefill_layer_s=_roofline_seconds(pre) / n,
+        decode_layer_s=_roofline_seconds(dec) / n,
+    )
+
+
 def _param_bytes_local(cfg: BaseConfig, tp: int) -> float:
     """bf16 parameter bytes per model-rank (what ZeRO gathers move)."""
     d = cfg.d_model

@@ -50,6 +50,7 @@ tests/test_distributed_engine.py and benchmarks/comm_volume.py).
 from __future__ import annotations
 
 import dataclasses
+from typing import Any, Callable
 
 import jax
 import numpy as np
@@ -105,6 +106,8 @@ class DistributedPatrickStarEngine:
         prefetch: bool = True,
         prefetch_lookahead: int = 6,
         gather_lookahead: int = 2,
+        timeline_factory: "Callable[[], Any] | None" = None,
+        bandwidth_aware_prefetch: bool = True,
         manage_activations: bool = True,
         strict_device_budget: bool = False,
     ) -> None:
@@ -130,6 +133,8 @@ class DistributedPatrickStarEngine:
                 lr=lr, betas=betas, eps=eps, seed=seed,
                 device_aware_placement=device_aware_placement,
                 prefetch=prefetch, prefetch_lookahead=prefetch_lookahead,
+                timeline=timeline_factory() if timeline_factory else None,
+                bandwidth_aware_prefetch=bandwidth_aware_prefetch,
                 manage_activations=manage_activations,
                 strict_device_budget=strict_device_budget,
                 nproc=nproc, rank=r, collective=self,
@@ -141,9 +146,16 @@ class DistributedPatrickStarEngine:
         self.cmap = rank0.cmap
         if any(c.cmap != self.cmap for c in self.ranks[1:]):
             raise AssertionError("rank cores disagree on the chunk layout")
+        # the gather prefetcher projects against rank 0's timeline (lock-
+        # step execution keeps every rank's clock identical); a staged
+        # gather moves (p-1) chunks onto every rank's collective lane.
+        gp_timeline = rank0.timeline if bandwidth_aware_prefetch else None
         self.gather_prefetcher = GatherPrefetcher(
             lambda grp: self.fetch_group(grp, hidden=True),
-            lookahead=gather_lookahead) if gather_lookahead > 0 else None
+            lookahead=gather_lookahead,
+            timeline=gp_timeline,
+            group_bytes=(nproc - 1) * rank0.params_mgr.chunk_bytes,
+        ) if gather_lookahead > 0 else None
         self.step_count = 0
 
     # ----------------------------------------------------------- collectives
@@ -198,7 +210,8 @@ class DistributedPatrickStarEngine:
                     src = self.ranks[o].params_mgr._records[c].payload
                     dst[...] = src
                 core.pool.account_allgather(
-                    (self.nproc - 1) * chunk_bytes, hidden=hidden)
+                    (self.nproc - 1) * chunk_bytes, hidden=hidden,
+                    group=group)
         finally:
             for r, c in pinned:
                 self.ranks[r].params_mgr.unpin(c)

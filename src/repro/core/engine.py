@@ -68,6 +68,7 @@ from repro.core.manager import ChunkManager
 from repro.core.memory import HeteroMemory, OutOfMemory, SchedulePrefetcher
 from repro.core.placement import PlacementPlan, plan_placement
 from repro.core.state import ChunkState, TensorState
+from repro.core.timeline import StepTimeline, TransferTimeline
 from repro.core.tracer import RuntimeMemoryTracer
 from repro.models.api import Model
 from repro.models.layers import AxisCtx
@@ -98,6 +99,10 @@ class EngineMetrics:
     # high-water mark of the unified pool's device tier THIS step (the
     # pool keeps the cumulative lifetime mark separately)
     peak_device_bytes: int = 0
+    # transfer-timeline decomposition of this step's simulated wall time
+    # (step == compute + h2d_stall + d2h_stall + gather_stall); None when
+    # the engine runs without a timeline.
+    timeline: StepTimeline | None = None
 
     @property
     def total_s(self) -> float:
@@ -164,6 +169,8 @@ class PatrickStarEngine:
         embedding_on_host: bool = True,
         prefetch: bool = True,
         prefetch_lookahead: int = 6,
+        timeline: TransferTimeline | None = None,
+        bandwidth_aware_prefetch: bool = True,
         manage_activations: bool = True,
         strict_device_budget: bool = False,
         nproc: int = 1,
@@ -231,6 +238,12 @@ class PatrickStarEngine:
         self.pool = HeteroMemory(
             device_capacity_bytes=device_memory_bytes,
             host_capacity_bytes=host_memory_bytes, policy=policy)
+        # transfer timeline (optional): every tier move / collective is
+        # enqueued on finite-bandwidth DMA engines and the per-step report
+        # decomposes step time into compute + per-engine stalls.
+        self.timeline = timeline
+        if timeline is not None:
+            self.pool.set_timeline(timeline)
         self.params_mgr = ChunkManager(
             self.cmap, dtype=np.float32, name="param", pool=self.pool)
         self.os_mgrs = {
@@ -271,12 +284,14 @@ class PatrickStarEngine:
         self.act_cmap = None
         self._act_numel = 0
         self._batch_sig: tuple | None = None
+        self._batch_tokens_shape: tuple[int, int] = (1, 1)
         # schedule-driven prefetcher (installed after the warm-up
         # iteration).  OPT only: staging consumes the same future-reference
         # schedule, and running it under lru/fifo would contaminate those
         # baselines with future knowledge.
         self.prefetcher = SchedulePrefetcher(
-            self.pool, lookahead=prefetch_lookahead) \
+            self.pool, lookahead=prefetch_lookahead,
+            timeline=timeline if bandwidth_aware_prefetch else None) \
             if prefetch and policy == "opt" else None
 
         # initialize payloads: param fp16 stream + param fp32 copies, for
@@ -433,10 +448,20 @@ class PatrickStarEngine:
         communication group by all-gather before the operator runs."""
         if self.collective is None:
             return
+        timed = self.pool.timeline is not None
+        groups: set[int] = set()
         for n in self._group_tensor_names[gname][layer]:
             chunk_id = self.cmap.placement(n).chunk_id
+            if timed:
+                groups.add(self.cmap.comm_group(chunk_id))
             if self.params_mgr.chunk_state(chunk_id) is ChunkState.RELEASED:
                 self.collective.fetch_group(self.cmap.comm_group(chunk_id))
+        if timed:
+            # this operator consumes the layer's groups: a prefetched
+            # gather still on the collective wire stalls it for the
+            # remainder
+            for grp in sorted(groups):
+                self.pool.timeline.wait_for(("gather", grp))
 
     def _access_layer(self, gname: str, layer: int, mgr: ChunkManager,
                       dev: str, record: bool = True):
@@ -495,7 +520,14 @@ class PatrickStarEngine:
             (k, tuple(getattr(v, "shape", ()))) for k, v in batch.items()))
         if self._batch_sig is not None and sig != self._batch_sig:
             self.tracer.warmup = True
+            if self.timeline is not None:
+                # the traced moment schedule (and with it the per-moment
+                # durations) is stale; re-installed after the re-warm-up
+                self.timeline.install_durations({})
         self._batch_sig = sig
+        tok = batch.get("tokens")
+        if tok is not None and getattr(tok, "ndim", 0) >= 2:
+            self._batch_tokens_shape = (int(tok.shape[0]), int(tok.shape[1]))
         self.tracer.begin_iteration()
         return _StepState(
             batch=batch, met=EngineMetrics(),
@@ -721,8 +753,26 @@ class PatrickStarEngine:
             if self.prefetcher is not None:
                 self.prefetcher.install(
                     self.tracer.reference_sequence(by_stream))
+        if self.timeline is not None:
+            met.timeline = self.timeline.take_step()
+            if not self.tracer.warmup and not self.timeline.has_durations:
+                # first post-warm-up install (and re-install after a
+                # batch-shape re-warm-up): the traced moments now exist
+                self.timeline.install_durations(self._moment_durations())
         self.step_count += 1
         return met
+
+    def _moment_durations(self) -> dict[int, float]:
+        """Per-moment compute durations for the transfer timeline,
+        derived from the analytical cost model over this batch shape."""
+        from repro.analysis.costmodel import train_operator_costs
+
+        b, s = self._batch_tokens_shape
+        costs = train_operator_costs(
+            self.cfg, global_batch=b, seq_len=s,
+            num_layer_ops=sum(g.length for g in self.model.groups()),
+            chunk_bytes=self.params_mgr.chunk_bytes)
+        return self.tracer.duration_schedule(costs.of_moment)
 
     # ------------------------------------------------------------------ step
     def step(self, batch: dict) -> EngineMetrics:

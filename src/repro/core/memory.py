@@ -66,6 +66,7 @@ from typing import TYPE_CHECKING, Callable, Iterable, Literal
 import numpy as np
 
 from repro.core.state import ChunkState
+from repro.core.timeline import TransferTimeline
 
 if TYPE_CHECKING:  # pragma: no cover - import cycle with manager.py
     from repro.core.manager import ChunkManager, _ChunkRecord
@@ -208,6 +209,13 @@ class HeteroMemory:
         self._chunkable_device_bytes: Callable[[], int | None] | None = None
         # chunks brought to device by the prefetcher, awaiting their use
         self._staged: set[tuple[str, int]] = set()
+        # optional transfer timeline: every tier move is enqueued on a
+        # finite-bandwidth DMA engine and hidden bytes in excess of the
+        # consuming operator's compute window surface as stall seconds.
+        self.timeline: TransferTimeline | None = None
+        # >0 while the staging path runs: evictions it cascades are
+        # overlappable (issued ahead of demand), not consumer waits.
+        self._staging = 0
 
     # --------------------------------------------------------------- streams
     def register_stream(self, mgr: "ChunkManager") -> None:
@@ -226,6 +234,8 @@ class HeteroMemory:
                 rec.payload = None
                 rec.location = None
             self._staged.discard((name, rec.chunk_id))
+            if self.timeline is not None:
+                self.timeline.cancel((name, rec.chunk_id))
         self._moments.pop(name, None)
 
     @property
@@ -297,25 +307,42 @@ class HeteroMemory:
                 self._device_used, self.device_capacity)
 
     # ------------------------------------------------------------ collectives
-    def account_allgather(self, nbytes: int, *, hidden: bool = False) -> None:
+    def account_allgather(self, nbytes: int, *, hidden: bool = False,
+                          group: int | None = None) -> None:
         """Book bytes this rank received in a chunk-group all-gather.
         ``hidden`` marks a prefetcher-staged gather (overlappable), else
-        the fetch is on the consuming operator's critical path."""
+        the fetch is on the consuming operator's critical path.  With a
+        timeline attached the gather also lands on the collective lane:
+        a hidden gather's rendezvous key is ``("gather", group)`` — the
+        consuming layer waits on it, so a gather issued too late for its
+        overlap window surfaces as gather-stall seconds."""
         self.collectives.allgather_bytes += nbytes
         self.collectives.allgather_count += 1
         if hidden:
             self.collectives.hidden_allgather_bytes += nbytes
         else:
             self.collectives.critical_allgather_bytes += nbytes
+        if self.timeline is not None:
+            key = ("gather", group) if (hidden and group is not None) else None
+            self.timeline.record_collective(nbytes, critical=not hidden,
+                                            key=key)
 
     def account_reduce_scatter(self, nbytes: int) -> None:
-        """Book grad bytes this rank sent to chunk owners (Algorithm 2)."""
+        """Book grad bytes this rank sent to chunk owners (Algorithm 2).
+        On the timeline the reduce-scatter is overlappable (the paper
+        overlaps it with remaining BWD compute); it still occupies the
+        collective lane, so it delays any gather queued behind it."""
         self.collectives.reduce_scatter_bytes += nbytes
         self.collectives.reduce_scatter_count += 1
+        if self.timeline is not None:
+            self.timeline.record_collective(nbytes, critical=False)
 
     def account_allreduce(self, nbytes: int) -> None:
         """Book non-chunk (stem) grad all-reduce bytes."""
         self.collectives.allreduce_bytes += nbytes
+        if self.timeline is not None:
+            self.timeline.record_collective(nbytes, critical=False,
+                                            stream="stem")
 
     # -------------------------------------------------------------- schedule
     def register_moments(self, stream: str, moments: dict[int, list[int]]) -> None:
@@ -324,6 +351,13 @@ class HeteroMemory:
 
     def set_moment(self, moment: int) -> None:
         self._current_moment = moment
+        if self.timeline is not None:
+            self.timeline.advance_to_moment(moment)
+
+    def set_timeline(self, timeline: TransferTimeline | None) -> None:
+        """Attach a transfer timeline: every tier move (and collective)
+        from here on is enqueued on its DMA engines."""
+        self.timeline = timeline
 
     def set_chunkable_memory_fn(self, fn: Callable[[], int | None]) -> None:
         """Tracer hook: returns the device bytes currently usable for chunks."""
@@ -373,11 +407,18 @@ class HeteroMemory:
                 # the staged H2D will be re-paid later — a wasted stage.
                 self.prefetch.wasted_stages += 1
                 self._staged.discard(key)
+                if self.timeline is not None:
+                    self.timeline.cancel(key)
             self.make_room(dev, mgr.chunk_bytes, exclude=key)
             self._move(mgr, rec, dev, kind="demand")
         elif dev == "device" and key in self._staged:
             self.prefetch.hits += 1
             self._staged.discard(key)
+            if self.timeline is not None:
+                # the consumer arrived: a staged transfer still on the
+                # wire stalls it for the remainder — hidden bytes beyond
+                # the overlap window surface instead of disappearing.
+                self.timeline.wait_for(key)
         return rec
 
     def release_payload(self, mgr: "ChunkManager", chunk_id: int) -> None:
@@ -388,6 +429,8 @@ class HeteroMemory:
         rec.payload = None
         rec.location = None
         self._staged.discard((mgr.name, chunk_id))
+        if self.timeline is not None:
+            self.timeline.cancel((mgr.name, chunk_id))
 
     def _capacity(self, dev: Device) -> int | None:
         return self.device_budget() if dev == "device" else self.host_capacity
@@ -427,6 +470,23 @@ class HeteroMemory:
                 self.prefetch.critical_h2d_bytes += mgr.chunk_bytes
                 if kind == "demand":
                     self.prefetch.demand_misses += 1
+        if self.timeline is not None:
+            key = (mgr.name, rec.chunk_id)
+            if to_dev == "device":
+                if kind == "stage":
+                    self.timeline.record_h2d(
+                        mgr.chunk_bytes, stream=mgr.name, critical=False,
+                        key=key)
+                else:
+                    self.timeline.record_h2d(
+                        mgr.chunk_bytes, stream=mgr.name, critical=True)
+            else:
+                # a D2H issued by the staging path (making room ahead of
+                # demand) is overlappable; a demand-path eviction blocks
+                # the admission that triggered it.
+                self.timeline.record_d2h(
+                    mgr.chunk_bytes, stream=mgr.name,
+                    critical=self._staging == 0)
         self._uncharge(mgr, rec.location, mgr.chunk_bytes)
         rec.location = to_dev
         self._charge(mgr, to_dev, mgr.chunk_bytes)
@@ -501,6 +561,8 @@ class HeteroMemory:
         if key in self._staged:
             self.prefetch.wasted_stages += 1
             self._staged.discard(key)
+            if self.timeline is not None:
+                self.timeline.cancel(key)
         if mgr.chunk_state(rec.chunk_id) is ChunkState.FREE:
             self.release_payload(mgr, rec.chunk_id)
             return
@@ -553,6 +615,14 @@ class HeteroMemory:
         t_use = self._next_use(stream, chunk_id)
         if t_use == _NEVER:
             return False  # no known future device use: nothing to front-run
+        self._staging += 1
+        try:
+            return self._stage_locked(mgr, rec, key, t_use)
+        finally:
+            self._staging -= 1
+
+    def _stage_locked(self, mgr: "ChunkManager", rec: "_ChunkRecord",
+                      key: tuple[str, int], t_use: int) -> bool:
         cap = self._capacity("device")
         while cap is not None and self._used("device") + mgr.chunk_bytes > cap:
             # one sweep over device residents: collect the best evictable
@@ -598,10 +668,27 @@ class SchedulePrefetcher:
     reference in the window ``(m, m + lookahead]`` — the next-k chunk
     references per stream — before the operator at moment ``m`` runs, so
     their H2D transfers overlap that operator's compute (simulated-async:
-    the pool books them as hidden bytes)."""
+    the pool books them as hidden bytes).
+
+    **Bandwidth-aware mode** (``timeline=`` set and durations installed):
+    issue depth and issue *time* are chosen against the timeline's
+    projected idle windows instead of the fixed ``lookahead`` /
+    ``max_inflight``.  Walking upcoming references in schedule order, a
+    reference is staged now iff its projected completion (H2D queue
+    backlog + wire time) fits inside the compute window until its use
+    moment — i.e. the transfer is *actually hidable* — or it is within
+    the base ``lookahead`` anyway (an imminent reference gains partial
+    overlap even when it cannot fully hide).  The walk stops at the
+    first reference that is neither: issuing it now would only park a
+    late transfer and occupy memory.  Byte volume stays neutral — every
+    stage still goes through the pool's conservative ``stage()`` rule —
+    but lead time adapts to bandwidth, which is what cuts stall seconds
+    (asserted in benchmarks/timeline.py)."""
 
     def __init__(
-        self, pool: HeteroMemory, *, lookahead: int = 6, max_inflight: int = 2
+        self, pool: HeteroMemory, *, lookahead: int = 6, max_inflight: int = 2,
+        timeline: TransferTimeline | None = None, bw_inflight_cap: int = 16,
+        bw_horizon: int = 64,
     ) -> None:
         self.pool = pool
         self.lookahead = lookahead
@@ -609,6 +696,11 @@ class SchedulePrefetcher:
         # the working set only parks chunks where the next demand miss
         # evicts them again (wasted transfers on tight budgets).
         self.max_inflight = max_inflight
+        self.timeline = timeline
+        # bandwidth-aware mode still bounds device residency, just looser:
+        # depth is chosen by the overlap window, the cap is the backstop.
+        self.bw_inflight_cap = bw_inflight_cap
+        self.bw_horizon = bw_horizon  # max refs scanned per advance
         self._moments: list[int] = []
         self._refs: list[tuple[int, str, int]] = []
 
@@ -621,10 +713,16 @@ class SchedulePrefetcher:
         self._refs = sorted(refs)
         self._moments = [m for m, _, _ in self._refs]
 
+    @property
+    def bandwidth_aware(self) -> bool:
+        return self.timeline is not None and self.timeline.has_durations
+
     def advance(self, moment: int) -> int:
         """Stage upcoming references; returns how many chunks were staged."""
         if not self._refs or self.lookahead <= 0:
             return 0
+        if self.bandwidth_aware:
+            return self._advance_bandwidth_aware(moment)
         lo = bisect.bisect_right(self._moments, moment)
         hi = bisect.bisect_right(self._moments, moment + self.lookahead)
         staged = 0
@@ -633,6 +731,35 @@ class SchedulePrefetcher:
                 break
             if self.pool.stage(stream, chunk_id):
                 staged += 1
+        return staged
+
+    def _advance_bandwidth_aware(self, moment: int) -> int:
+        tl = self.timeline
+        assert tl is not None
+        lo = bisect.bisect_right(self._moments, moment)
+        staged = 0
+        for m, stream, chunk_id in self._refs[lo:lo + self.bw_horizon]:
+            if len(self.pool._staged) >= self.bw_inflight_cap:
+                break
+            mgr = self.pool._streams.get(stream)
+            if mgr is None:
+                continue
+            if (stream, chunk_id) in self.pool._staged:
+                continue
+            ready = tl.projected_ready_s("h2d", mgr.chunk_bytes)
+            if ready <= tl.time_until(m):
+                # fits inside the projected idle window before its use
+                if self.pool.stage(stream, chunk_id):
+                    staged += 1
+            elif m <= moment + self.lookahead:
+                # imminent: cannot fully hide, but issuing now still
+                # converts part of the wait into overlap
+                if self.pool.stage(stream, chunk_id):
+                    staged += 1
+            else:
+                # neither hidable nor imminent: the H2D queue is already
+                # saturated past this reference's window — stop issuing
+                break
         return staged
 
 
@@ -659,7 +786,15 @@ class GatherPrefetcher:
     at that drop — only then does a staging slot free up.  (A per-call
     counter would let up to ``lookahead`` unconsumed groups pile up
     across consecutive ``advance()`` calls, silently exceeding the
-    documented memory bound.)"""
+    documented memory bound.)
+
+    In **bandwidth-aware mode** (``timeline=`` plus ``group_bytes``) the
+    issue depth follows the collective lane's projected idle window, the
+    same policy as :class:`SchedulePrefetcher`: gather a group ahead iff
+    its wire time fits the compute until its consuming moment (or it is
+    within the base lookahead), stop at the first group that is neither.
+    The in-flight *memory* bound still applies via ``bw_inflight_cap``
+    (each staged gather holds (p-1)/p of a group on every rank)."""
 
     def __init__(
         self,
@@ -667,6 +802,10 @@ class GatherPrefetcher:
         *,
         lookahead: int = 2,
         max_inflight: int = 1,
+        timeline: TransferTimeline | None = None,
+        group_bytes: int = 0,
+        bw_inflight_cap: int = 4,
+        bw_horizon: int = 16,
     ) -> None:
         self.fetch_group = fetch_group
         self.lookahead = lookahead
@@ -674,6 +813,10 @@ class GatherPrefetcher:
         # rank at once, so in-flight gathers are capped much tighter than
         # in-flight H2D stages.
         self.max_inflight = max_inflight
+        self.timeline = timeline
+        self.group_bytes = group_bytes
+        self.bw_inflight_cap = bw_inflight_cap
+        self.bw_horizon = bw_horizon
         self._moments: list[int] = []
         self._refs: list[tuple[int, int]] = []
         # groups staged by this prefetcher whose replicas are still held
@@ -702,10 +845,17 @@ class GatherPrefetcher:
         post-BWD reduce-scatter): its staging slot frees up."""
         self._inflight.discard(group)
 
+    @property
+    def bandwidth_aware(self) -> bool:
+        return (self.timeline is not None and self.timeline.has_durations
+                and self.group_bytes > 0)
+
     def advance(self, moment: int) -> int:
         """Gather upcoming remote groups; returns how many gathers ran."""
         if not self._refs or self.lookahead <= 0:
             return 0
+        if self.bandwidth_aware:
+            return self._advance_bandwidth_aware(moment)
         lo = bisect.bisect_right(self._moments, moment)
         hi = bisect.bisect_right(self._moments, moment + self.lookahead)
         fetched = 0
@@ -717,4 +867,23 @@ class GatherPrefetcher:
             if self.fetch_group(group):
                 self._inflight.add(group)
                 fetched += 1
+        return fetched
+
+    def _advance_bandwidth_aware(self, moment: int) -> int:
+        tl = self.timeline
+        assert tl is not None
+        lo = bisect.bisect_right(self._moments, moment)
+        fetched = 0
+        for m, group in self._refs[lo:lo + self.bw_horizon]:
+            if len(self._inflight) >= self.bw_inflight_cap:
+                break
+            if group in self._inflight:
+                continue
+            ready = tl.projected_ready_s("coll", self.group_bytes)
+            if ready <= tl.time_until(m) or m <= moment + self.lookahead:
+                if self.fetch_group(group):
+                    self._inflight.add(group)
+                    fetched += 1
+            else:
+                break
         return fetched

@@ -68,6 +68,7 @@ from repro.core.chunk import (
 from repro.core.manager import ChunkManager
 from repro.core.memory import HeteroMemory, SchedulePrefetcher
 from repro.core.state import TensorState
+from repro.core.timeline import StepTimeline, TransferTimeline
 
 # shared with the training engine: leaf names MUST be byte-identical
 # across planes for chunk placements to line up
@@ -107,6 +108,9 @@ class ServeRoundMetrics:
     demand_misses: int
     peak_device_bytes: int  # pool device high-water mark this round
     wall_s: float
+    # transfer-timeline decomposition of the round's simulated time
+    # (round == compute + h2d_stall + d2h_stall); None without a timeline
+    timeline: StepTimeline | None = None
 
     @property
     def tokens(self) -> int:
@@ -129,6 +133,9 @@ class ServingEngine:
         manage_kv: bool = True,
         prefetch: bool = True,
         prefetch_lookahead: int = 8,
+        timeline: TransferTimeline | None = None,
+        bandwidth_aware_prefetch: bool = True,
+        max_decode_batch: int | None = None,
         seed: int = 0,
         init_params: Any | None = None,
     ) -> None:
@@ -179,6 +186,9 @@ class ServingEngine:
         self.pool = HeteroMemory(
             device_capacity_bytes=device_memory_bytes,
             host_capacity_bytes=host_memory_bytes, policy=policy)
+        self.timeline = timeline
+        if timeline is not None:
+            self.pool.set_timeline(timeline)
         self.params_mgr = ChunkManager(
             self.cmap, dtype=np.float32, name="param", pool=self.pool)
         for name, val in named:
@@ -201,6 +211,7 @@ class ServingEngine:
         # the leaves concatenated (k then v for attention; any cache
         # pytree works — SSM states included).
         self._cache_tmpl: dict[str, Any] = {}
+        self._batchable: dict[str, bool] = {}
         max_numel = 1
         self._kv_seq_raw_bytes = 0  # actual (unaligned, true-dtype) bytes
         for g in self._decode_groups:
@@ -211,6 +222,13 @@ class ServingEngine:
             numels = [int(np.prod(s)) for s in shapes]
             self._cache_tmpl[g.name] = (treedef, shapes, dtypes, numels)
             max_numel = max(max_numel, sum(numels))
+            # batched decode packs sequences along the cache's leading
+            # axis; only safe when every leaf of the one-sequence template
+            # leads with the batch dim (size 1).  Archs that stack other
+            # axes first (e.g. zamba's per-unit mamba states) decode
+            # sequence-at-a-time.
+            self._batchable[g.name] = all(
+                len(s) >= 1 and s[0] == 1 for s in shapes)
             self._kv_seq_raw_bytes += g.length * sum(
                 n * np.dtype(d).itemsize for n, d in zip(numels, dtypes))
         self._kv_chunk_elems = build_kv_chunk_map(max_numel).chunk_size
@@ -237,8 +255,23 @@ class ServingEngine:
             self.pool.set_chunkable_memory_fn(
                 lambda: self.device_capacity - self._raw_kv_bytes)
         self.prefetcher = SchedulePrefetcher(
-            self.pool, lookahead=prefetch_lookahead) \
+            self.pool, lookahead=prefetch_lookahead,
+            timeline=timeline if bandwidth_aware_prefetch else None) \
             if prefetch and policy == "opt" and manage_kv else None
+
+        # batched decode: same-position active sequences pack into ONE
+        # g.decode call per layer.  The cap bounds how many kv chunks sit
+        # in COMPUTE (unevictable) at once beside the layer's params —
+        # sized so the co-resident working set leaves one chunk of swap
+        # headroom under the device budget.  The same cap applies to the
+        # unmanaged baseline so both modes group (and therefore batch)
+        # identically — chunk management must never change a token.
+        if max_decode_batch is None:
+            fit = (device_memory_bytes - self._param_floor_bytes
+                   ) // max(self.kv_chunk_bytes, 1) - 1
+            max_decode_batch = max(1, min(8, int(fit)))
+        self.max_decode_batch = max(1, int(max_decode_batch))
+        self._cost_cache: dict[int, Any] = {}
 
         self._queue: deque[ServeRequest] = deque()
         self._active: list[ServeRequest] = []
@@ -331,26 +364,50 @@ class ServingEngine:
         return f"kv.{rid}.{gname}.{layer}"
 
     # ------------------------------------------------------------- schedule
-    def _round_ops(self, newly, decode_reqs) -> list[tuple]:
+    def _round_ops(self, newly, decode_reqs) -> list[tuple[tuple, float]]:
         """The round's exact op order: per new request a seq-major prefill
         pass, then one layer-major decode sweep over the running set
         (params fetched once per layer per round, every active sequence's
-        kv chunk visited under that fetch — the decode round-robin)."""
-        ops: list[tuple] = []
+        kv chunk visited under that fetch — the decode round-robin).
+
+        Returns ``(op, compute_seconds)`` pairs — durations are generated
+        alongside the ops so the transfer timeline's per-moment schedule
+        can never drift from the execution order.  A prefill param op
+        carries the layer's prefill compute over that request's prompt;
+        decode compute rides each sequence's kv op (or the param op
+        itself when KV is unmanaged)."""
+        ops: list[tuple[tuple, float]] = []
         for req in newly:
+            pre = self._serve_costs(int(req.prompt.size)).prefill_layer_s
             for g in self._decode_groups:
                 for i in range(g.length):
-                    ops.append(("param", g.name, i))
+                    ops.append((("param", g.name, i), pre))
                     if self.manage_kv:
-                        ops.append(("kv", req.rid, g.name, i))
+                        ops.append((("kv", req.rid, g.name, i), 0.0))
         if decode_reqs:
+            dec = self._serve_costs(1).decode_layer_s
             for g in self._decode_groups:
                 for i in range(g.length):
-                    ops.append(("param", g.name, i))
+                    ops.append((("param", g.name, i),
+                                0.0 if self.manage_kv
+                                else dec * len(decode_reqs)))
                     if self.manage_kv:
                         for req in decode_reqs:
-                            ops.append(("kv", req.rid, g.name, i))
+                            ops.append((("kv", req.rid, g.name, i), dec))
         return ops
+
+    def _serve_costs(self, prompt_tokens: int):
+        """Per-layer analytical durations (cached by prompt length)."""
+        from repro.analysis.costmodel import serve_operator_costs
+
+        key = int(prompt_tokens)
+        c = self._cost_cache.get(key)
+        if c is None:
+            c = serve_operator_costs(
+                self.cfg, prompt_tokens=key, horizon=self.max_seq_len,
+                num_layers=self._total_layers)
+            self._cost_cache[key] = c
+        return c
 
     def _plan_round(self, newly, decode_reqs) -> None:
         """Register this round's reference schedule (plus a synthetic
@@ -367,7 +424,7 @@ class ServingEngine:
         refs: list[tuple[int, str, int]] = []
         self._planned.clear()
         m = self._moment
-        for k, op in enumerate(ops + future):
+        for k, (op, _dur) in enumerate(ops + future):
             if op[0] == "param":
                 for cid in self._layer_chunks[(op[1], op[2])]:
                     param_sched.setdefault(cid, []).append(m + k)
@@ -385,6 +442,13 @@ class ServingEngine:
             self.pool.register_moments("kv", kv_sched)
         if self.prefetcher is not None:
             self.prefetcher.install(refs)
+        if self.pool.timeline is not None:
+            # serving moments grow forever: drop already-flushed rounds,
+            # then install this round's per-op compute durations (the
+            # synthetic future never executes, so it carries none)
+            self.pool.timeline.prune_durations_before(m)
+            self.pool.timeline.extend_durations(
+                {m + k: d for k, (_op, d) in enumerate(ops) if d > 0.0})
 
     def _begin_op(self, op: tuple) -> None:
         """Advance the moment cursor to the next planned op (asserting the
@@ -500,7 +564,30 @@ class ServingEngine:
         req.generated.append(tok)
         self.total_prefill_tokens += int(req.prompt.size)
 
-    def _decode_round(self, decode_reqs, stem) -> None:
+    def _decode_batches(self, decode_reqs) -> list[list[ServeRequest]]:
+        """Pack the running set into decode batches: consecutive
+        same-position sequences (one shared cache position per ``decode``
+        call) in admission order, capped at ``max_decode_batch`` so the
+        batch's COMPUTE-pinned kv chunks plus the layer's params stay
+        within the device budget."""
+        batches: list[list[ServeRequest]] = []
+        # stable sort brings every same-position sequence together while
+        # keeping admission order inside a position cohort (deterministic,
+        # and identical between managed and unmanaged KV)
+        for req in sorted(decode_reqs, key=lambda r: r.pos):
+            if (batches and batches[-1][0].pos == req.pos
+                    and len(batches[-1]) < self.max_decode_batch):
+                batches[-1].append(req)
+            else:
+                batches.append([req])
+        return batches
+
+    def _decode_round(self, batches, stem) -> None:
+        """One layer-major decode sweep: params fetched once per layer
+        per round; same-position sequences decode as ONE batched
+        ``g.decode`` call (their kv chunks co-resident for its duration),
+        token-for-token identical to the sequence-at-a-time path."""
+        decode_reqs = [r for b in batches for r in b]
         xs: dict[int, list] = {}
         for req in decode_reqs:
             tok = jnp.asarray([[req.generated[-1]]], jnp.int32)
@@ -510,20 +597,54 @@ class ServingEngine:
             for i in range(g.length):
                 self._begin_op(("param", g.name, i))
                 names, ptree = self._access_layer(g.name, i)
-                for req in decode_reqs:
-                    if self.manage_kv:
-                        self._begin_op(("kv", req.rid, g.name, i))
-                        cache = self._load_cache(req.rid, g.name, i)
-                    else:
-                        cache = self._raw_cache(req.rid, g.name, i)
-                    st = xs[req.rid]
-                    y, c2 = g.decode(ptree, st[0], cache, jnp.int32(req.pos),
-                                     st[1], self.ctx)
-                    if self.manage_kv:
-                        self._store_cache(req.rid, g.name, i, c2)
-                    else:
-                        self._raw_kv[(req.rid, g.name, i)] = c2
-                    st[0] = y
+                for batch in batches:
+                    # batched execution requires every leaf of x/cache to
+                    # lead with the batch dim AND per-request extras to be
+                    # None: a non-None extras tree can mix shared weights
+                    # with batch-dependent leaves (zamba's {shared_attn,
+                    # x0}), and both concatenating and recomputing it
+                    # diverge from the compiled path's embed-time extras.
+                    batched = (len(batch) > 1 and self._batchable[g.name]
+                               and all(xs[r.rid][1] is None for r in batch))
+                    if not batched:
+                        # sequence-at-a-time: load/decode/store per
+                        # request, one kv chunk COMPUTE-pinned at a time
+                        for req in batch:
+                            if self.manage_kv:
+                                self._begin_op(("kv", req.rid, g.name, i))
+                                cache = self._load_cache(req.rid, g.name, i)
+                            else:
+                                cache = self._raw_cache(req.rid, g.name, i)
+                            st = xs[req.rid]
+                            y, c2 = g.decode(ptree, st[0], cache,
+                                             jnp.int32(req.pos), st[1],
+                                             self.ctx)
+                            if self.manage_kv:
+                                self._store_cache(req.rid, g.name, i, c2)
+                            else:
+                                self._raw_kv[(req.rid, g.name, i)] = c2
+                            st[0] = y
+                        continue
+                    caches = []
+                    for req in batch:
+                        if self.manage_kv:
+                            self._begin_op(("kv", req.rid, g.name, i))
+                            caches.append(self._load_cache(req.rid, g.name, i))
+                        else:
+                            caches.append(self._raw_cache(req.rid, g.name, i))
+                    xcat = jnp.concatenate(
+                        [xs[r.rid][0] for r in batch], axis=0)
+                    ccat = jax.tree.map(
+                        lambda *ls: jnp.concatenate(ls, axis=0), *caches)
+                    y, c2 = g.decode(ptree, xcat, ccat,
+                                     jnp.int32(batch[0].pos), None, self.ctx)
+                    for j, req in enumerate(batch):
+                        cj = jax.tree.map(lambda t, _j=j: t[_j:_j + 1], c2)
+                        if self.manage_kv:
+                            self._store_cache(req.rid, g.name, i, cj)
+                        else:
+                            self._raw_kv[(req.rid, g.name, i)] = cj
+                        xs[req.rid][0] = y[j:j + 1]
                 self._release_layer(names)
         for req in decode_reqs:
             logits = self.model.head_logits(stem, xs[req.rid][0])
@@ -570,13 +691,17 @@ class ServingEngine:
         decode0 = self.total_decode_tokens
         newly = self._admit()
         newly_ids = {r.rid for r in newly}
-        decode_reqs = [r for r in self._active if r.rid not in newly_ids]
+        # group the running set into decode batches FIRST: the plan's kv
+        # reference order must equal the execution (load) order
+        batches = self._decode_batches(
+            [r for r in self._active if r.rid not in newly_ids])
+        decode_reqs = [r for b in batches for r in b]
         self._plan_round(newly, decode_reqs)
         stem = jax.tree.map(jnp.asarray, self._stem_np)
         for req in newly:
             self._prefill(req, stem)
         if decode_reqs:
-            self._decode_round(decode_reqs, stem)
+            self._decode_round(batches, stem)
         completed = self._retire_finished()
         self.rounds += 1
         pf = self.pool.prefetch
@@ -596,6 +721,8 @@ class ServingEngine:
             demand_misses=pf.demand_misses - pf0.demand_misses,
             peak_device_bytes=self.pool.take_step_peak_device_bytes(),
             wall_s=time.perf_counter() - t0,
+            timeline=(self.pool.timeline.take_step()
+                      if self.pool.timeline is not None else None),
         )
 
     def run(self, max_rounds: int = 10_000) -> list[ServeRoundMetrics]:

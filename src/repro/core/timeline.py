@@ -1,0 +1,289 @@
+"""Transfer timeline: a two-queue DMA model with stall accounting.
+
+The pool's staging machinery classifies every H2D byte *hidden* (issued
+ahead of demand, overlappable with compute) or *critical-path* (a demand
+miss) — a classification, not a performance model.  Whether "hidden"
+bytes are actually hidden depends on whether they fit inside the
+consuming operator's compute window at the available CPU<->GPU bandwidth
+(the overlap analysis PatrickStar Section 7 / Fig. 9 and ZeRO-Infinity's
+bandwidth-centric design reason about).  :class:`TransferTimeline` makes
+that temporal: it models the accelerator's DMA engines as FIFO queues of
+finite bandwidth and advances a simulated clock moment-by-moment against
+per-operator compute durations derived from
+:mod:`repro.analysis.costmodel`.
+
+Engines (one FIFO queue each, issue order preserved):
+
+  ``h2d``   host->device stages and demand fetches;
+  ``d2h``   device->host evictions and host-placed ADAM pulls;
+  ``coll``  the collective lane (group all-gathers, grad reduce-scatter,
+            the stem all-reduce) of the distributed plane.
+
+Clock rules — every advance of ``now`` is classified exactly once, so
+the per-step decomposition ``step == compute + h2d_stall + d2h_stall +
+gather_stall`` holds *by construction* and is asserted as a conservation
+law in tests:
+
+  * **compute**: entering moment ``m+1`` adds moment ``m``'s operator
+    duration (transfers recorded while the cursor sat at ``m`` were
+    issued at the operator's start, so they overlap its compute).
+  * **critical transfer**: the consumer waits for the transfer's queue
+    position AND its wire time — ``now`` jumps to the transfer's end,
+    the jump is booked as stall on that engine (and per stream, per
+    moment).  A backlog of earlier (hidden) transfers on the same engine
+    therefore delays a critical one: DMA-engine contention.
+  * **late hidden transfer**: a staged chunk (or prefetched gather) hit
+    by its consumer before the wire finished stalls for the remainder —
+    hidden bytes in excess of the overlap window *surface* instead of
+    disappearing.
+  * **end-of-step drain**: residual queue backlog (e.g. D2H evictions
+    still in flight) is waited out engine-by-engine in completion order,
+    each booked the marginal wait beyond the previous — concurrent
+    drains are never double-counted.
+
+Under infinite bandwidth (the default: ``bandwidth=None``) every
+transfer takes zero seconds, every stall is exactly ``0.0`` and step
+time equals summed compute — the degenerate case the property tests pin.
+
+The timeline also answers the *planning* queries the bandwidth-aware
+prefetchers ask (:class:`~repro.core.memory.SchedulePrefetcher` /
+:class:`~repro.core.memory.GatherPrefetcher` with ``timeline=``):
+``projected_ready_s`` (queue delay + wire time of a would-be transfer)
+vs ``time_until`` (summed compute between now and the reference's
+moment) decides how deep and how early to issue — instead of the fixed
+``lookahead/max_inflight`` heuristic.
+"""
+
+from __future__ import annotations
+
+import bisect
+import dataclasses
+import math
+from typing import Hashable
+
+
+def _is_infinite(bandwidth: float | None) -> bool:
+    return bandwidth is None or math.isinf(bandwidth)
+
+
+@dataclasses.dataclass
+class DmaEngine:
+    """One FIFO transfer queue of finite (or infinite) bandwidth."""
+
+    name: str
+    bandwidth: float | None = None  # bytes/second; None == infinite
+    busy_until: float = 0.0
+
+    def transfer_seconds(self, nbytes: int) -> float:
+        if _is_infinite(self.bandwidth):
+            return 0.0
+        return nbytes / float(self.bandwidth)
+
+    def enqueue(self, now: float, nbytes: int) -> float:
+        """FIFO issue: starts when the queue drains, returns the end."""
+        start = max(now, self.busy_until)
+        end = start + self.transfer_seconds(nbytes)
+        self.busy_until = end
+        return end
+
+
+@dataclasses.dataclass
+class StepTimeline:
+    """One step's (or serving round's) wall-clock decomposition."""
+
+    compute_s: float = 0.0
+    h2d_stall_s: float = 0.0
+    d2h_stall_s: float = 0.0
+    gather_stall_s: float = 0.0
+    # simulated wall seconds this step actually took (now - step start);
+    # equals compute_s + stall_s up to float associativity
+    wall_s: float = 0.0
+    stall_by_stream: dict[str, float] = dataclasses.field(default_factory=dict)
+    stall_by_moment: dict[int, float] = dataclasses.field(default_factory=dict)
+
+    @property
+    def stall_s(self) -> float:
+        return self.h2d_stall_s + self.d2h_stall_s + self.gather_stall_s
+
+    @property
+    def step_s(self) -> float:
+        """The decomposed step time: compute + per-engine stalls."""
+        return self.compute_s + self.stall_s
+
+
+# stall bucket per engine name
+_STALL_FIELD = {"h2d": "h2d_stall_s", "d2h": "d2h_stall_s",
+                "coll": "gather_stall_s"}
+
+_DRAIN_STREAM = "(drain)"
+
+
+class TransferTimeline:
+    """Two DMA queues + a collective lane advanced against compute.
+
+    Attach to a pool with :meth:`HeteroMemory.set_timeline`; the pool
+    forwards every tier move and the moment cursor.  Per-operator
+    compute durations are installed after the warm-up iteration
+    (:meth:`install_durations`, moment -> seconds) or extended
+    round-by-round on the serving plane (:meth:`extend_durations`)."""
+
+    def __init__(
+        self,
+        *,
+        h2d_bandwidth: float | None = None,
+        d2h_bandwidth: float | None = None,
+        collective_bandwidth: float | None = None,
+    ) -> None:
+        self.h2d = DmaEngine("h2d", h2d_bandwidth)
+        self.d2h = DmaEngine("d2h", d2h_bandwidth)
+        self.coll = DmaEngine("coll", collective_bandwidth)
+        self._engines = {"h2d": self.h2d, "d2h": self.d2h, "coll": self.coll}
+        self.now = 0.0
+        self._step_start = 0.0
+        self._cur: int | None = None
+        self._durations: dict[int, float] = {}
+        self._order: list[int] = []
+        self._prefix: list[float] = []
+        # in-flight overlappable transfers awaiting their consumer:
+        # key -> (engine name, completion time, stream)
+        self._pending: dict[Hashable, tuple[str, float, str]] = {}
+        self._step = StepTimeline()
+
+    # ------------------------------------------------------------- durations
+    @property
+    def has_durations(self) -> bool:
+        return bool(self._durations)
+
+    def install_durations(self, durations: dict[int, float]) -> None:
+        """Replace the moment -> compute-seconds schedule (training: one
+        iteration's moments, reused every step)."""
+        self._durations = dict(durations)
+        self._rebuild_prefix()
+
+    def extend_durations(self, durations: dict[int, float]) -> None:
+        """Merge additional moments (serving: each round plans fresh,
+        strictly increasing moments)."""
+        self._durations.update(durations)
+        self._rebuild_prefix()
+
+    def _rebuild_prefix(self) -> None:
+        self._order = sorted(self._durations)
+        acc = 0.0
+        self._prefix = [0.0]
+        for m in self._order:
+            acc += self._durations[m]
+            self._prefix.append(acc)
+
+    def duration_of(self, moment: int) -> float:
+        return self._durations.get(moment, 0.0)
+
+    # ----------------------------------------------------------------- clock
+    def advance_to_moment(self, moment: int) -> None:
+        """Moment cursor moved: the previous operator's compute elapsed."""
+        if self._cur is not None and moment != self._cur:
+            self._run_compute(self._cur)
+        self._cur = moment
+
+    def _run_compute(self, moment: int) -> None:
+        dur = self._durations.get(moment, 0.0)
+        if dur > 0.0:
+            self.now += dur
+            self._step.compute_s += dur
+
+    def _stall(self, engine: str, stream: str, seconds: float) -> None:
+        if seconds <= 0.0:
+            return
+        self.now += seconds
+        setattr(self._step, _STALL_FIELD[engine],
+                getattr(self._step, _STALL_FIELD[engine]) + seconds)
+        by_s = self._step.stall_by_stream
+        by_s[stream] = by_s.get(stream, 0.0) + seconds
+        if self._cur is not None:
+            by_m = self._step.stall_by_moment
+            by_m[self._cur] = by_m.get(self._cur, 0.0) + seconds
+
+    # -------------------------------------------------------------- transfers
+    def record_h2d(self, nbytes: int, *, stream: str, critical: bool,
+                   key: Hashable | None = None) -> None:
+        self._record("h2d", nbytes, stream=stream, critical=critical, key=key)
+
+    def record_d2h(self, nbytes: int, *, stream: str, critical: bool,
+                   key: Hashable | None = None) -> None:
+        self._record("d2h", nbytes, stream=stream, critical=critical, key=key)
+
+    def record_collective(self, nbytes: int, *, critical: bool,
+                          stream: str = "param",
+                          key: Hashable | None = None) -> None:
+        self._record("coll", nbytes, stream=stream, critical=critical, key=key)
+
+    def _record(self, engine: str, nbytes: int, *, stream: str,
+                critical: bool, key: Hashable | None) -> None:
+        eng = self._engines[engine]
+        end = eng.enqueue(self.now, nbytes)
+        if critical:
+            # the consumer waits for queue position + wire time (FIFO:
+            # hidden backlog ahead of it delays it — engine contention)
+            self._stall(engine, stream, end - self.now)
+        elif key is not None:
+            self._pending[key] = (engine, end, stream)
+
+    def wait_for(self, key: Hashable) -> float:
+        """The consumer of an overlappable transfer arrived: stall for
+        whatever wire time remains (0 if it already landed).  No-op for
+        unknown keys."""
+        rec = self._pending.pop(key, None)
+        if rec is None:
+            return 0.0
+        engine, end, stream = rec
+        late = end - self.now
+        self._stall(engine, stream, late)
+        return max(late, 0.0)
+
+    def cancel(self, key: Hashable) -> None:
+        """Drop a pending transfer's rendezvous (wasted stage: the chunk
+        was evicted / released before its consumer arrived)."""
+        self._pending.pop(key, None)
+
+    # ------------------------------------------------------------- planning
+    def projected_ready_s(self, engine: str, nbytes: int) -> float:
+        """Seconds from now until a transfer issued now would land:
+        current queue backlog + its own wire time."""
+        eng = self._engines[engine]
+        return max(0.0, eng.busy_until - self.now) + eng.transfer_seconds(nbytes)
+
+    def time_until(self, moment: int) -> float:
+        """Summed compute seconds between the current cursor and
+        ``moment`` — the overlap window a transfer issued now can hide
+        inside (includes the current operator's own duration: transfers
+        issue at operator start)."""
+        if self._cur is None or not self._order:
+            return 0.0
+        i = bisect.bisect_left(self._order, self._cur)
+        j = bisect.bisect_left(self._order, moment)
+        if j <= i:
+            return 0.0
+        return self._prefix[j] - self._prefix[i]
+
+    # ----------------------------------------------------------------- steps
+    def take_step(self) -> StepTimeline:
+        """Close the step: flush the current operator's compute, drain
+        residual queue backlog (marginal attribution in completion
+        order), return this step's decomposition and re-arm."""
+        if self._cur is not None:
+            self._run_compute(self._cur)
+            self._cur = None
+        for eng in sorted(self._engines.values(), key=lambda e: e.busy_until):
+            self._stall(eng.name, _DRAIN_STREAM, eng.busy_until - self.now)
+        rep = self._step
+        rep.wall_s = self.now - self._step_start
+        self._step = StepTimeline()
+        self._step_start = self.now
+        return rep
+
+    def prune_durations_before(self, moment: int) -> None:
+        """Drop duration entries for moments < ``moment`` (the serving
+        plane's moments increase forever; training reuses one iteration's
+        ids and never calls this)."""
+        self._durations = {m: d for m, d in self._durations.items()
+                           if m >= moment}
+        self._rebuild_prefix()

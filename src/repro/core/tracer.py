@@ -165,6 +165,20 @@ class RuntimeMemoryTracer:
                     per[c] = sorted(per.get(c, []) + list(hosted[c]))
         return out
 
+    def duration_schedule(self, cost_of) -> dict[int, float]:
+        """Per-moment compute durations for the transfer timeline
+        (:class:`repro.core.timeline.TransferTimeline`): maps each
+        warm-up moment through ``cost_of(op_name, phase) -> seconds``
+        (e.g. :meth:`repro.analysis.costmodel.TrainOperatorCosts.of_moment`).
+        Zero-duration moments are omitted — the timeline treats missing
+        moments as instantaneous."""
+        out: dict[int, float] = {}
+        for m in self.moments:
+            dur = cost_of(m.op_name, m.phase)
+            if dur > 0.0:
+                out[m.index] = dur
+        return out
+
     def gather_reference_sequence(
         self, cmap, stream: str = "param",
         phases: tuple[str, ...] = ("FWD", "BWD"),

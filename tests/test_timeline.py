@@ -1,0 +1,319 @@
+"""Transfer timeline (core/timeline.py): FIFO DMA-queue semantics, stall
+classification (critical wait / late hidden / end-of-step drain), the
+step decomposition through the training, distributed and serving
+engines, and the bandwidth-aware prefetch win at equal byte volume."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, model_class
+from repro.core.engine import PatrickStarEngine
+from repro.core.timeline import TransferTimeline
+
+
+def _lm_batch(cfg, b, s, seed=1):
+    tok = jax.random.randint(jax.random.key(seed), (b, s), 0, cfg.vocab_size)
+    return {"tokens": tok, "labels": jnp.roll(tok, -1, 1),
+            "global_tokens": jnp.float32(b * s)}
+
+
+def _cfg(layers=4):
+    return get_config("gpt2-paper-1b", smoke=True).replace(
+        num_layers=layers, param_dtype="float32", compute_dtype="float32")
+
+
+# ---------------------------------------------------------------------------
+# unit: the DMA queues and the clock rules
+# ---------------------------------------------------------------------------
+
+
+def test_critical_transfer_waits_queue_plus_wire():
+    """A critical H2D queued behind a hidden transfer stalls for the
+    backlog AND its own wire time — DMA-engine contention."""
+    tl = TransferTimeline(h2d_bandwidth=100.0)
+    tl.install_durations({0: 1.0})
+    tl.advance_to_moment(0)
+    tl.record_h2d(100, stream="a", critical=False, key=("a", 1))  # 1s wire
+    tl.record_h2d(100, stream="b", critical=True)  # ends at t=2
+    rep = tl.take_step()
+    assert rep.h2d_stall_s == 2.0
+    assert rep.stall_by_stream == {"b": 2.0}
+    assert rep.stall_by_moment == {0: 2.0}
+    assert rep.compute_s == 1.0
+    assert rep.wall_s == rep.step_s == 3.0
+
+
+def test_late_hidden_transfer_surfaces_at_wait():
+    """A staged transfer whose consumer arrives before the wire finishes
+    stalls for exactly the remainder."""
+    tl = TransferTimeline(h2d_bandwidth=100.0)
+    tl.install_durations({0: 0.25, 1: 0.25})
+    tl.advance_to_moment(0)
+    tl.record_h2d(100, stream="s", critical=False, key=("s", 0))  # ends 1.0
+    tl.advance_to_moment(1)  # +0.25 compute
+    assert tl.wait_for(("s", 0)) == 0.75
+    rep = tl.take_step()
+    assert rep.h2d_stall_s == 0.75
+    assert rep.compute_s == 0.5
+    # a second wait on the same key is a no-op (rendezvous consumed)
+    assert tl.wait_for(("s", 0)) == 0.0
+
+
+def test_cancelled_key_never_stalls():
+    tl = TransferTimeline(h2d_bandwidth=1.0)
+    tl.advance_to_moment(0)
+    tl.record_h2d(100, stream="s", critical=False, key=("s", 0))
+    tl.cancel(("s", 0))
+    assert tl.wait_for(("s", 0)) == 0.0
+
+
+def test_drain_attribution_is_marginal_not_double_counted():
+    """Concurrent end-of-step queue drains are attributed engine-by-
+    engine in completion order; the sum equals the wall advance."""
+    tl = TransferTimeline(h2d_bandwidth=100.0, d2h_bandwidth=50.0)
+    tl.advance_to_moment(0)
+    tl.record_h2d(100, stream="a", critical=False)  # ends 1.0
+    tl.record_d2h(100, stream="b", critical=False)  # ends 2.0
+    rep = tl.take_step()
+    assert rep.h2d_stall_s == 1.0  # first to finish
+    assert rep.d2h_stall_s == 1.0  # marginal wait beyond h2d
+    assert rep.wall_s == rep.step_s == 2.0
+
+
+def test_infinite_bandwidth_is_instantaneous():
+    tl = TransferTimeline()
+    tl.advance_to_moment(0)
+    tl.record_h2d(10**12, stream="a", critical=True)
+    tl.record_d2h(10**12, stream="a", critical=True)
+    tl.record_collective(10**12, critical=True)
+    rep = tl.take_step()
+    assert rep.stall_s == 0.0 and rep.wall_s == 0.0
+
+
+def test_planning_queries_project_queue_and_windows():
+    tl = TransferTimeline(h2d_bandwidth=100.0)
+    tl.install_durations({0: 1.0, 1: 2.0, 2: 4.0})
+    tl.advance_to_moment(0)
+    assert tl.projected_ready_s("h2d", 100) == 1.0
+    tl.record_h2d(100, stream="a", critical=False)
+    assert tl.projected_ready_s("h2d", 100) == 2.0  # behind the backlog
+    # window until moment 2 = durations of moments 0 and 1
+    assert tl.time_until(2) == 3.0
+    assert tl.time_until(1) == 1.0
+    assert tl.time_until(0) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# training engine: decomposition + the bandwidth-aware win
+# ---------------------------------------------------------------------------
+
+
+def test_engine_infinite_bandwidth_zero_stall():
+    cfg = _cfg()
+    eng = PatrickStarEngine(
+        model_class(cfg), cfg, device_memory_bytes=4_000_000, policy="opt",
+        device_aware_placement=False, timeline=TransferTimeline())
+    batch = _lm_batch(cfg, 2, 32)
+    eng.step(batch)
+    for _ in range(2):
+        m = eng.step(batch)
+        t = m.timeline
+        assert t is not None
+        assert t.stall_s == 0.0
+        assert t.compute_s > 0.0
+        assert t.wall_s == t.step_s == t.compute_s
+
+
+def test_engine_finite_bandwidth_decomposition_conserves():
+    cfg = _cfg()
+    tl = TransferTimeline(h2d_bandwidth=1e8, d2h_bandwidth=1e8)
+    eng = PatrickStarEngine(
+        model_class(cfg), cfg, device_memory_bytes=4_000_000, policy="opt",
+        device_aware_placement=False, timeline=tl)
+    batch = _lm_batch(cfg, 2, 32)
+    eng.step(batch)
+    m = eng.step(batch)
+    t = m.timeline
+    assert t.stall_s > 0.0  # transfers this slow cannot all hide
+    assert abs(t.wall_s - t.step_s) <= 1e-9 * t.wall_s
+    # stall landed on real streams at real moments
+    assert any(v > 0 for v in t.stall_by_stream.values())
+    assert all(v >= 0 for v in t.stall_by_moment.values())
+    eng.pool.check_invariants()
+
+
+def test_bandwidth_aware_prefetch_cuts_stall_at_equal_volume():
+    """The benchmark's acceptance bar in miniature: same bytes moved,
+    same losses, less stall."""
+    from repro.analysis.costmodel import train_operator_costs
+
+    cfg = _cfg()
+    batch = _lm_batch(cfg, 4, 64)
+
+    def run(aware):
+        tl = TransferTimeline()
+        eng = PatrickStarEngine(
+            model_class(cfg), cfg, device_memory_bytes=4_000_000,
+            policy="opt", device_aware_placement=True, timeline=tl,
+            bandwidth_aware_prefetch=aware)
+        cb = eng.params_mgr.chunk_bytes
+        costs = train_operator_costs(cfg, global_batch=4, seq_len=64,
+                                     num_layer_ops=4, chunk_bytes=cb)
+        bw = cb / costs.fwd_layer_s  # one chunk's wire = one fwd layer
+        tl.h2d.bandwidth = bw
+        tl.d2h.bandwidth = bw
+        eng.step(batch)
+        tot = {"h2d": 0, "d2h": 0, "stall": 0.0, "loss": []}
+        for _ in range(2):
+            m = eng.step(batch)
+            tot["h2d"] += m.h2d_bytes + m.adam_h2d_bytes
+            tot["d2h"] += m.d2h_bytes + m.adam_d2h_bytes
+            tot["stall"] += m.timeline.stall_s
+            tot["loss"].append(m.loss)
+        return tot
+
+    fixed = run(False)
+    aware = run(True)
+    assert aware["h2d"] == fixed["h2d"]
+    assert aware["d2h"] == fixed["d2h"]
+    assert aware["loss"] == fixed["loss"]
+    assert aware["stall"] < fixed["stall"], (aware["stall"], fixed["stall"])
+
+
+def test_engine_without_timeline_reports_none():
+    cfg = _cfg(layers=2)
+    eng = PatrickStarEngine(model_class(cfg), cfg,
+                            device_memory_bytes=4_000_000, policy="opt")
+    m = eng.step(_lm_batch(cfg, 2, 16))
+    assert m.timeline is None
+
+
+# ---------------------------------------------------------------------------
+# distributed plane: the collective lane
+# ---------------------------------------------------------------------------
+
+
+def test_distributed_gather_stall_and_loss_parity():
+    """Finite collective bandwidth surfaces gather stall; attaching the
+    timeline never changes the math (losses equal the no-timeline run)."""
+    from repro.core.distributed import DistributedPatrickStarEngine
+
+    cfg = _cfg(layers=2)
+    batch = _lm_batch(cfg, 4, 32)
+
+    def run(factory):
+        eng = DistributedPatrickStarEngine(
+            model_class(cfg), cfg, nproc=2, device_memory_bytes=4_000_000,
+            device_aware_placement=False, timeline_factory=factory)
+        losses = [eng.step(batch).loss for _ in range(3)]
+        eng.check_invariants()
+        return eng, losses
+
+    base, base_losses = run(None)
+    timed, losses = run(lambda: TransferTimeline(collective_bandwidth=1e9))
+    assert losses == base_losses
+    m = timed.step(batch)
+    assert base.step(batch).loss == m.loss
+    for rm in m.rank_metrics:
+        t = rm.timeline
+        assert t.gather_stall_s > 0.0
+        assert abs(t.wall_s - t.step_s) <= 1e-9 * max(t.wall_s, 1e-30)
+    # collective byte ledger is untouched by the timeline
+    assert timed.collectives[0].allgather_bytes \
+        == base.collectives[0].allgather_bytes
+
+
+# ---------------------------------------------------------------------------
+# serving plane: per-round decomposition + batched decode
+# ---------------------------------------------------------------------------
+
+
+def _serve_cfg():
+    return get_config("qwen3-0.6b", smoke=True).replace(
+        param_dtype="float32", compute_dtype="float32")
+
+
+def test_serving_round_decomposition_conserves():
+    from repro.core.serving import ServingEngine
+
+    cfg = _serve_cfg()
+    eng = ServingEngine(
+        model_class(cfg), cfg, device_memory_bytes=1_200_000,
+        host_memory_bytes=8_000_000, max_seq_len=24,
+        timeline=TransferTimeline(h2d_bandwidth=5e8, d2h_bandwidth=5e8))
+    prompts = np.asarray(jax.random.randint(
+        jax.random.key(3), (5, 8), 0, cfg.vocab_size))
+    for p in prompts:
+        eng.submit(p, 6)
+    mets = eng.run()
+    eng.check_invariants()
+    assert sum(m.timeline.compute_s for m in mets) > 0.0
+    for m in mets:
+        t = m.timeline
+        assert t is not None
+        assert abs(t.wall_s - t.step_s) <= 1e-9 * max(t.wall_s, 1e-30)
+
+
+def test_serving_infinite_bandwidth_zero_stall():
+    from repro.core.serving import ServingEngine
+
+    cfg = _serve_cfg()
+    eng = ServingEngine(
+        model_class(cfg), cfg, device_memory_bytes=1_200_000,
+        host_memory_bytes=8_000_000, max_seq_len=16,
+        timeline=TransferTimeline())
+    eng.submit(np.arange(4, dtype=np.int32) % cfg.vocab_size, 4)
+    for m in eng.run():
+        assert m.timeline.stall_s == 0.0
+
+
+def test_batched_decode_matches_sequential_and_is_exercised():
+    """Same-position sequences packed into one g.decode call emit the
+    same tokens as the sequence-at-a-time path (max_decode_batch=1)."""
+    from repro.core.serving import ServingEngine
+
+    cfg = _serve_cfg()
+    prompts = np.asarray(jax.random.randint(
+        jax.random.key(4), (6, 7), 0, cfg.vocab_size))
+
+    def serve(cap):
+        eng = ServingEngine(
+            model_class(cfg), cfg, device_memory_bytes=1_500_000,
+            host_memory_bytes=8_000_000, max_seq_len=24,
+            max_decode_batch=cap)
+        rids = [eng.submit(p, 8) for p in prompts]
+        eng.run()
+        eng.check_invariants()
+        return eng, [eng.result(r) for r in rids]
+
+    eng_b, batched = serve(4)
+    assert eng_b.max_decode_batch == 4
+    eng_s, sequential = serve(1)
+    assert batched == sequential
+    # the auto cap actually batches on this budget
+    eng_auto = ServingEngine(
+        model_class(cfg), cfg, device_memory_bytes=1_500_000,
+        host_memory_bytes=8_000_000, max_seq_len=24)
+    assert eng_auto.max_decode_batch > 1
+
+
+def test_decode_batches_group_same_position_capped():
+    from repro.core.serving import ServeRequest, ServingEngine
+
+    cfg = _serve_cfg()
+    eng = ServingEngine(model_class(cfg), cfg,
+                        device_memory_bytes=1_500_000,
+                        host_memory_bytes=8_000_000, max_seq_len=16,
+                        max_decode_batch=2)
+
+    def req(rid, pos):
+        r = ServeRequest(rid=rid, prompt=np.zeros(1, np.int32),
+                         max_new_tokens=4)
+        r.pos = pos
+        return r
+
+    reqs = [req(0, 5), req(1, 3), req(2, 5), req(3, 5), req(4, 3)]
+    batches = eng._decode_batches(reqs)
+    assert [[r.rid for r in b] for b in batches] == [[1, 4], [0, 2], [3]]
+    assert all(len({r.pos for r in b}) == 1 for b in batches)

@@ -1,0 +1,138 @@
+"""Hypothesis property tests for the transfer timeline's conservation
+invariants under random multi-stream chunk traffic with a (bandwidth-
+aware) prefetcher running: ``hidden + critical == h2d`` still holds,
+every stall is >= 0 and exactly 0 under infinite bandwidth, and the
+per-step decomposition sums to step time."""
+
+import math
+
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.core.chunk import TensorSpec, build_chunk_map
+from repro.core.manager import ChunkManager
+from repro.core.memory import HeteroMemory, OutOfMemory, SchedulePrefetcher
+from repro.core.state import TensorState
+from repro.core.timeline import TransferTimeline
+
+SIZE = 8  # elements per tensor == per chunk (one tensor per chunk)
+CB = SIZE * 4  # chunk bytes (fp32)
+
+
+@st.composite
+def timeline_traffic(draw):
+    n = draw(st.integers(2, 6))
+    n_streams = draw(st.integers(1, 3))
+    ops = draw(st.lists(
+        st.tuples(st.integers(0, n_streams - 1), st.integers(0, n - 1),
+                  st.sampled_from(["hold", "free"])),
+        min_size=5, max_size=60))
+    policy = draw(st.sampled_from(["opt", "lru", "fifo"]))
+    device_chunks = draw(st.integers(1, n * n_streams))
+    # finite bandwidths spanning instant-ish to glacial (bytes/sec), per
+    # engine; None = infinite
+    bw = lambda: draw(st.one_of(
+        st.none(), st.floats(1.0, 1e6, allow_nan=False, allow_infinity=False)))
+    h2d_bw, d2h_bw = bw(), bw()
+    durations = draw(st.lists(
+        st.floats(0.0, 2.0, allow_nan=False, allow_infinity=False),
+        min_size=len(ops), max_size=len(ops)))
+    aware = draw(st.booleans())
+    return n, n_streams, ops, policy, device_chunks, h2d_bw, d2h_bw, \
+        durations, aware
+
+
+def _run(n, n_streams, ops, policy, device_chunks, h2d_bw, d2h_bw,
+         durations, aware, check=None):
+    """Replay one traffic sequence through a timeline-attached pool with
+    a prefetcher consuming the exact future; returns the step report."""
+    streams = [f"s{i}" for i in range(n_streams)]
+    specs = [TensorSpec(f"t{i}", (SIZE,)) for i in range(n)]
+    cmap = build_chunk_map(specs, SIZE)
+    pool = HeteroMemory(
+        device_capacity_bytes=device_chunks * CB,
+        host_capacity_bytes=(n * n_streams + 2) * CB, policy=policy)
+    tl = TransferTimeline(h2d_bandwidth=h2d_bw, d2h_bandwidth=d2h_bw)
+    pool.set_timeline(tl)
+    mgrs = {s: ChunkManager(cmap, name=s, pool=pool) for s in streams}
+    # the exact future: per-stream OPT schedules + the staging queue
+    per_stream: dict[str, dict[int, list[int]]] = {}
+    refs = []
+    for m, (s_idx, t_idx, _rel) in enumerate(ops):
+        per_stream.setdefault(streams[s_idx], {}).setdefault(
+            t_idx, []).append(m)
+        refs.append((m, streams[s_idx], t_idx))
+    for s, sched in per_stream.items():
+        pool.register_moments(s, sched)
+    tl.install_durations({m: d for m, d in enumerate(durations) if d > 0})
+    pf = SchedulePrefetcher(pool, lookahead=4, max_inflight=2,
+                            timeline=tl if aware else None)
+    pf.install(refs)
+    for m, (s_idx, t_idx, rel) in enumerate(ops):
+        mgr = mgrs[streams[s_idx]]
+        pool.set_moment(m)
+        pf.advance(m)
+        try:
+            mgr.access_tensor(f"t{t_idx}")
+        except OutOfMemory:
+            break
+        mgr.release_tensor(
+            f"t{t_idx}",
+            TensorState.HOLD_AFTER_FWD if rel == "hold" else TensorState.FREE)
+        if check is not None:
+            check(pool, tl)
+    pool.check_invariants()
+    return pool, tl.take_step()
+
+
+@given(timeline_traffic())
+@settings(max_examples=50, deadline=None)
+def test_hidden_plus_critical_equals_h2d_with_timeline(t):
+    """The overlap-split invariant survives the timeline hooks and the
+    bandwidth-aware issue policy, at every intermediate point."""
+
+    def check(pool, _tl):
+        assert (pool.prefetch.hidden_h2d_bytes
+                + pool.prefetch.critical_h2d_bytes) == pool.stats.h2d_bytes
+
+    pool, _rep = _run(*t, check=check)
+    assert (pool.prefetch.hidden_h2d_bytes
+            + pool.prefetch.critical_h2d_bytes) == pool.stats.h2d_bytes
+
+
+@given(timeline_traffic())
+@settings(max_examples=50, deadline=None)
+def test_decomposition_sums_to_step_time_and_stalls_nonnegative(t):
+    """wall == compute + h2d_stall + d2h_stall + gather_stall (up to
+    float associativity), every component >= 0, and the per-stream /
+    per-moment maps only ever hold non-negative entries."""
+
+    def check(_pool, tl):
+        s = tl._step
+        assert s.compute_s >= 0 and s.h2d_stall_s >= 0
+        assert s.d2h_stall_s >= 0 and s.gather_stall_s >= 0
+        assert all(v >= 0 for v in s.stall_by_stream.values())
+        assert all(v >= 0 for v in s.stall_by_moment.values())
+
+    _pool, rep = _run(*t, check=check)
+    assert rep.compute_s >= 0 and rep.stall_s >= 0
+    assert math.isclose(rep.wall_s, rep.step_s,
+                        rel_tol=1e-9, abs_tol=1e-12), (rep.wall_s, rep.step_s)
+    # stall is attributed: engine totals and the stream map agree
+    assert math.isclose(sum(rep.stall_by_stream.values()), rep.stall_s,
+                        rel_tol=1e-9, abs_tol=1e-12)
+
+
+@given(timeline_traffic())
+@settings(max_examples=50, deadline=None)
+def test_infinite_bandwidth_stall_exactly_zero(t):
+    """The same traffic under infinite bandwidth stalls EXACTLY zero
+    seconds and completes in exactly the summed compute."""
+    n, n_streams, ops, policy, device_chunks, _h, _d, durations, aware = t
+    _pool, rep = _run(n, n_streams, ops, policy, device_chunks,
+                      None, None, durations, aware)
+    assert rep.stall_s == 0.0
+    assert rep.stall_by_stream == {}
+    assert rep.wall_s == rep.compute_s
