@@ -23,6 +23,7 @@ MODULES = [
     "benchmarks.tracer_bench",    # Fig. 2 / Sec. 8.1
     "benchmarks.max_batch",       # Sec. 6 "larger batch" / act stream
     "benchmarks.serving",         # serving plane: kv stream capacity
+    "benchmarks.serving_compiled",  # compiled round-step scaling
     "benchmarks.timeline",        # transfer timeline / Fig. 16 stalls
 ]
 

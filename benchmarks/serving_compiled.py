@@ -1,0 +1,102 @@
+"""Compiled serving round scaling: steady-state round throughput of
+:class:`~repro.runtime.serve.CompiledServingEngine` as the burst (and so
+the padded slot count) grows.
+
+The eager-vs-compiled speedup bar lives in ``benchmarks/serving.py``;
+this module characterises the compiled plane alone:
+
+  * **tokens/s per padded-slot scale** — each burst size lands on a
+    power-of-two slot shape; throughput should grow with occupancy
+    because one round step serves every slot in a single dispatch.
+  * **recompilation discipline** — across ALL bursts the decode step
+    compiles once per distinct padded shape and never for membership
+    churn; the run asserts the exact expected compile count.
+
+One engine serves every burst in sequence (warm-up burst first at the
+largest scale, so the timed bursts measure steady state), with the
+per-round device peak asserted within the budget throughout.
+``--smoke`` trims the burst ladder for CI.
+"""
+
+import argparse
+import json
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import csv
+from repro.configs import get_config, model_class
+from repro.runtime.serve import CompiledServingEngine
+
+DEVICE_BUDGET = 1_200_000
+HOST_BUDGET = 16_000_000
+NEW_TOKENS = 8
+HORIZON = 40
+
+
+def _pow2(n):
+    return 1 << max(0, int(n) - 1).bit_length()
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI subset: shorter burst ladder")
+    args = ap.parse_args()
+    cfg = get_config("qwen3-0.6b", smoke=True).replace(
+        param_dtype="float32", compute_dtype="float32")
+    bursts = [6, 12] if args.smoke else [6, 12, 24]
+
+    eng = CompiledServingEngine(
+        model_class(cfg), cfg, device_memory_bytes=DEVICE_BUDGET,
+        host_memory_bytes=HOST_BUDGET, max_seq_len=HORIZON, seed=0)
+
+    def drain(n_req, seed):
+        prompts = np.asarray(jax.random.randint(
+            jax.random.key(seed), (n_req, 8), 0, cfg.vocab_size))
+        rids = [eng.submit(p, NEW_TOKENS) for p in prompts]
+        tok0 = eng.total_decode_tokens + eng.total_prefill_tokens
+        t0 = time.perf_counter()
+        mets = eng.run(max_rounds=2000)
+        wall = time.perf_counter() - t0
+        for m in mets:
+            assert m.peak_device_bytes <= DEVICE_BUDGET, (
+                m.round_index, m.peak_device_bytes)
+        assert all(eng.result(r) for r in rids)
+        tokens = eng.total_decode_tokens + eng.total_prefill_tokens - tok0
+        return tokens, wall
+
+    # warm-up at the largest scale prices every padded shape the ladder
+    # will touch (slots never shrink) plus the prefill cohort shapes
+    drain(max(bursts), seed=0)
+    scales = []
+    for n_req in bursts:
+        tokens, wall = drain(n_req, seed=1 + n_req)
+        scales.append({
+            "requests": n_req,
+            "padded_slots": eng.padded_slots,
+            "tokens": tokens,
+            "tokens_per_s": round(tokens / wall, 1),
+        })
+    eng.check_invariants()
+
+    # one decode compile per distinct padded shape over the whole run:
+    # the warm-up landed the high-water shape, later bursts reuse it
+    assert eng.decode_compile_count == 1, eng.decode_compile_count
+    assert eng.padded_slots == _pow2(max(bursts))
+
+    report = {
+        "device_budget_bytes": DEVICE_BUDGET,
+        "decode_compiles": eng.decode_compile_count,
+        "prefill_compiles": eng.prefill_compile_count,
+        "scales": scales,
+    }
+    for s in scales:
+        csv(f"serving_compiled/tokens_per_s@{s['requests']}", 0.0,
+            f"padded_slots={s['padded_slots']};tps={s['tokens_per_s']}")
+    print(json.dumps(report, indent=2))
+
+
+if __name__ == "__main__":
+    main()

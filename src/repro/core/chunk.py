@@ -268,16 +268,41 @@ class DynamicChunkMap:
         self._next_chunk = 0
 
     # ---------------------------------------------------------------- mutate
-    def add_tensor(self, spec: TensorSpec) -> TensorPlacement:
+    def add_tensor(self, spec: TensorSpec,
+                   chunk_id: int | None = None) -> TensorPlacement:
+        """Map a tensor into a chunk of its own.
+
+        With ``chunk_id=None`` the id is recycled LIFO from the free list
+        (or the id space grows).  An explicit ``chunk_id`` pins the tensor
+        to that id — the compiled serving plane binds padded batch slot
+        ``s`` to a fixed id range so a slot's chunks are *stable across
+        admissions*: re-binding a slot to a new sequence touches the same
+        chunk ids and therefore never changes any compiled-step shape.
+        """
         if spec.name in self._by_name:
             raise ChunkMapError(f"tensor {spec.name} already mapped")
         if spec.numel > self.chunk_size:
             raise ChunkMapError(
                 f"tensor {spec.name} ({spec.numel} elems) exceeds chunk size "
                 f"{self.chunk_size}")
-        chunk_id = self._free.pop() if self._free else self._next_chunk
-        if chunk_id == self._next_chunk:
-            self._next_chunk += 1
+        if chunk_id is not None:
+            if chunk_id < 0:
+                raise ChunkMapError(f"chunk_id must be >= 0, got {chunk_id}")
+            if chunk_id in self._by_chunk:
+                raise ChunkMapError(
+                    f"chunk {chunk_id} already holds "
+                    f"{self._by_chunk[chunk_id].name}")
+            if chunk_id < self._next_chunk:
+                self._free.remove(chunk_id)
+            else:
+                # ids between the old high-water mark and the requested id
+                # become free (the record table must stay dense)
+                self._free.extend(range(self._next_chunk, chunk_id))
+                self._next_chunk = chunk_id + 1
+        else:
+            chunk_id = self._free.pop() if self._free else self._next_chunk
+            if chunk_id == self._next_chunk:
+                self._next_chunk += 1
         p = TensorPlacement(name=spec.name, shape=spec.shape,
                             chunk_id=chunk_id, offset=0)
         self._by_name[spec.name] = p

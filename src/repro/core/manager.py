@@ -244,15 +244,17 @@ class ChunkManager:
         return rec.payload[p.offset : p.offset + p.numel].reshape(p.shape)
 
     # -------------------------------------------- dynamic streams (serving)
-    def add_tensor(self, name: str, shape: tuple[int, ...]):
+    def add_tensor(self, name: str, shape: tuple[int, ...],
+                   chunk_id: int | None = None):
         """Map a new tensor into a dynamically-populated stream (KV): the
         map assigns (or recycles) a chunk, the record table grows to
         cover it, and the tensor starts FREE — its first access
         zero-fills (Algorithm 1 line 31), which is exactly a fresh
-        decode cache."""
+        decode cache.  An explicit ``chunk_id`` pins the tensor to that
+        id (stable slot->chunk binding for the compiled serving plane)."""
         from repro.core.chunk import TensorSpec
 
-        p = self.cmap.add_tensor(TensorSpec(name, tuple(shape)))
+        p = self.cmap.add_tensor(TensorSpec(name, tuple(shape)), chunk_id)
         while len(self._records) < self.cmap.num_chunks:
             self._records.append(_ChunkRecord(
                 chunk_id=len(self._records), payload=None, location=None))

@@ -136,6 +136,7 @@ class ServingEngine:
         timeline: TransferTimeline | None = None,
         bandwidth_aware_prefetch: bool = True,
         max_decode_batch: int | None = None,
+        max_prefill_batch: int | None = None,
         seed: int = 0,
         init_params: Any | None = None,
     ) -> None:
@@ -231,6 +232,16 @@ class ServingEngine:
                 len(s) >= 1 and s[0] == 1 for s in shapes)
             self._kv_seq_raw_bytes += g.length * sum(
                 n * np.dtype(d).itemsize for n, d in zip(numels, dtypes))
+        if getattr(cfg, "n_experts", 0) > 1:
+            # GShard expert capacity is f(round token count): packing
+            # sequences into one MoE call can push an expert past the
+            # capacity a solo pass would have had and drop a token —
+            # batching would change tokens, the one thing it must never
+            # do.  MoE archs therefore prefill/decode sequence-at-a-time
+            # in the eager engine; the compiled round step vmaps
+            # independent per-sequence lanes, so it batches *calls*
+            # without ever batching routing.
+            self._batchable = {k: False for k in self._batchable}
         self._kv_chunk_elems = build_kv_chunk_map(max_numel).chunk_size
         self.kv_chunk_bytes = self._kv_chunk_elems * 4  # fp32 payloads
         self._total_layers = sum(g.length for g in self._decode_groups)
@@ -271,6 +282,14 @@ class ServingEngine:
                    ) // max(self.kv_chunk_bytes, 1) - 1
             max_decode_batch = max(1, min(8, int(fit)))
         self.max_decode_batch = max(1, int(max_decode_batch))
+        # batched prefill: an admission cohort (same prompt length) packs
+        # into ONE g.prefill per layer.  Unlike batched decode, prefill
+        # stores each sequence's kv chunk one at a time under the layer's
+        # params, so the cap mirrors max_decode_batch for symmetry rather
+        # than a budget fit.
+        if max_prefill_batch is None:
+            max_prefill_batch = self.max_decode_batch
+        self.max_prefill_batch = max(1, int(max_prefill_batch))
         self._cost_cache: dict[int, Any] = {}
 
         self._queue: deque[ServeRequest] = deque()
@@ -337,17 +356,23 @@ class ServingEngine:
             req.state = "active"
             if self.manage_kv:
                 self._ensure_kv_stream()
-                for g in self._decode_groups:
-                    for i in range(g.length):
-                        self.kv_mgr.add_tensor(
-                            self._kv_name(req.rid, g.name, i),
-                            (self._kv_chunk_elems,))
+                self._map_request_kv(req)
             else:
                 self._raw_kv_bytes += self._kv_seq_raw_bytes
             self._active.append(req)
             newly.append(req)
         self.peak_concurrency = max(self.peak_concurrency, len(self._active))
         return newly
+
+    def _map_request_kv(self, req: ServeRequest) -> None:
+        """Map one admitted request's per-(group, layer) kv tensors.
+        The compiled engine overrides this to bind the request's chunks
+        to its padded batch slot's fixed chunk-id range."""
+        for g in self._decode_groups:
+            for i in range(g.length):
+                self.kv_mgr.add_tensor(
+                    self._kv_name(req.rid, g.name, i),
+                    (self._kv_chunk_elems,))
 
     def _ensure_kv_stream(self) -> None:
         """(Re)register the kv stream — dropped whenever the engine fully
@@ -364,26 +389,52 @@ class ServingEngine:
         return f"kv.{rid}.{gname}.{layer}"
 
     # ------------------------------------------------------------- schedule
-    def _round_ops(self, newly, decode_reqs) -> list[tuple[tuple, float]]:
-        """The round's exact op order: per new request a seq-major prefill
-        pass, then one layer-major decode sweep over the running set
-        (params fetched once per layer per round, every active sequence's
-        kv chunk visited under that fetch — the decode round-robin).
+    def _prefill_batchable(self) -> bool:
+        """Whether admission cohorts may pack >1 sequence into one
+        ``g.prefill`` call.  The eager engine needs every cache leaf to
+        lead with the batch dim so per-sequence caches can be sliced back
+        out; the compiled round step prefills lanes under ``vmap`` and
+        lifts this restriction."""
+        return all(self._batchable.values())
+
+    def _prefill_cohorts(self, newly) -> list[list[ServeRequest]]:
+        """Pack newly admitted requests into prefill cohorts: same prompt
+        length (one compiled/batched call shape), admission order inside
+        a length class (stable sort), capped at ``max_prefill_batch``."""
+        cap = self.max_prefill_batch if self._prefill_batchable() else 1
+        cohorts: list[list[ServeRequest]] = []
+        for req in sorted(newly, key=lambda r: int(r.prompt.size)):
+            if (cohorts and cohorts[-1][0].prompt.size == req.prompt.size
+                    and len(cohorts[-1]) < cap):
+                cohorts[-1].append(req)
+            else:
+                cohorts.append([req])
+        return cohorts
+
+    def _round_ops(self, cohorts, decode_reqs) -> list[tuple[tuple, float]]:
+        """The round's exact op order: per admission cohort a layer-major
+        prefill pass (one param fetch per layer per cohort, each member's
+        kv store under it), then one layer-major decode sweep over the
+        running set (params fetched once per layer per round, every
+        active sequence's kv chunk visited under that fetch — the decode
+        round-robin).
 
         Returns ``(op, compute_seconds)`` pairs — durations are generated
         alongside the ops so the transfer timeline's per-moment schedule
         can never drift from the execution order.  A prefill param op
-        carries the layer's prefill compute over that request's prompt;
+        carries the layer's prefill compute over the cohort's prompts;
         decode compute rides each sequence's kv op (or the param op
         itself when KV is unmanaged)."""
         ops: list[tuple[tuple, float]] = []
-        for req in newly:
-            pre = self._serve_costs(int(req.prompt.size)).prefill_layer_s
+        for cohort in cohorts:
+            pre = self._serve_costs(
+                int(cohort[0].prompt.size)).prefill_layer_s * len(cohort)
             for g in self._decode_groups:
                 for i in range(g.length):
                     ops.append((("param", g.name, i), pre))
                     if self.manage_kv:
-                        ops.append((("kv", req.rid, g.name, i), 0.0))
+                        for req in cohort:
+                            ops.append((("kv", req.rid, g.name, i), 0.0))
         if decode_reqs:
             dec = self._serve_costs(1).decode_layer_s
             for g in self._decode_groups:
@@ -409,13 +460,14 @@ class ServingEngine:
             self._cost_cache[key] = c
         return c
 
-    def _plan_round(self, newly, decode_reqs) -> None:
+    def _plan_round(self, cohorts, decode_reqs) -> None:
         """Register this round's reference schedule (plus a synthetic
         next round) as the OPT eviction future and the prefetcher's
         staging queue — the serving analogue of the tracer's warm-up
         schedule, re-derived every round because the active set is
         dynamic."""
-        ops = self._round_ops(newly, decode_reqs)
+        newly = [r for c in cohorts for r in c]
+        ops = self._round_ops(cohorts, decode_reqs)
         survivors = [r for r in decode_reqs + newly
                      if len(r.generated) + 1 < r.max_new_tokens]
         future = self._round_ops([], survivors or (decode_reqs + newly))
@@ -542,8 +594,15 @@ class ServingEngine:
             self.params_mgr.release_tensor(n, TensorState.HOLD)
 
     # ------------------------------------------------------------- phases
-    def _prefill(self, req: ServeRequest, stem) -> None:
-        batch = {"tokens": jnp.asarray(req.prompt[None, :])}
+    def _prefill_cohort(self, cohort: list[ServeRequest], stem) -> None:
+        """Prefill one admission cohort in a single layer-major pass:
+        the cohort's prompts run as ONE batch through ``g.prefill`` (one
+        param fetch per layer per cohort), then each member's cache rows
+        are sliced back out and stored into its kv chunks.  A cohort of
+        one is byte-identical to the old per-request prefill pass."""
+        k = len(cohort)
+        batch = {"tokens": jnp.asarray(
+            np.stack([r.prompt for r in cohort], axis=0))}
         x, extras = self.model.embed(stem, batch)
         for g in self._decode_groups:
             x, extras = self.model.between_groups(
@@ -553,16 +612,20 @@ class ServingEngine:
                 names, ptree = self._access_layer(g.name, i)
                 x, cache = g.prefill(ptree, x, extras, self.ctx)
                 self._release_layer(names)
-                if self.manage_kv:
-                    self._begin_op(("kv", req.rid, g.name, i))
-                    self._store_cache(req.rid, g.name, i, cache)
-                else:
-                    self._raw_store(req.rid, g.name, i, cache)
+                for j, req in enumerate(cohort):
+                    cj = cache if k == 1 else jax.tree.map(
+                        lambda t, _j=j: t[_j:_j + 1], cache)
+                    if self.manage_kv:
+                        self._begin_op(("kv", req.rid, g.name, i))
+                        self._store_cache(req.rid, g.name, i, cj)
+                    else:
+                        self._raw_store(req.rid, g.name, i, cj)
         logits = self.model.head_logits(stem, x[:, -1:, :])
-        tok = int(greedy_token(logits, self.cfg.vocab_size, self.ctx)[0])
-        req.pos = int(req.prompt.size)
-        req.generated.append(tok)
-        self.total_prefill_tokens += int(req.prompt.size)
+        toks = greedy_token(logits, self.cfg.vocab_size, self.ctx)
+        for j, req in enumerate(cohort):
+            req.pos = int(req.prompt.size)
+            req.generated.append(int(toks[j]))
+            self.total_prefill_tokens += int(req.prompt.size)
 
     def _decode_batches(self, decode_reqs) -> list[list[ServeRequest]]:
         """Pack the running set into decode batches: consecutive
@@ -691,17 +754,15 @@ class ServingEngine:
         decode0 = self.total_decode_tokens
         newly = self._admit()
         newly_ids = {r.rid for r in newly}
-        # group the running set into decode batches FIRST: the plan's kv
-        # reference order must equal the execution (load) order
+        # group admissions into prefill cohorts and the running set into
+        # decode batches FIRST: the plan's reference order must equal the
+        # execution (load) order
+        cohorts = self._prefill_cohorts(newly)
         batches = self._decode_batches(
             [r for r in self._active if r.rid not in newly_ids])
         decode_reqs = [r for b in batches for r in b]
-        self._plan_round(newly, decode_reqs)
-        stem = jax.tree.map(jnp.asarray, self._stem_np)
-        for req in newly:
-            self._prefill(req, stem)
-        if decode_reqs:
-            self._decode_round(batches, stem)
+        self._plan_round(cohorts, decode_reqs)
+        self._execute_round(cohorts, batches)
         completed = self._retire_finished()
         self.rounds += 1
         pf = self.pool.prefetch
@@ -724,6 +785,17 @@ class ServingEngine:
             timeline=(self.pool.timeline.take_step()
                       if self.pool.timeline is not None else None),
         )
+
+    def _execute_round(self, cohorts, batches) -> None:
+        """Run one planned round eagerly: per-cohort prefill passes, then
+        the layer-major decode sweep.  The compiled engine overrides this
+        with jitted round steps over padded slots (same plan, same pool
+        accounting, compiled compute)."""
+        stem = jax.tree.map(jnp.asarray, self._stem_np)
+        for cohort in cohorts:
+            self._prefill_cohort(cohort, stem)
+        if batches:
+            self._decode_round(batches, stem)
 
     def run(self, max_rounds: int = 10_000) -> list[ServeRoundMetrics]:
         """Round until every submitted request has completed."""

@@ -248,6 +248,63 @@ def build_decode_step(rt: ChunkedRuntime, shape: InputShape):
     return jf, args
 
 
+def round_cache_specs(rt: ChunkedRuntime, slots: int, horizon: int):
+    """Slot-cache ShapeDtypeStructs + PartitionSpecs for the compiled
+    serving round.
+
+    Layout: [tp, L, S_slots, ...per-seq cache...] — every leaf is the
+    lane-stacked single-sequence cache (batch dim 1 *inside* the per-seq
+    shape, wherever the arch puts it), so the same layout serves archs
+    with non-batch-leading cache leaves.  The slot axis is replicated:
+    serving runs host-driven, one process.
+    """
+    tp = rt.ctx.tp
+    specs, pspecs = {}, {}
+    for g in rt.model.groups():
+        if g.init_cache is None or g.decode is None:
+            continue
+        one = jax.eval_shape(lambda _g=g: _g.init_cache(1, horizon))
+        L = g.length
+        specs[g.name] = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((tp, L, slots) + s.shape, s.dtype),
+            one)
+        pspecs[g.name] = jax.tree.map(
+            lambda s: P("model", None, None, *([None] * len(s.shape))), one)
+    return specs, pspecs
+
+
+def build_round_decode_step(rt: ChunkedRuntime, slots: int, horizon: int):
+    """-> (jitted round decode step, slot-cache ShapeDtypeStructs).
+
+    ``step(pstores, caches, tokens [S,1], pos [S]) -> (tokens [S],
+    caches)`` — ONE compiled call advances every padded slot from its own
+    position.  Compilation keys only on the padded slot count (and
+    horizon): membership changes within a padded shape never recompile.
+    """
+    step = rt.round_decode_step_fn()
+    specs, cache_ps = round_cache_specs(rt, slots, horizon)
+    p_ps = rt.store_pspecs()
+    f = _smap(rt, step, (p_ps, cache_ps, P(None, None), P(None)),
+              (P(None), cache_ps), check_vma=False)
+    jf = jax.jit(f, donate_argnums=(1,))
+    return jf, specs
+
+
+def build_round_prefill_step(rt: ChunkedRuntime, cohort: int, prompt_len: int):
+    """-> jitted cohort prefill: ``step(pstores, tokens [K, S_prompt]) ->
+    (first_tokens [K], caches)`` with lane-stacked cache leaves
+    [tp, L, K, ...].  Compilation keys on (padded cohort, prompt length)."""
+    step = rt.round_prefill_step_fn()
+    # prefill emits the same cache *structure* as init_cache with
+    # prompt-length-dependent leaf shapes; the P specs only need ranks,
+    # which match the init template leaf for leaf
+    _, cache_ps = round_cache_specs(rt, cohort, prompt_len)
+    p_ps = rt.store_pspecs()
+    f = _smap(rt, step, (p_ps, P(None, None)), (P(None), cache_ps),
+              check_vma=False)
+    return jax.jit(f)
+
+
 # ---------------------------------------------------------------------------
 # state init (for real runs — examples / integration tests)
 # ---------------------------------------------------------------------------

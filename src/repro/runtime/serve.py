@@ -1,0 +1,297 @@
+"""Compiled serving plane: the continuous-batching round lowered to the
+``runtime/`` shard_map path.
+
+:class:`CompiledServingEngine` keeps the ENTIRE host-side brain of the
+eager :class:`~repro.core.serving.ServingEngine` — admission, per-round
+reference-sequence planning, OPT eviction moments,
+:class:`~repro.core.memory.SchedulePrefetcher` staging and
+:class:`~repro.core.timeline.TransferTimeline` accounting — and replaces
+only the *compute*: one jit-compiled **round decode step** over padded
+active-sequence slots plus one compiled **cohort prefill** per admission
+cohort, instead of per-layer eager dispatch.  This is the paper's thesis
+applied to serving: chunk orchestration decisions live on the host
+between rounds; the device runs dense, uninterrupted compute.
+
+Slot model
+----------
+Active sequences bind to **padded batch slots**.  Slot caches are
+persistent jax arrays with leaves ``[tp, L, S_slots, ...per-seq...]``
+(lane-stacked single-sequence caches, see
+:func:`~repro.runtime.driver.round_cache_specs`); the padded slot count
+grows in powers of two and never shrinks, so the round decode step
+recompiles only when the concurrency high-water mark crosses a power of
+two — membership changes within a padded shape NEVER recompile.  Slot
+``s`` also pins its kv tensors to the fixed chunk-id range
+``[s*total_layers, (s+1)*total_layers)`` (stable slot<->chunk binding,
+:meth:`~repro.core.chunk.DynamicChunkMap.add_tensor` with explicit ids),
+so re-binding a slot to a new sequence reuses the same chunks.
+
+Round ordering
+--------------
+Each round runs the compiled decode step over ALL padded slots *before*
+writing the round's prefill rows.  Free, stale, and newly-bound slots
+decode garbage — harmlessly: every slot is an independent ``vmap`` lane
+(nothing leaks across lanes, MoE capacity included), the host ignores
+their tokens, and a newly bound slot's rows are fully overwritten by the
+prefill scatter before that slot's first real decode.  No in-graph
+active mask is needed, so the compiled graph is membership-independent.
+
+Plan boundary
+-------------
+The pool is the repo's memory *model*: payload traffic, OPT eviction,
+prefetch and timeline stalls are replayed against the exact op order the
+plan registered (``_replay_round_ops`` mirrors the eager engine's
+access/release choreography), while the authoritative cache bytes live
+in the slot arrays — exactly how the eager trainer anchors
+``ChunkedRuntime``.  Token parity with the eager engine is exact; the
+eager engine remains the semantics oracle.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.serving import ServeRequest, ServingEngine
+from repro.core.state import TensorState
+from repro.models.layers import AxisCtx
+
+_MIN_SLOTS = 2  # smallest padded shape (avoids a recompile at 1 -> 2)
+
+
+def _next_pow2(n: int) -> int:
+    return 1 << max(0, int(n) - 1).bit_length()
+
+
+class CompiledServingEngine(ServingEngine):
+    """Continuous batching with compiled round steps over padded slots."""
+
+    def __init__(self, model_cls, cfg, *, seed: int = 0,
+                 init_params=None, **kw):
+        if not kw.get("manage_kv", True):
+            raise ValueError(
+                "CompiledServingEngine serves the managed kv stream; use "
+                "the eager ServingEngine for the unmanaged baseline")
+        if init_params is None:
+            # same ctx + key as the base engine: both planes must start
+            # from bitwise-identical parameters
+            init_params = model_cls(cfg, AxisCtx()).init_params(
+                jax.random.key(seed))
+        super().__init__(model_cls, cfg, seed=seed, init_params=init_params,
+                         **kw)
+
+        from repro.core import zero
+        from repro.launch.mesh import make_smoke_mesh
+        from repro.runtime.step import ChunkedRuntime, RuntimeOptions
+
+        self._rt = ChunkedRuntime(model_cls, cfg, make_smoke_mesh(1, 1),
+                                  RuntimeOptions())
+        pstores = {}
+        for name, lay in self._rt.layouts.items():
+            if name == "stem":
+                pstores[name] = zero.flatten_to_store(
+                    lay, init_params["stem"])[None]
+            else:
+                stacked = init_params["groups"][name]
+                pstores[name] = jax.vmap(
+                    lambda t, _l=lay: zero.flatten_to_store(_l, t))(
+                        stacked)[None]
+        self._pstores = pstores
+
+        # slot <-> request binding (slot index is also the chunk-id base)
+        self._slots: list[int | None] = []
+        self._slot_of: dict[int, int] = {}
+        self._padded = 0
+        self._slot_caches = None  # {gname: tree [tp, L, S_slots, ...]}
+        # compiled-step caches: recompilation keys only on padded shapes
+        self._decode_steps: dict[int, object] = {}
+        self._prefill_steps: dict[tuple[int, int], object] = {}
+
+    # ------------------------------------------------------------- compiles
+    @property
+    def decode_compile_count(self) -> int:
+        """How many distinct padded slot shapes the round decode step has
+        compiled for (the recompilation-policy observable)."""
+        return len(self._decode_steps)
+
+    @property
+    def prefill_compile_count(self) -> int:
+        return len(self._prefill_steps)
+
+    @property
+    def padded_slots(self) -> int:
+        return self._padded
+
+    # ---------------------------------------------------------------- slots
+    def _bind_slot(self, rid: int) -> int:
+        for s, r in enumerate(self._slots):
+            if r is None:
+                self._slots[s] = rid
+                self._slot_of[rid] = s
+                return s
+        self._slots.append(rid)
+        self._slot_of[rid] = len(self._slots) - 1
+        return len(self._slots) - 1
+
+    def _map_request_kv(self, req: ServeRequest) -> None:
+        """Bind the request to the lowest free slot and pin its kv chunks
+        to the slot's fixed id range — admission churn re-walks the same
+        chunk ids, so nothing about the pool layout (or any compiled
+        shape) depends on WHICH sequences are live."""
+        slot = self._bind_slot(req.rid)
+        base = slot * self._total_layers
+        j = 0
+        for g in self._decode_groups:
+            for i in range(g.length):
+                self.kv_mgr.add_tensor(
+                    self._kv_name(req.rid, g.name, i),
+                    (self._kv_chunk_elems,), chunk_id=base + j)
+                j += 1
+
+    def _retire_finished(self) -> int:
+        done = [r.rid for r in self._active
+                if len(r.generated) >= r.max_new_tokens]
+        n = super()._retire_finished()
+        for rid in done:
+            slot = self._slot_of.pop(rid)
+            self._slots[slot] = None  # stale rows overwritten on re-bind
+        return n
+
+    def _prefill_batchable(self) -> bool:
+        # compiled prefill vmaps independent per-sequence lanes: cohorts
+        # need no batch-leading cache leaves and never batch MoE routing
+        return True
+
+    def _ensure_slot_capacity(self) -> None:
+        need = len(self._slots)
+        s = max(_MIN_SLOTS, _next_pow2(need))
+        if self._slot_caches is not None and s <= self._padded:
+            return
+        from repro.runtime import driver
+
+        if self._slot_caches is None:
+            specs, _ = driver.round_cache_specs(
+                self._rt, s, self.max_seq_len)
+            self._slot_caches = jax.tree.map(
+                lambda sd: jnp.zeros(sd.shape, sd.dtype), specs)
+        else:
+            grow = lambda t: jnp.pad(
+                t, [(0, 0), (0, 0), (0, s - self._padded)]
+                + [(0, 0)] * (t.ndim - 3))
+            self._slot_caches = jax.tree.map(grow, self._slot_caches)
+        self._padded = s
+
+    # ------------------------------------------------------ compiled phases
+    def _compiled_decode(self, decode_reqs) -> None:
+        from repro.runtime import driver
+
+        fn = self._decode_steps.get(self._padded)
+        if fn is None:
+            fn, _ = driver.build_round_decode_step(
+                self._rt, self._padded, self.max_seq_len)
+            self._decode_steps[self._padded] = fn
+        tokens = np.zeros((self._padded, 1), np.int32)
+        pos = np.zeros((self._padded,), np.int32)
+        for r in decode_reqs:
+            s = self._slot_of[r.rid]
+            tokens[s, 0] = r.generated[-1]
+            pos[s] = r.pos
+        toks, self._slot_caches = fn(
+            self._pstores, self._slot_caches,
+            jnp.asarray(tokens), jnp.asarray(pos))
+        toks = np.asarray(toks)
+        for r in decode_reqs:
+            r.generated.append(int(toks[self._slot_of[r.rid]]))
+            r.pos += 1
+            self.total_decode_tokens += 1
+
+    def _compiled_prefill(self, cohort) -> None:
+        from repro.runtime import driver
+
+        k = len(cohort)
+        sp = int(cohort[0].prompt.size)
+        kpad = _next_pow2(k)
+        fn = self._prefill_steps.get((kpad, sp))
+        if fn is None:
+            fn = driver.build_round_prefill_step(self._rt, kpad, sp)
+            self._prefill_steps[(kpad, sp)] = fn
+        rows = np.stack([r.prompt for r in cohort]
+                        + [cohort[0].prompt] * (kpad - k))
+        toks, caches = fn(self._pstores, jnp.asarray(rows))
+        toks = np.asarray(toks)
+
+        # pad each lane's prefill cache to the decode-horizon template
+        # and scatter the real rows into their slots (padding lanes are
+        # dropped — they only exist to keep the compiled shape pow2)
+        idx = jnp.asarray([self._slot_of[r.rid] for r in cohort])
+        for gname, tree in caches.items():
+            tmpl_shapes = self._cache_tmpl[gname][1]
+            dst, dtd = jax.tree_util.tree_flatten(self._slot_caches[gname])
+            src = jax.tree_util.tree_leaves(tree)
+            out = []
+            for d, sl, t in zip(dst, src, tmpl_shapes):
+                pads = [(0, 0)] * 3 + [(0, b - a)
+                                       for a, b in zip(sl.shape[3:], t)]
+                row = jnp.pad(sl, pads)[:, :, :k].astype(d.dtype)
+                out.append(d.at[:, :, idx].set(row))
+            self._slot_caches[gname] = jax.tree_util.tree_unflatten(dtd, out)
+        for j, r in enumerate(cohort):
+            r.pos = int(r.prompt.size)
+            r.generated.append(int(toks[j]))
+            self.total_prefill_tokens += int(r.prompt.size)
+
+    # --------------------------------------------------------- pool replay
+    def _replay_round_ops(self, cohorts, decode_reqs) -> None:
+        """Walk the planned op order against the pool — the same
+        access/release choreography the eager engine performs around its
+        compute, so chunk placement, h2d/d2h traffic, OPT eviction,
+        prefetch staging and timeline stalls evolve under the identical
+        reference sequence.  Payload *contents* are not written: the
+        authoritative cache bytes live in the slot arrays; the pool is
+        the placement/traffic model (as it is for the compiled trainer)."""
+        for cohort in cohorts:
+            for g in self._decode_groups:
+                for i in range(g.length):
+                    self._begin_op(("param", g.name, i))
+                    names = self._group_tensor_names[g.name][i]
+                    for n in names:
+                        self.params_mgr.access_tensor(n, "device")
+                    self._release_layer(names)
+                    for req in cohort:
+                        name = self._kv_name(req.rid, g.name, i)
+                        self._begin_op(("kv", req.rid, g.name, i))
+                        self.kv_mgr.access_tensor(name, "device")
+                        self.kv_mgr.release_tensor(name, TensorState.HOLD)
+        if decode_reqs:
+            for g in self._decode_groups:
+                for i in range(g.length):
+                    self._begin_op(("param", g.name, i))
+                    names = self._group_tensor_names[g.name][i]
+                    for n in names:
+                        self.params_mgr.access_tensor(n, "device")
+                    # params stay COMPUTE-pinned while the kv chunks
+                    # cycle under them, exactly like the eager sweep
+                    for req in decode_reqs:
+                        name = self._kv_name(req.rid, g.name, i)
+                        self._begin_op(("kv", req.rid, g.name, i))
+                        self.kv_mgr.access_tensor(name, "device")
+                        self.kv_mgr.release_tensor(name, TensorState.HOLD)
+                    self._release_layer(names)
+
+    # ----------------------------------------------------------- the round
+    def _execute_round(self, cohorts, batches) -> None:
+        """Compiled round: decode ALL padded slots from their pre-prefill
+        caches (one jitted call), then prefill this round's admission
+        cohorts and scatter their rows, then replay the plan against the
+        pool.  Compute order differs from the plan's (prefill-first) op
+        order on purpose — the plan order only drives the memory model,
+        and decoding before the prefill scatter is what makes free-slot
+        garbage harmless."""
+        self._ensure_slot_capacity()
+        decode_reqs = [r for b in batches for r in b]
+        if decode_reqs:
+            self._compiled_decode(decode_reqs)
+        for cohort in cohorts:
+            self._compiled_prefill(cohort)
+        self._replay_round_ops(cohorts, decode_reqs)

@@ -380,6 +380,94 @@ class ChunkedRuntime:
 
         return step
 
+    def round_prefill_step_fn(self) -> Callable:
+        """Batched prefill over one admission cohort: ``vmap`` of a
+        per-sequence prefill pass over stacked prompt rows.
+
+        ``tokens``: [K, S_prompt] int32.  Returns ``(first_tokens [K],
+        caches)`` where every cache leaf is [tp, L, K, ...per-seq...] —
+        lane-stacked single-sequence caches, NOT a batched cache.  The
+        lane layout is what makes the round step arch-agnostic: archs
+        whose caches don't lead with the batch dim (zamba's stacked
+        per-unit mamba states) vmap exactly like dense attention, and a
+        lane's math is bit-identical to a batch-1 eager prefill (MoE
+        capacity, which depends on token count, sees one sequence)."""
+        ctx, cdtype = self.ctx, dtype_of(self.cfg.compute_dtype)
+        model = self.model
+
+        def step(pstores, tokens):
+            stem = self._gather_tree("stem", pstores["stem"][0], dtype=cdtype)
+
+            def lane(row):
+                batch = {"tokens": row[None, :]}
+                x, extras = model.embed(stem, batch)
+                caches = {}
+                for g in model.groups():
+                    x, extras = model.between_groups(
+                        g.name, x, extras, stem, batch)
+                    store = pstores[g.name][0]
+
+                    def body(cx, layer_store, _g=g):
+                        params = self._gather_tree(
+                            _g.name, layer_store, dtype=cdtype)
+                        y, cache = _g.prefill(params, cx, extras, ctx)
+                        return y, cache
+                    x, ys = jax.lax.scan(body, x, store)
+                    caches[g.name] = ys
+                logits = model.head_logits(stem, x[:, -1:, :])
+                return greedy_token(logits, self.cfg.vocab_size, ctx), caches
+
+            toks, caches = jax.vmap(lane, in_axes=0, out_axes=(0, 1))(tokens)
+            # [K, 1] -> [K]; re-add the leading tp dim ([tp, L, K, ...])
+            return toks[:, 0], jax.tree.map(lambda t: t[None], caches)
+
+        return step
+
+    def round_decode_step_fn(self) -> Callable:
+        """One compiled continuous-batching decode step over padded
+        active-sequence slots.
+
+        ``tokens``: [S_slots, 1] int32, ``pos``: [S_slots] int32 (the
+        position-vector decode signature: every slot advances from its
+        own position in ONE call).  Cache leaves are [tp, L, S_slots,
+        ...per-seq...].  Each slot is an independent ``vmap`` lane, so
+        free/stale slots decode garbage that cannot leak into live lanes
+        — the host simply ignores their tokens, and a re-bound slot's
+        rows are fully overwritten by the next prefill scatter."""
+        ctx, cdtype = self.ctx, dtype_of(self.cfg.compute_dtype)
+        model = self.model
+
+        def step(pstores, caches, tokens, pos):
+            stem = self._gather_tree("stem", pstores["stem"][0], dtype=cdtype)
+
+            def lane(lane_caches, token, p):
+                x = model.embed_decode(stem, token[None], p, None)
+                extras = model.decode_extras(stem, x)
+                new_caches = {}
+                for g in model.groups():
+                    if g.decode is None:
+                        continue
+                    store = pstores[g.name][0]
+
+                    def body(cx, inp, _g=g):
+                        layer_store, layer_cache = inp
+                        params = self._gather_tree(
+                            _g.name, layer_store, dtype=cdtype)
+                        y, c2 = _g.decode(params, cx, layer_cache, p,
+                                          extras, ctx)
+                        return y, c2
+                    x, ys = jax.lax.scan(body, x, (store, lane_caches[g.name]))
+                    new_caches[g.name] = ys
+                logits = model.head_logits(stem, x)
+                return greedy_token(logits, self.cfg.vocab_size, ctx), new_caches
+
+            lane_in = jax.tree.map(lambda t: t[0], caches)  # strip tp dim
+            toks, new_caches = jax.vmap(
+                lane, in_axes=(1, 0, 0), out_axes=(0, 1))(lane_in, tokens, pos)
+            return toks[:, 0], jax.tree.map(lambda t: t[None], new_caches)
+
+        return step
+
     def decode_step_fn(self) -> Callable:
         ctx, cdtype = self.ctx, dtype_of(self.cfg.compute_dtype)
         model = self.model

@@ -1,0 +1,208 @@
+"""Compiled serving plane (runtime/serve.py): token-for-token parity
+with the eager oracle across the arch zoo, the padded-slot
+recompilation policy, stable slot<->chunk binding, and the
+DynamicChunkMap explicit-id allocator it relies on."""
+
+import random
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config, model_class
+from repro.core.chunk import ChunkMapError, DynamicChunkMap, TensorSpec
+from repro.core.serving import ServingEngine
+from repro.runtime.serve import CompiledServingEngine
+
+
+def _cfg(arch):
+    return get_config(arch, smoke=True).replace(
+        param_dtype="float32", compute_dtype="float32")
+
+
+def _burst(cfg, n=6, plen=8, seed=2):
+    return np.asarray(jax.random.randint(
+        jax.random.key(seed), (n, plen), 0, cfg.vocab_size))
+
+
+# staggered lifetimes: early completions churn the slot set and leave the
+# survivors decoding from divergent positions — the position-vector path
+_NEW_TOKENS = [8, 3, 8, 5, 8, 8]
+
+
+def _serve(cls, cfg, prompts, new_tokens, *, device, host, horizon=24, **kw):
+    eng = cls(model_class(cfg), cfg, device_memory_bytes=device,
+              host_memory_bytes=host, max_seq_len=horizon, **kw)
+    rids = [eng.submit(p, n) for p, n in zip(prompts, new_tokens)]
+    for m in eng.run():
+        assert m.peak_device_bytes <= eng.device_capacity
+    eng.check_invariants()
+    return eng, [eng.result(r) for r in rids]
+
+
+def _parity(arch, device, host):
+    """Eager vs compiled round: exact token parity under a device budget
+    tight enough that the kv stream pages (both engines replay the same
+    plan against the pool, so both must spill)."""
+    cfg = _cfg(arch)
+    prompts = _burst(cfg)
+    eager, out_e = _serve(ServingEngine, cfg, prompts, _NEW_TOKENS,
+                          device=device, host=host)
+    comp, out_c = _serve(CompiledServingEngine, cfg, prompts, _NEW_TOKENS,
+                         device=device, host=host)
+    assert out_e == out_c, (out_e, out_c)
+    # the budget actually exercised the paging path in both planes
+    assert eager.pool.stats.d2h_bytes > 0
+    assert comp.pool.stats.d2h_bytes > 0
+    return eager, comp
+
+
+# ---------------------------------------------------------------------------
+# acceptance: compiled round == eager oracle (one dense config in tier-1;
+# the MoE and non-batch-leading-cache sweeps ride the slow CI job)
+# ---------------------------------------------------------------------------
+
+
+def test_compiled_round_matches_eager_dense():
+    _parity("qwen3-0.6b", device=1_300_000, host=8_000_000)
+
+
+@pytest.mark.slow
+def test_compiled_round_matches_eager_moe():
+    """MoE: expert capacity is f(token count), so per-sequence routing
+    semantics must survive the lowering — the round step's vmap lanes
+    keep every sequence's routing independent of slot population."""
+    eager, _ = _parity("mixtral-8x7b", device=2_800_000, host=24_000_000)
+    # the eager oracle must NOT batch MoE calls (capacity coupling would
+    # change tokens); the compiled lanes stay per-sequence by construction
+    assert eager._prefill_batchable() is False
+
+
+@pytest.mark.slow
+def test_compiled_round_matches_eager_zamba():
+    """Non-batch-leading cache layout (zamba stacks per-unit mamba states
+    ahead of the batch dim): the eager engine must serve it sequence-at-
+    a-time, the lane-stacked slot layout batches it anyway."""
+    eager, comp = _parity("zamba2-1.2b", device=2_000_000, host=24_000_000)
+    assert eager._prefill_batchable() is False
+    assert comp._prefill_batchable() is True
+
+
+# ---------------------------------------------------------------------------
+# recompilation policy: padded slot shapes, not membership
+# ---------------------------------------------------------------------------
+
+
+def test_no_recompile_on_membership_change():
+    """Admission/retire churn within one padded shape must not recompile
+    the round step: compilation keys only on the padded slot count."""
+    cfg = _cfg("qwen3-0.6b")
+    prompts = _burst(cfg)
+    comp, _ = _serve(CompiledServingEngine, cfg, prompts, _NEW_TOKENS,
+                     device=1_300_000, host=8_000_000)
+    # 6 concurrent sequences pad to 8; completions re-bound slots without
+    # ever crossing a power of two
+    assert comp.padded_slots == 8
+    assert comp.decode_compile_count == 1
+    # a second wave after full drain reuses every compiled shape
+    rids = [comp.submit(p, n) for p, n in zip(prompts, _NEW_TOKENS)]
+    comp.run()
+    comp.check_invariants()
+    assert comp.decode_compile_count == 1
+    assert all(comp.result(r) for r in rids)
+
+
+def test_slot_chunk_binding_is_stable_across_rebinds():
+    """Slot s always maps to chunk ids [s*L, (s+1)*L): the kv id space is
+    bounded by the padded-slot high-water mark however many sequences
+    churn through, and re-admission after a drain walks the same ids."""
+    cfg = _cfg("qwen3-0.6b")
+    prompts = _burst(cfg)
+    comp, _ = _serve(CompiledServingEngine, cfg, prompts, _NEW_TOKENS,
+                     device=1_300_000, host=8_000_000)
+    total_layers = comp._total_layers
+    # second wave: inspect live placements mid-flight
+    for p, n in zip(prompts, _NEW_TOKENS):
+        comp.submit(p, n)
+    comp.step_round()
+    cm = comp.kv_mgr.cmap
+    for pl in cm.placements:
+        rid = int(pl.name.split(".")[1])
+        slot = comp._slot_of[rid]
+        lo, hi = slot * total_layers, (slot + 1) * total_layers
+        assert lo <= pl.chunk_id < hi, (pl.name, pl.chunk_id, slot)
+    # id space bounded by peak concurrency's slot range, not request count
+    assert cm.num_chunks <= comp.peak_concurrency * total_layers
+    comp.run()
+    comp.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# DynamicChunkMap explicit-id binding under padded-slot churn (property
+# test: randomized bind/complete traffic, engine-style lowest-free-slot)
+# ---------------------------------------------------------------------------
+
+
+def test_dynamic_map_slot_binding_property_under_churn():
+    layers = 3
+    rng = random.Random(0)
+    for trial in range(20):
+        dm = DynamicChunkMap(64)
+        live: dict[int, list[str]] = {}  # slot -> tensor names
+        high_water = 0
+        next_rid = 0
+        for _ in range(60):
+            if live and (rng.random() < 0.45 or len(live) >= 6):
+                slot = rng.choice(sorted(live))
+                for n in live.pop(slot):
+                    dm.remove_tensor(n)
+            else:
+                # engine rule: lowest free slot first
+                slot = next(s for s in range(len(live) + 1)
+                            if s not in live)
+                rid = next_rid
+                next_rid += 1
+                names = []
+                for j in range(layers):
+                    p = dm.add_tensor(
+                        TensorSpec(f"kv.{rid}.{j}", (32,)),
+                        chunk_id=slot * layers + j)
+                    assert p.chunk_id == slot * layers + j
+                    names.append(p.name)
+                live[slot] = names
+                high_water = max(high_water, len(live))
+            # invariants after every mutation:
+            # 1. live payload count matches the live slot set
+            assert dm.num_payload_chunks == len(live) * layers
+            # 2. id space bounded by the slot high-water mark (recycling
+            #    works: churn never leaks ids)
+            assert dm.num_chunks <= high_water * layers
+            # 3. every live tensor sits exactly in its slot's id range
+            for slot, names in live.items():
+                for j, n in enumerate(names):
+                    assert dm.placement(n).chunk_id == slot * layers + j
+            # 4. binding into an occupied chunk refuses
+            if live:
+                slot = next(iter(live))
+                with pytest.raises(ChunkMapError):
+                    dm.add_tensor(TensorSpec("dup", (1,)),
+                                  chunk_id=slot * layers)
+
+
+def test_dynamic_map_explicit_id_interops_with_default_alloc():
+    dm = DynamicChunkMap(16)
+    a = dm.add_tensor(TensorSpec("a", (16,)), chunk_id=2)
+    assert a.chunk_id == 2
+    # ids 0 and 1 were opened below the new high-water mark: default
+    # allocation recycles them before growing the id space
+    b = dm.add_tensor(TensorSpec("b", (8,)))
+    c = dm.add_tensor(TensorSpec("c", (8,)))
+    assert {b.chunk_id, c.chunk_id} == {0, 1}
+    d = dm.add_tensor(TensorSpec("d", (8,)))
+    assert d.chunk_id == 3
+    assert dm.num_chunks == 4
+    dm.remove_tensor("a")
+    e = dm.add_tensor(TensorSpec("e", (4,)), chunk_id=2)
+    assert e.chunk_id == 2
+    with pytest.raises(ChunkMapError):
+        dm.add_tensor(TensorSpec("f", (4,)), chunk_id=-1)

@@ -173,6 +173,51 @@ def test_completion_frees_chunks_mid_flight():
 
 
 # ---------------------------------------------------------------------------
+# batched prefill: admission cohorts share one g.prefill per layer
+# ---------------------------------------------------------------------------
+
+
+def test_batched_prefill_matches_prefill_batch_one():
+    """Cohort prefill (equal-length admissions packed into one batched
+    g.prefill per layer) must be token-for-token identical to the
+    sequence-at-a-time engine, and must not pay MORE param traffic."""
+    cfg = _cfg()
+    prompts = np.asarray(jax.random.randint(
+        jax.random.key(5), (6, 8), 0, cfg.vocab_size))
+
+    def serve(cap):
+        eng = _engine(cfg, device=1_200_000, horizon=24,
+                      max_prefill_batch=cap)
+        rids = [eng.submit(p, 6) for p in prompts]
+        eng.run()
+        eng.check_invariants()
+        return eng, [eng.result(r) for r in rids]
+
+    batched, out_b = serve(None)  # default: cap = max_decode_batch
+    single, out_s = serve(1)
+    assert batched.max_prefill_batch > 1
+    assert out_b == out_s
+    assert batched.pool.stats.h2d_bytes <= single.pool.stats.h2d_bytes
+
+
+def test_prefill_cohorts_pack_equal_lengths_up_to_cap():
+    from repro.core.serving import ServeRequest
+
+    cfg = _cfg()
+    eng = _engine(cfg, horizon=24, max_prefill_batch=2)
+    newly = [ServeRequest(rid=i, prompt=np.arange(n, dtype=np.int32),
+                          max_new_tokens=2)
+             for i, n in enumerate((8, 4, 8, 8, 4, 8))]
+    cohorts = eng._prefill_cohorts(newly)
+    # equal-length runs pack to the cap; lengths never mix in a cohort
+    assert [[r.rid for r in c] for c in cohorts] == [[1, 4], [0, 2], [3, 5]]
+    # sequence-at-a-time archs (non-batch-leading cache leaves, MoE
+    # capacity coupling) force singleton cohorts whatever the cap
+    eng._batchable = {k: False for k in eng._batchable}
+    assert all(len(c) == 1 for c in eng._prefill_cohorts(newly))
+
+
+# ---------------------------------------------------------------------------
 # capacity: managed kv stream vs unmanaged device-resident caches
 # ---------------------------------------------------------------------------
 
