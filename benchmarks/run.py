@@ -25,6 +25,7 @@ MODULES = [
     "benchmarks.serving",         # serving plane: kv stream capacity
     "benchmarks.serving_compiled",  # compiled round-step scaling
     "benchmarks.timeline",        # transfer timeline / Fig. 16 stalls
+    "benchmarks.serving_scale",   # paged KV + rank-sharded fleet capacity
 ]
 
 

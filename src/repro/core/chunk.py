@@ -232,6 +232,15 @@ def build_act_chunk_map(
     return build_chunk_map(specs, size, nproc=1)
 
 
+def pages_for(positions: int, page_tokens: int | None) -> int:
+    """KV pages covering ``positions`` decode positions: ``ceil(positions
+    / page_tokens)``, at least one.  An unpaged stream (``page_tokens is
+    None``) is one page spanning the whole horizon."""
+    if page_tokens is None:
+        return 1
+    return max(1, -(-int(positions) // int(page_tokens)))
+
+
 class DynamicChunkMap:
     """Mutable chunk<->tensor map for *dynamically populated* streams.
 
@@ -250,6 +259,24 @@ class DynamicChunkMap:
     KV state is rank-local, it is never all-gathered or reduce-scattered,
     so there are no communication groups.
 
+    **Paging** (``page_tokens=``): with a page size the stream's unit
+    becomes a per-position-block page — a sequence at position ``p``
+    holds :func:`pages_for` ``(p)`` chunks per (group, layer) instead of
+    one whole-horizon chunk, and :meth:`pages_for` is the map-level page
+    math admission reasons with.  The map itself stays one-tensor-per-
+    chunk; pages are simply more (smaller) tensors.
+
+    **Reserved ids** (:meth:`reserve_ids`): the compiled serving plane
+    pins padded batch slot ``s`` to a fixed chunk-id *range*.  Reserving
+    the range takes those ids out of default allocation and out of
+    free-list recycling permanently: a removed tensor on a reserved id
+    does NOT return to the free list, so background default allocation
+    can never collide with a live slot's pinned page range — reserved
+    ids are only ever (re)used by an explicit ``chunk_id=`` bind.
+
+    Invariant: every id below the high-water mark is exactly one of
+    occupied / free / reserved; reserved ids may also sit above it.
+
     The query surface mirrors :class:`ChunkTensorMap` (``placement`` /
     ``chunk_tensors`` / ``num_chunks`` / ``chunk_size`` ...), so
     :class:`~repro.core.manager.ChunkManager` and the pool consume either
@@ -258,14 +285,46 @@ class DynamicChunkMap:
 
     nproc = 1
 
-    def __init__(self, chunk_size: int) -> None:
+    def __init__(self, chunk_size: int, *,
+                 page_tokens: int | None = None) -> None:
         if chunk_size <= 0:
             raise ChunkMapError(f"chunk_size must be positive, got {chunk_size}")
+        if page_tokens is not None and page_tokens < 1:
+            raise ChunkMapError(
+                f"page_tokens must be >= 1, got {page_tokens}")
         self.chunk_size = chunk_size
+        self.page_tokens = page_tokens
         self._by_name: dict[str, TensorPlacement] = {}
         self._by_chunk: dict[int, TensorPlacement] = {}
         self._free: list[int] = []
+        self._reserved: set[int] = set()
         self._next_chunk = 0
+
+    # ----------------------------------------------------------------- pages
+    def pages_for(self, positions: int) -> int:
+        """Pages a sequence holding ``positions`` cache positions needs
+        per (group, layer) under this map's page size."""
+        return pages_for(positions, self.page_tokens)
+
+    # ------------------------------------------------------------- reserve
+    def reserve_ids(self, ids: Iterable[int]) -> None:
+        """Withdraw ``ids`` from default allocation and from free-list
+        recycling (idempotent).  A reserved id is bound only through an
+        explicit ``add_tensor(..., chunk_id=)``, and removing such a
+        tensor keeps the id reserved — the compiled plane's slot page
+        ranges stay collision-free however many sequences churn."""
+        for i in ids:
+            if i < 0:
+                raise ChunkMapError(f"chunk_id must be >= 0, got {i}")
+            if i in self._reserved:
+                continue
+            if i in self._by_chunk:
+                raise ChunkMapError(
+                    f"chunk {i} holds {self._by_chunk[i].name}; a live "
+                    f"chunk cannot be reserved")
+            if i < self._next_chunk:
+                self._free.remove(i)
+            self._reserved.add(i)
 
     # ---------------------------------------------------------------- mutate
     def add_tensor(self, spec: TensorSpec,
@@ -292,17 +351,23 @@ class DynamicChunkMap:
                 raise ChunkMapError(
                     f"chunk {chunk_id} already holds "
                     f"{self._by_chunk[chunk_id].name}")
-            if chunk_id < self._next_chunk:
-                self._free.remove(chunk_id)
-            else:
+            if chunk_id >= self._next_chunk:
                 # ids between the old high-water mark and the requested id
-                # become free (the record table must stay dense)
-                self._free.extend(range(self._next_chunk, chunk_id))
+                # become free (the record table must stay dense) — except
+                # reserved ones, which stay bindable-by-pin only
+                self._free.extend(i for i in range(self._next_chunk, chunk_id)
+                                  if i not in self._reserved)
                 self._next_chunk = chunk_id + 1
+            elif chunk_id not in self._reserved:
+                self._free.remove(chunk_id)
         else:
-            chunk_id = self._free.pop() if self._free else self._next_chunk
-            if chunk_id == self._next_chunk:
-                self._next_chunk += 1
+            if self._free:
+                chunk_id = self._free.pop()
+            else:
+                chunk_id = self._next_chunk
+                while chunk_id in self._reserved:
+                    chunk_id += 1
+                self._next_chunk = chunk_id + 1
         p = TensorPlacement(name=spec.name, shape=spec.shape,
                             chunk_id=chunk_id, offset=0)
         self._by_name[spec.name] = p
@@ -310,10 +375,13 @@ class DynamicChunkMap:
         return p
 
     def remove_tensor(self, name: str) -> int:
-        """Unmap a tensor; its chunk id goes back to the free list."""
+        """Unmap a tensor; its chunk id goes back to the free list —
+        unless it is reserved, in which case it stays out of default
+        allocation and waits for the next explicit pin."""
         p = self._by_name.pop(name)
         del self._by_chunk[p.chunk_id]
-        self._free.append(p.chunk_id)
+        if p.chunk_id not in self._reserved:
+            self._free.append(p.chunk_id)
         return p.chunk_id
 
     # ---------------------------------------------------------------- lookup
@@ -353,12 +421,15 @@ class DynamicChunkMap:
         raise ChunkMapError("dynamic (rank-local) streams have no comm groups")
 
 
-def build_kv_chunk_map(numel: int, *, align: int = 256) -> DynamicChunkMap:
-    """Empty dynamic map for the serving KV stream: one (sequence, layer)
-    cache per chunk, sized for the largest layer cache rounded to
-    ``align`` (the same vreg-tiling alignment as the act stream)."""
+def build_kv_chunk_map(numel: int, *, align: int = 256,
+                       page_tokens: int | None = None) -> DynamicChunkMap:
+    """Empty dynamic map for the serving KV stream: one (sequence, layer,
+    page) cache per chunk, sized for the largest layer page rounded to
+    ``align`` (the same vreg-tiling alignment as the act stream).  With
+    ``page_tokens`` the unit is a position-block page instead of a whole
+    decode horizon."""
     size = int(math.ceil(max(numel, 1) / align) * align)
-    return DynamicChunkMap(size)
+    return DynamicChunkMap(size, page_tokens=page_tokens)
 
 
 # ---------------------------------------------------------------------------

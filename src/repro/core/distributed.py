@@ -385,3 +385,192 @@ class DistributedPatrickStarEngine:
             o = self.cmap.chunk_owner(c)
             assert self.ranks[o].params_mgr._records[c].payload is not None, (
                 f"owner rank {o} of chunk {c} has no payload")
+
+
+# ---------------------------------------------------------------------------
+# Rank-sharded serving fleet
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class FleetRoundMetrics:
+    """One lock-step serving round across all ranks (``None`` entries are
+    ranks that had nothing to do this round)."""
+
+    round_index: int
+    rank_metrics: list  # ServeRoundMetrics | None, indexed by rank
+
+    def _sum(self, field: str) -> int:
+        return sum(getattr(m, field) for m in self.rank_metrics
+                   if m is not None)
+
+    @property
+    def admitted(self) -> int:
+        return self._sum("admitted")
+
+    @property
+    def completed(self) -> int:
+        return self._sum("completed")
+
+    @property
+    def active(self) -> int:
+        return self._sum("active")
+
+    @property
+    def queued(self) -> int:
+        return self._sum("queued")
+
+    @property
+    def prefill_tokens(self) -> int:
+        return self._sum("prefill_tokens")
+
+    @property
+    def decode_tokens(self) -> int:
+        return self._sum("decode_tokens")
+
+    @property
+    def tokens(self) -> int:
+        return self.prefill_tokens + self.decode_tokens
+
+    @property
+    def peak_device_bytes(self) -> int:
+        """Worst per-rank pool device high-water mark this round — the
+        per-rank budget every rank must individually respect."""
+        return max((m.peak_device_bytes for m in self.rank_metrics
+                    if m is not None), default=0)
+
+
+class DistributedServingEngine:
+    """Rank-sharded serving: ``nproc`` independent serving cores advanced
+    in lock-step rounds, sequences placed round-robin at submit time.
+
+    This reuses :class:`DistributedPatrickStarEngine`'s driver shape —
+    one shared parameter init, rank 0's chunk layout reused by every
+    rank, per-rank pools, lock-step stepping — but where the trainer
+    shards *chunks* across ranks and gathers them on demand, the serving
+    fleet shards *sequences*: every rank holds a full read-only param
+    replica and its own sequences' KV pages, so scaling out multiplies
+    concurrent-sequence capacity at a fixed per-rank budget with ZERO
+    new collectives (asserted in :meth:`check_invariants` against each
+    rank's :class:`~repro.core.memory.CollectiveStats` ledger).  This is
+    the data-parallel production serving stack shape: paged admission +
+    continuous batching per rank, a stateless router in front.
+    """
+
+    def __init__(
+        self,
+        model_cls,
+        cfg,
+        *,
+        nproc: int,
+        device_memory_bytes: int,  # PER-RANK device budget
+        host_memory_bytes: int | None = None,
+        compiled: bool = False,
+        seed: int = 0,
+        **engine_kw,
+    ) -> None:
+        if nproc < 1:
+            raise ValueError(f"nproc must be >= 1, got {nproc}")
+        self.nproc = nproc
+        from repro.core.serving import ServingEngine
+        from repro.models.layers import AxisCtx
+
+        if compiled:
+            from repro.runtime.serve import CompiledServingEngine
+            engine_cls = CompiledServingEngine
+        else:
+            engine_cls = ServingEngine
+        # ONE init for all ranks: the fleet replicates parameters, so
+        # initializing nproc times would only burn time and transient
+        # memory (and rank 0's searched chunk size is reused so every
+        # rank's pool sees the identical layout).
+        init_params = model_cls(cfg, AxisCtx()).init_params(
+            jax.random.key(seed))
+
+        def make_core(csize):
+            return engine_cls(
+                model_cls, cfg,
+                device_memory_bytes=device_memory_bytes,
+                host_memory_bytes=host_memory_bytes,
+                chunk_size=csize, seed=seed, init_params=init_params,
+                **engine_kw)
+
+        rank0 = make_core(engine_kw.pop("chunk_size", None))
+        self.ranks = [rank0] + [make_core(rank0.cmap.chunk_size)
+                                for _ in range(1, nproc)]
+        self._placement: dict[int, tuple[int, int]] = {}  # gid -> (rank, rid)
+        self._next_gid = 0
+        self._rr = 0
+        self.rounds = 0
+
+    # --------------------------------------------------------------- intake
+    def submit(self, prompt, max_new_tokens: int = 16) -> int:
+        """Queue a request on the next rank round-robin; returns a fleet-
+        global id.  KV for the sequence lives only on that rank."""
+        rank = self._rr
+        self._rr = (self._rr + 1) % self.nproc
+        local = self.ranks[rank].submit(prompt, max_new_tokens)
+        gid = self._next_gid
+        self._next_gid += 1
+        self._placement[gid] = (rank, local)
+        return gid
+
+    # ------------------------------------------------------------------ run
+    def step_round(self) -> FleetRoundMetrics | None:
+        """Advance every rank one continuous-batching round in lock-step.
+        Returns ``None`` when the whole fleet is drained."""
+        ms = [core.step_round() for core in self.ranks]
+        if all(m is None for m in ms):
+            return None
+        self.rounds += 1
+        return FleetRoundMetrics(round_index=self.rounds - 1,
+                                 rank_metrics=ms)
+
+    def run(self, max_rounds: int = 10_000) -> list[FleetRoundMetrics]:
+        """Round until every submitted request has completed."""
+        out: list[FleetRoundMetrics] = []
+        while any(c.queued_count or c.active_count for c in self.ranks):
+            if len(out) >= max_rounds:
+                raise RuntimeError(
+                    f"fleet did not drain within {max_rounds} rounds")
+            m = self.step_round()
+            assert m is not None
+            out.append(m)
+        return out
+
+    # ------------------------------------------------------------- results
+    def result(self, gid: int) -> list[int]:
+        rank, rid = self._placement[gid]
+        return self.ranks[rank].result(rid)
+
+    @property
+    def active_count(self) -> int:
+        return sum(c.active_count for c in self.ranks)
+
+    @property
+    def queued_count(self) -> int:
+        return sum(c.queued_count for c in self.ranks)
+
+    @property
+    def peak_concurrency(self) -> int:
+        """Fleet-wide concurrent-sequence capacity actually reached: the
+        sum of per-rank high-water marks (ranks admit independently)."""
+        return sum(c.peak_concurrency for c in self.ranks)
+
+    @property
+    def total_decode_tokens(self) -> int:
+        return sum(c.total_decode_tokens for c in self.ranks)
+
+    @property
+    def total_prefill_tokens(self) -> int:
+        return sum(c.total_prefill_tokens for c in self.ranks)
+
+    def check_invariants(self) -> None:
+        for r, core in enumerate(self.ranks):
+            core.check_invariants()
+            col = core.pool.collectives
+            moved = (col.allgather_bytes + col.reduce_scatter_bytes
+                     + col.allreduce_bytes)
+            assert moved == 0, (
+                f"rank {r} booked {moved} collective bytes — serving KV "
+                f"and params must stay rank-local")

@@ -12,7 +12,7 @@ decode with BOTH kinds of serving state inside one
     optimizer state, the stem stays host-side exactly like training's
     Section 8.2 embedding rule);
   * **kv** — the first *dynamically populated* stream: every admitted
-    sequence owns one chunk per (block-group, layer) holding that
+    sequence owns one chunk per (block-group, layer, page) holding that
     layer's decode cache, mapped through
     :class:`~repro.core.chunk.DynamicChunkMap` when the request is
     admitted and unmapped when it completes.  A freshly mapped tensor is
@@ -20,6 +20,20 @@ decode with BOTH kinds of serving state inside one
     decode cache.  When the engine fully drains, the kv stream is
     unregistered from the pool and re-registered on the next admission
     (the act stream's rebuild path, now exercised mid-flight).
+
+**Paged KV** (``page_tokens=``): by default one kv chunk holds a
+sequence's *entire* decode horizon, so a sequence spills all-or-nothing
+and admission reasons in whole horizons.  With a page size the stream's
+unit becomes a vLLM-style position-block page — a sequence at position
+``p`` holds ``ceil(p / page_tokens)`` chunks per (group, layer), pages
+are appended as decode crosses page boundaries, and admission commits a
+request's TRUE page footprint at its final position instead of the
+whole-horizon template.  Partial spill falls out of the op plan: a
+decode visits a sequence's pages one at a time and releases every cold
+(non-tail) page HOLD immediately after copying it out, so only the hot
+tail page stays COMPUTE-pinned for the write-back — OPT eviction can
+keep cold pages on host and the device working set is
+pages-at-a-time, never the whole horizon.
 
 Cold sequences spill their KV chunks to host under cross-stream OPT
 eviction and are restaged by the :class:`~repro.core.memory.SchedulePrefetcher`
@@ -63,6 +77,7 @@ from repro.core.chunk import (
     TensorSpec,
     build_chunk_map,
     build_kv_chunk_map,
+    pages_for,
     search_chunk_size,
 )
 from repro.core.manager import ChunkManager
@@ -75,6 +90,18 @@ from repro.core.timeline import StepTimeline, TransferTimeline
 from repro.core.engine import _leaves_with_names
 from repro.models.api import Model
 from repro.models.layers import AxisCtx, greedy_token
+
+
+def swap_headroom_bytes(*stream_chunk_bytes: int) -> int:
+    """Admission swap margin, shared by every admission bound (eager and
+    compiled engines inherit the same helper so they can never drift):
+    with every tier packed exactly full no eviction can land anywhere
+    and paging deadlocks (the cascade-cycle OutOfMemory), so each bound
+    leaves room to swap the largest chunk among the streams it
+    co-schedules."""
+    if not stream_chunk_bytes:
+        raise ValueError("at least one stream's chunk size is required")
+    return max(int(b) for b in stream_chunk_bytes)
 
 
 @dataclasses.dataclass
@@ -131,6 +158,7 @@ class ServingEngine:
         chunk_size: int | None = None,
         max_seq_len: int = 128,
         manage_kv: bool = True,
+        page_tokens: int | None = None,
         prefetch: bool = True,
         prefetch_lookahead: int = 8,
         timeline: TransferTimeline | None = None,
@@ -145,6 +173,15 @@ class ServingEngine:
         self.model: Model = model_cls(cfg, self.ctx)
         self.max_seq_len = max_seq_len
         self.manage_kv = manage_kv
+        if page_tokens is not None:
+            page_tokens = int(page_tokens)
+            if page_tokens < 1:
+                raise ValueError(f"page_tokens must be >= 1, got {page_tokens}")
+            if not manage_kv:
+                raise ValueError(
+                    "paged KV requires the managed kv stream (manage_kv=True);"
+                    " the unmanaged baseline holds whole-horizon raw arrays")
+        self._page_tokens = page_tokens
         self.device_capacity = device_memory_bytes
         self.host_capacity = host_memory_bytes
         if cfg.arch_type in ("audio", "vlm"):
@@ -207,12 +244,15 @@ class ServingEngine:
             len(c) for c in self._layer_chunks.values()
         ) * self.params_mgr.chunk_bytes
 
-        # ---- KV layout: one (group, layer) cache per chunk --------------
-        # template = init_cache(1, max_seq_len) flattened; the chunk holds
+        # ---- KV layout: one (group, layer, page) cache per chunk --------
+        # template = init_cache(1, max_seq_len) flattened; a chunk holds
         # the leaves concatenated (k then v for attention; any cache
-        # pytree works — SSM states included).
+        # pytree works — SSM states included).  Unpaged, one page spans
+        # the horizon; paged, each chunk holds a page_tokens-wide slice
+        # of every leaf along its position axis.
         self._cache_tmpl: dict[str, Any] = {}
         self._batchable: dict[str, bool] = {}
+        self._page_axes: dict[str, list[int]] = {}
         max_numel = 1
         self._kv_seq_raw_bytes = 0  # actual (unaligned, true-dtype) bytes
         for g in self._decode_groups:
@@ -222,7 +262,32 @@ class ServingEngine:
             dtypes = [l.dtype for l in leaves]
             numels = [int(np.prod(s)) for s in shapes]
             self._cache_tmpl[g.name] = (treedef, shapes, dtypes, numels)
-            max_numel = max(max_numel, sum(numels))
+            if page_tokens is None:
+                max_numel = max(max_numel, sum(numels))
+            else:
+                # position axis per leaf: the one axis that grows by
+                # exactly 1 when the cache is built for one more position.
+                # Caches without such an axis on every leaf (position-
+                # independent SSM-style state) cannot page.
+                grown = [tuple(l.shape) for l in jax.tree_util.tree_leaves(
+                    g.init_cache(1, max_seq_len + 1))]
+                axes: list[int] = []
+                for sa, sb in zip(shapes, grown):
+                    diff = [ax for ax, (a, b) in enumerate(zip(sa, sb))
+                            if a != b]
+                    if (len(sa) != len(sb) or len(diff) != 1
+                            or sb[diff[0]] - sa[diff[0]] != 1):
+                        raise ValueError(
+                            f"group {g.name} has a cache leaf without a "
+                            f"clean position axis ({sa} vs {sb} for one "
+                            f"extra position); this arch cannot serve "
+                            f"with paged KV")
+                    axes.append(diff[0])
+                self._page_axes[g.name] = axes
+                width = min(page_tokens, max_seq_len)
+                page_numel = sum((n // s[ax]) * width
+                                 for s, n, ax in zip(shapes, numels, axes))
+                max_numel = max(max_numel, page_numel)
             # batched decode packs sequences along the cache's leading
             # axis; only safe when every leaf of the one-sequence template
             # leads with the batch dim (size 1).  Archs that stack other
@@ -242,14 +307,22 @@ class ServingEngine:
             # independent per-sequence lanes, so it batches *calls*
             # without ever batching routing.
             self._batchable = {k: False for k in self._batchable}
-        self._kv_chunk_elems = build_kv_chunk_map(max_numel).chunk_size
+        self._kv_chunk_elems = build_kv_chunk_map(
+            max_numel, page_tokens=page_tokens).chunk_size
         self.kv_chunk_bytes = self._kv_chunk_elems * 4  # fp32 payloads
         self._total_layers = sum(g.length for g in self._decode_groups)
-        # one sequence's whole managed KV footprint
-        self.kv_seq_bytes = self._total_layers * self.kv_chunk_bytes
+        self._flat_layer: dict[tuple[str, int], int] = {}
+        for g in self._decode_groups:
+            for i in range(g.length):
+                self._flat_layer[(g.name, i)] = len(self._flat_layer)
+        # one sequence's whole managed KV footprint at the full horizon
+        self._pages_per_seq = pages_for(max_seq_len, page_tokens)
+        self.kv_seq_bytes = (self._pages_per_seq * self._total_layers
+                             * self.kv_chunk_bytes)
 
         floor = self._param_floor_bytes + (
-            2 * self.kv_chunk_bytes if manage_kv else 0)
+            self.kv_chunk_bytes + swap_headroom_bytes(self.kv_chunk_bytes)
+            if manage_kv else 0)
         if device_memory_bytes < floor:
             raise ValueError(
                 f"device budget {device_memory_bytes} below the serving "
@@ -279,7 +352,8 @@ class ServingEngine:
         # identically — chunk management must never change a token.
         if max_decode_batch is None:
             fit = (device_memory_bytes - self._param_floor_bytes
-                   ) // max(self.kv_chunk_bytes, 1) - 1
+                   - swap_headroom_bytes(self.kv_chunk_bytes)
+                   ) // max(self.kv_chunk_bytes, 1)
             max_decode_batch = max(1, min(8, int(fit)))
         self.max_decode_batch = max(1, int(max_decode_batch))
         # batched prefill: an admission cohort (same prompt length) packs
@@ -294,6 +368,8 @@ class ServingEngine:
 
         self._queue: deque[ServeRequest] = deque()
         self._active: list[ServeRequest] = []
+        self._req_pages: dict[int, int] = {}  # rid -> mapped pages/(g,layer)
+        self._page_layout_cache: dict[tuple[str, int], list] = {}
         self._done: dict[int, ServeRequest] = {}
         self._next_rid = 0
         self._moment = 0
@@ -318,7 +394,9 @@ class ServingEngine:
             raise ValueError(
                 f"prompt {prompt.size} + {max_new_tokens} new tokens "
                 f"exceeds max_seq_len {self.max_seq_len}")
-        if not self._admissible(0):
+        probe = ServeRequest(rid=-1, prompt=prompt,
+                             max_new_tokens=max_new_tokens)
+        if not self._admissible(0, probe):
             raise ValueError(
                 "request can never be admitted: one sequence's KV plus the "
                 "param working set exceeds the configured budgets")
@@ -328,22 +406,39 @@ class ServingEngine:
             rid=rid, prompt=prompt, max_new_tokens=max_new_tokens))
         return rid
 
-    def _admissible(self, n_active: int) -> bool:
-        """Can the pool hold the param working set plus ``n_active + 1``
-        sequences' KV?  Managed KV may spill to host, so the bound is the
-        two-tier total; unmanaged KV is device-resident raw arrays, so
-        the device budget alone decides."""
+    def _pages_for(self, positions: int) -> int:
+        """Pages a sequence holding ``positions`` cache positions needs
+        per (group, layer) — 1 always on an unpaged stream."""
+        return pages_for(positions, self._page_tokens)
+
+    def _kv_commit_bytes(self, req: ServeRequest) -> int:
+        """One request's full-lifetime managed KV footprint: the pages
+        that will exist at its final decode position (the last generated
+        token is never fed back), per (group, layer).  Unpaged this is
+        exactly the whole-horizon template ``kv_seq_bytes``; paged it is
+        the request's TRUE page count — the admission win."""
+        pages = self._pages_for(int(req.prompt.size) + req.max_new_tokens - 1)
+        return pages * self._total_layers * self.kv_chunk_bytes
+
+    def _admissible(self, n_active: int,
+                    req: ServeRequest | None = None) -> bool:
+        """Can the pool hold the param working set plus the running KV
+        commitment and one more sequence's (``req``'s when given, the
+        full-horizon template otherwise)?  Managed KV may spill to host,
+        so the bound is the two-tier total; unmanaged KV is
+        device-resident raw arrays, so the device budget alone decides.
+        Paged streams reason in pages: each request commits only the
+        chunks it will actually hold at its final position."""
         if self.manage_kv:
             if self.host_capacity is None:
                 return True  # unbounded host tier
-            # swap headroom: with both tiers packed exactly full no
-            # eviction can land anywhere and paging deadlocks (the
-            # cascade-cycle OutOfMemory), so admission must leave room
-            # to swap the largest chunk of ANY stream — at long horizons
-            # a kv chunk can outgrow a param chunk.
-            headroom = max(self.params_mgr.chunk_bytes, self.kv_chunk_bytes)
-            need = (self._param_stream_bytes + headroom
-                    + (n_active + 1) * self.kv_seq_bytes)
+            headroom = swap_headroom_bytes(
+                self.params_mgr.chunk_bytes, self.kv_chunk_bytes)
+            active_kv = sum(self._kv_commit_bytes(r)
+                            for r in self._active) if n_active else 0
+            cand = (self._kv_commit_bytes(req) if req is not None
+                    else self.kv_seq_bytes)
+            need = self._param_stream_bytes + headroom + active_kv + cand
             return need <= self.device_capacity + self.host_capacity
         need = (self._param_floor_bytes
                 + (n_active + 1) * self._kv_seq_raw_bytes)
@@ -351,7 +446,8 @@ class ServingEngine:
 
     def _admit(self) -> list[ServeRequest]:
         newly: list[ServeRequest] = []
-        while self._queue and self._admissible(len(self._active)):
+        while self._queue and self._admissible(len(self._active),
+                                               self._queue[0]):
             req = self._queue.popleft()
             req.state = "active"
             if self.manage_kv:
@@ -365,14 +461,40 @@ class ServingEngine:
         return newly
 
     def _map_request_kv(self, req: ServeRequest) -> None:
-        """Map one admitted request's per-(group, layer) kv tensors.
-        The compiled engine overrides this to bind the request's chunks
-        to its padded batch slot's fixed chunk-id range."""
+        """Map one admitted request's kv pages: enough pages per (group,
+        layer) to cover the prompt; decode appends further pages as the
+        position crosses page boundaries (:meth:`_ensure_pages`).  The
+        compiled engine overrides this to bind the request's pages to its
+        padded batch slot's fixed chunk-id range."""
+        pages = self._pages_for(int(req.prompt.size))
+        self._req_pages[req.rid] = pages
         for g in self._decode_groups:
             for i in range(g.length):
-                self.kv_mgr.add_tensor(
-                    self._kv_name(req.rid, g.name, i),
-                    (self._kv_chunk_elems,))
+                for p in range(pages):
+                    self._map_page(req.rid, g.name, i, p)
+
+    def _map_page(self, rid: int, gname: str, layer: int, page: int) -> None:
+        """Map a single kv page chunk (the compiled engine overrides this
+        to pin the page into its slot's reserved id range)."""
+        self.kv_mgr.add_tensor(
+            self._kv_name(rid, gname, layer, page), (self._kv_chunk_elems,))
+
+    def _ensure_pages(self, req: ServeRequest) -> None:
+        """Decode writes position ``req.pos`` this round: append page
+        chunks (zero-filled on first access, like any fresh cache)
+        whenever the write crosses a page boundary.  Unpaged streams
+        always hold exactly one page, so this is a no-op for them."""
+        if not self.manage_kv:
+            return
+        need = self._pages_for(req.pos + 1)
+        have = self._req_pages[req.rid]
+        if need <= have:
+            return
+        for g in self._decode_groups:
+            for i in range(g.length):
+                for p in range(have, need):
+                    self._map_page(req.rid, g.name, i, p)
+        self._req_pages[req.rid] = need
 
     def _ensure_kv_stream(self) -> None:
         """(Re)register the kv stream — dropped whenever the engine fully
@@ -381,12 +503,13 @@ class ServingEngine:
         rebuild."""
         if self.kv_mgr is None:
             self.kv_mgr = ChunkManager(
-                build_kv_chunk_map(self._kv_chunk_elems), dtype=np.float32,
-                name="kv", pool=self.pool)
+                build_kv_chunk_map(self._kv_chunk_elems,
+                                   page_tokens=self._page_tokens),
+                dtype=np.float32, name="kv", pool=self.pool)
 
     @staticmethod
-    def _kv_name(rid: int, gname: str, layer: int) -> str:
-        return f"kv.{rid}.{gname}.{layer}"
+    def _kv_name(rid: int, gname: str, layer: int, page: int = 0) -> str:
+        return f"kv.{rid}.{gname}.{layer}.{page}"
 
     # ------------------------------------------------------------- schedule
     def _prefill_batchable(self) -> bool:
@@ -423,8 +546,11 @@ class ServingEngine:
         alongside the ops so the transfer timeline's per-moment schedule
         can never drift from the execution order.  A prefill param op
         carries the layer's prefill compute over the cohort's prompts;
-        decode compute rides each sequence's kv op (or the param op
-        itself when KV is unmanaged)."""
+        decode compute rides each sequence's tail-page kv op (or the
+        param op itself when KV is unmanaged).  Paged sequences emit one
+        kv op per mapped page — the plan IS the partial-spill policy:
+        every page is referenced in visit order, cold pages released as
+        soon as they are copied out."""
         ops: list[tuple[tuple, float]] = []
         for cohort in cohorts:
             pre = self._serve_costs(
@@ -434,7 +560,9 @@ class ServingEngine:
                     ops.append((("param", g.name, i), pre))
                     if self.manage_kv:
                         for req in cohort:
-                            ops.append((("kv", req.rid, g.name, i), 0.0))
+                            for p in range(self._req_pages[req.rid]):
+                                ops.append(
+                                    (("kv", req.rid, g.name, i, p), 0.0))
         if decode_reqs:
             dec = self._serve_costs(1).decode_layer_s
             for g in self._decode_groups:
@@ -444,7 +572,10 @@ class ServingEngine:
                                 else dec * len(decode_reqs)))
                     if self.manage_kv:
                         for req in decode_reqs:
-                            ops.append((("kv", req.rid, g.name, i), dec))
+                            pages = self._req_pages[req.rid]
+                            for p in range(pages):
+                                ops.append((("kv", req.rid, g.name, i, p),
+                                            dec if p == pages - 1 else 0.0))
         return ops
 
     def _serve_costs(self, prompt_tokens: int):
@@ -483,7 +614,7 @@ class ServingEngine:
                     refs.append((m + k, "param", cid))
             else:
                 cid = self.kv_mgr.cmap.placement(
-                    self._kv_name(op[1], op[2], op[3])).chunk_id
+                    self._kv_name(op[1], op[2], op[3], op[4])).chunk_id
                 kv_sched.setdefault(cid, []).append(m + k)
                 refs.append((m + k, "kv", cid))
             if k < len(ops):
@@ -524,41 +655,114 @@ class ServingEngine:
             pads.append((0, b - a))
         return np.pad(arr, pads)
 
-    def _store_cache(self, rid: int, gname: str, layer: int, cache) -> None:
-        """Write a layer cache into its kv chunk and release it HOLD.
-        Works both for the first (prefill) write — the FREE access
-        zero-fills, then prefill leaves are padded to the decode-horizon
-        template, matching the slot layout decode expects — and for the
-        COMPUTE write-back after a decode step."""
-        name = self._kv_name(rid, gname, layer)
+    def _page_layout(self, gname: str, page: int):
+        """Per-leaf layout of one page chunk: ``(slice_tuple, local_shape,
+        offset, numel)`` where ``slice_tuple`` cuts the page's position
+        window out of the full-horizon template leaf and ``offset``/
+        ``numel`` locate its flattened payload inside the chunk.  Unpaged
+        (page 0 spans the horizon) this degenerates to the whole-chunk
+        concatenation layout."""
+        key = (gname, page)
+        out = self._page_layout_cache.get(key)
+        if out is not None:
+            return out
+        _, shapes, _, numels = self._cache_tmpl[gname]
+        out = []
+        off = 0
+        if self._page_tokens is None:
+            for s, n in zip(shapes, numels):
+                out.append((tuple(slice(None) for _ in s), s, off, n))
+                off += n
+        else:
+            lo = page * self._page_tokens
+            hi = min(lo + self._page_tokens, self.max_seq_len)
+            for s, ax in zip(shapes, self._page_axes[gname]):
+                local = tuple(hi - lo if j == ax else d
+                              for j, d in enumerate(s))
+                sl = tuple(slice(lo, hi) if j == ax else slice(None)
+                           for j in range(len(s)))
+                n = int(np.prod(local))
+                out.append((sl, local, off, n))
+                off += n
+        self._page_layout_cache[key] = out
+        return out
+
+    def _store_prefill_cache(self, rid: int, gname: str, layer: int,
+                             cache) -> None:
+        """Write a freshly prefilled layer cache into the request's page
+        chunks — one planned op per page; the FREE access zero-fills,
+        then prefill leaves are padded to the decode-horizon template so
+        every page slices cleanly, matching the layout decode expects."""
+        _, shapes, _, _ = self._cache_tmpl[gname]
+        leaves = [self._pad_to_tmpl(np.asarray(l, np.float32), ts)
+                  for l, ts in zip(jax.tree_util.tree_leaves(cache), shapes)]
+        for p in range(self._req_pages[rid]):
+            self._begin_op(("kv", rid, gname, layer, p))
+            name = self._kv_name(rid, gname, layer, p)
+            view = self.kv_mgr.access_tensor(name, "device")
+            for leaf, (sl, _local, off, n) in zip(
+                    leaves, self._page_layout(gname, p)):
+                view[off:off + n] = leaf[sl].reshape(-1)
+            self.kv_mgr.release_tensor(name, TensorState.HOLD)
+
+    def _store_decode_cache(self, rid: int, gname: str, layer: int,
+                            cache) -> None:
+        """Write back after a decode step.  Decode writes exactly one new
+        position, which by construction lives on the tail page — so only
+        the tail (still COMPUTE from the load) is rewritten; cold pages
+        were already released and may have spilled meanwhile."""
+        tail = self._req_pages[rid] - 1
+        name = self._kv_name(rid, gname, layer, tail)
         if self.kv_mgr.tensor_state(name) is TensorState.COMPUTE:
             view = self.kv_mgr.tensor_view(name)
         else:
             view = self.kv_mgr.access_tensor(name, "device")
-        _, shapes, _, numels = self._cache_tmpl[gname]
+        _, shapes, _, _ = self._cache_tmpl[gname]
         leaves = jax.tree_util.tree_leaves(cache)
-        off = 0
-        for leaf, tshape, n in zip(leaves, shapes, numels):
+        for leaf, tshape, (sl, _local, off, n) in zip(
+                leaves, shapes, self._page_layout(gname, tail)):
             arr = self._pad_to_tmpl(np.asarray(leaf, np.float32), tshape)
-            view[off:off + n] = arr.reshape(-1)
-            off += n
+            view[off:off + n] = arr[sl].reshape(-1)
         self.kv_mgr.release_tensor(name, TensorState.HOLD)
 
     def _load_cache(self, rid: int, gname: str, layer: int):
-        """Bring the kv chunk on-device (COMPUTE — unevictable while the
-        decode op runs) and rebuild the layer cache pytree.  Leaves are
-        COPIED out of the payload: the store after the op overwrites it
-        in place."""
-        name = self._kv_name(rid, gname, layer)
-        view = self.kv_mgr.access_tensor(name, "device")
+        """Visit the request's page chunks in order and rebuild the
+        full-horizon layer cache pytree.  Cold (non-tail) pages are
+        COPIED out and released HOLD immediately — evictable again before
+        the decode op even runs — while the hot tail page stays COMPUTE
+        for the in-place write-back.  This is the partial-spill policy:
+        the device-pinned working set is one page per (sequence, layer),
+        never the whole horizon."""
         treedef, shapes, dtypes, numels = self._cache_tmpl[gname]
-        leaves = []
-        off = 0
-        for shape, dtype, n in zip(shapes, dtypes, numels):
-            leaves.append(jnp.asarray(
-                np.array(view[off:off + n], copy=True).reshape(shape)
-            ).astype(dtype))
-            off += n
+        pages = self._req_pages[rid]
+        if pages == 1:
+            # single page spans the horizon: the historical whole-chunk
+            # path (no intermediate full-buffer assembly)
+            self._begin_op(("kv", rid, gname, layer, 0))
+            view = self.kv_mgr.access_tensor(
+                self._kv_name(rid, gname, layer, 0), "device")
+            leaves = []
+            off = 0
+            for shape, dtype, n in zip(shapes, dtypes, numels):
+                leaves.append(jnp.asarray(
+                    np.array(view[off:off + n], copy=True).reshape(shape)
+                ).astype(dtype))
+                off += n
+            return jax.tree_util.tree_unflatten(treedef, leaves)
+        fulls = [np.zeros(s, np.float32) for s in shapes]
+        for p in range(pages):
+            self._begin_op(("kv", rid, gname, layer, p))
+            name = self._kv_name(rid, gname, layer, p)
+            view = self.kv_mgr.access_tensor(name, "device")
+            for full, (sl, local, off, n) in zip(
+                    fulls, self._page_layout(gname, p)):
+                full[sl] = view[off:off + n].reshape(local)
+            if p < pages - 1:
+                self.kv_mgr.release_tensor(name, TensorState.HOLD)
+        # positions beyond the mapped pages stay zero — exactly the
+        # zero-filled bytes an unpaged chunk would hold there
+        leaves = [jnp.asarray(f).astype(dt)
+                  for f, dt in zip(fulls, dtypes)]
         return jax.tree_util.tree_unflatten(treedef, leaves)
 
     def _raw_cache(self, rid: int, gname: str, layer: int):
@@ -616,8 +820,7 @@ class ServingEngine:
                     cj = cache if k == 1 else jax.tree.map(
                         lambda t, _j=j: t[_j:_j + 1], cache)
                     if self.manage_kv:
-                        self._begin_op(("kv", req.rid, g.name, i))
-                        self._store_cache(req.rid, g.name, i, cj)
+                        self._store_prefill_cache(req.rid, g.name, i, cj)
                     else:
                         self._raw_store(req.rid, g.name, i, cj)
         logits = self.model.head_logits(stem, x[:, -1:, :])
@@ -674,7 +877,6 @@ class ServingEngine:
                         # request, one kv chunk COMPUTE-pinned at a time
                         for req in batch:
                             if self.manage_kv:
-                                self._begin_op(("kv", req.rid, g.name, i))
                                 cache = self._load_cache(req.rid, g.name, i)
                             else:
                                 cache = self._raw_cache(req.rid, g.name, i)
@@ -683,7 +885,8 @@ class ServingEngine:
                                              jnp.int32(req.pos), st[1],
                                              self.ctx)
                             if self.manage_kv:
-                                self._store_cache(req.rid, g.name, i, c2)
+                                self._store_decode_cache(
+                                    req.rid, g.name, i, c2)
                             else:
                                 self._raw_kv[(req.rid, g.name, i)] = c2
                             st[0] = y
@@ -691,7 +894,6 @@ class ServingEngine:
                     caches = []
                     for req in batch:
                         if self.manage_kv:
-                            self._begin_op(("kv", req.rid, g.name, i))
                             caches.append(self._load_cache(req.rid, g.name, i))
                         else:
                             caches.append(self._raw_cache(req.rid, g.name, i))
@@ -704,7 +906,7 @@ class ServingEngine:
                     for j, req in enumerate(batch):
                         cj = jax.tree.map(lambda t, _j=j: t[_j:_j + 1], c2)
                         if self.manage_kv:
-                            self._store_cache(req.rid, g.name, i, cj)
+                            self._store_decode_cache(req.rid, g.name, i, cj)
                         else:
                             self._raw_kv[(req.rid, g.name, i)] = cj
                         xs[req.rid][0] = y[j:j + 1]
@@ -724,10 +926,12 @@ class ServingEngine:
             self._active.remove(req)
             self._done[req.rid] = req
             if self.manage_kv:
+                pages = self._req_pages.pop(req.rid)
                 for g in self._decode_groups:
                     for i in range(g.length):
-                        self.kv_mgr.remove_tensor(
-                            self._kv_name(req.rid, g.name, i))
+                        for p in range(pages):
+                            self.kv_mgr.remove_tensor(
+                                self._kv_name(req.rid, g.name, i, p))
             else:
                 for g in self._decode_groups:
                     for i in range(g.length):
@@ -761,6 +965,11 @@ class ServingEngine:
         batches = self._decode_batches(
             [r for r in self._active if r.rid not in newly_ids])
         decode_reqs = [r for b in batches for r in b]
+        # page append happens BEFORE planning: the plan references every
+        # page the round will touch, including ones decode creates by
+        # writing across a page boundary this round
+        for req in decode_reqs:
+            self._ensure_pages(req)
         self._plan_round(cohorts, decode_reqs)
         self._execute_round(cohorts, batches)
         completed = self._retire_finished()
@@ -831,7 +1040,8 @@ class ServingEngine:
     def check_invariants(self) -> None:
         self.pool.check_invariants()
         if self.kv_mgr is not None:
-            expect = len(self._active) * self._total_layers
+            expect = sum(self._req_pages[r.rid]
+                         for r in self._active) * self._total_layers
             assert self.kv_mgr.cmap.num_payload_chunks == expect, (
                 self.kv_mgr.cmap.num_payload_chunks, expect)
         assert self.device_bytes_in_use() <= self.device_capacity, (

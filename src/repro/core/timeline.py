@@ -149,6 +149,17 @@ class TransferTimeline:
         self._pending: dict[Hashable, tuple[str, float, str]] = {}
         self._step = StepTimeline()
 
+    @classmethod
+    def calibrated(cls) -> "TransferTimeline":
+        """Timeline with bandwidths derived from the roofline hardware
+        constants instead of ad-hoc test scales: H2D/D2H ride the
+        PCIe-class host link, collectives the ICI ring — so simulated
+        stalls come out in absolute Fig. 16-style seconds."""
+        from repro.analysis.roofline import HOST_LINK_BW, ICI_BW
+
+        return cls(h2d_bandwidth=HOST_LINK_BW, d2h_bandwidth=HOST_LINK_BW,
+                   collective_bandwidth=ICI_BW)
+
     # ------------------------------------------------------------- durations
     @property
     def has_durations(self) -> bool:

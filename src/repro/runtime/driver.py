@@ -305,6 +305,25 @@ def build_round_prefill_step(rt: ChunkedRuntime, cohort: int, prompt_len: int):
     return jax.jit(f)
 
 
+def slot_page_range(slot: int, total_layers: int,
+                    pages_per_slot: int) -> range:
+    """Chunk-id range padded batch slot ``slot`` pins its kv pages into:
+    ``pages_per_slot`` ids per flattened layer, slots laid out
+    contiguously.  With one page per slot (unpaged horizon) this is the
+    historical ``[slot*total_layers, (slot+1)*total_layers)`` binding."""
+    w = total_layers * pages_per_slot
+    return range(slot * w, (slot + 1) * w)
+
+
+def slot_page_chunk_id(slot: int, total_layers: int, pages_per_slot: int,
+                       flat_layer: int, page: int) -> int:
+    """Chunk id of one (slot, layer, page) kv tensor inside
+    :func:`slot_page_range` — layer-major, page-minor, so a layer's pages
+    are contiguous."""
+    return (slot * total_layers * pages_per_slot
+            + flat_layer * pages_per_slot + page)
+
+
 # ---------------------------------------------------------------------------
 # state init (for real runs — examples / integration tests)
 # ---------------------------------------------------------------------------

@@ -21,10 +21,15 @@ persistent jax arrays with leaves ``[tp, L, S_slots, ...per-seq...]``
 grows in powers of two and never shrinks, so the round decode step
 recompiles only when the concurrency high-water mark crosses a power of
 two — membership changes within a padded shape NEVER recompile.  Slot
-``s`` also pins its kv tensors to the fixed chunk-id range
-``[s*total_layers, (s+1)*total_layers)`` (stable slot<->chunk binding,
-:meth:`~repro.core.chunk.DynamicChunkMap.add_tensor` with explicit ids),
-so re-binding a slot to a new sequence reuses the same chunks.
+``s`` also pins its kv pages to the fixed chunk-id range
+:func:`~repro.runtime.driver.slot_page_range` — ``pages_per_slot`` ids
+per flattened layer; with the unpaged whole-horizon stream this is the
+historical ``[s*total_layers, (s+1)*total_layers)`` binding — and the
+range is *reserved* in the :class:`~repro.core.chunk.DynamicChunkMap`
+at bind time, so a paged sequence's late-appended pages land on their
+precomputed ids and default allocation can never collide with a live
+slot's range.  Re-binding a slot to a new sequence reuses the same
+chunks.
 
 Round ordering
 --------------
@@ -135,19 +140,28 @@ class CompiledServingEngine(ServingEngine):
         return len(self._slots) - 1
 
     def _map_request_kv(self, req: ServeRequest) -> None:
-        """Bind the request to the lowest free slot and pin its kv chunks
-        to the slot's fixed id range — admission churn re-walks the same
-        chunk ids, so nothing about the pool layout (or any compiled
-        shape) depends on WHICH sequences are live."""
+        """Bind the request to the lowest free slot and reserve the
+        slot's page-id range — every page the sequence will ever map
+        (prompt pages now, decode-appended pages later) lands at its
+        precomputed id, so admission churn re-walks the same chunk ids
+        and nothing about the pool layout (or any compiled shape)
+        depends on WHICH sequences are live."""
+        from repro.runtime import driver
+
         slot = self._bind_slot(req.rid)
-        base = slot * self._total_layers
-        j = 0
-        for g in self._decode_groups:
-            for i in range(g.length):
-                self.kv_mgr.add_tensor(
-                    self._kv_name(req.rid, g.name, i),
-                    (self._kv_chunk_elems,), chunk_id=base + j)
-                j += 1
+        self.kv_mgr.cmap.reserve_ids(driver.slot_page_range(
+            slot, self._total_layers, self._pages_per_seq))
+        super()._map_request_kv(req)
+
+    def _map_page(self, rid: int, gname: str, layer: int, page: int) -> None:
+        from repro.runtime import driver
+
+        cid = driver.slot_page_chunk_id(
+            self._slot_of[rid], self._total_layers, self._pages_per_seq,
+            self._flat_layer[(gname, layer)], page)
+        self.kv_mgr.add_tensor(
+            self._kv_name(rid, gname, layer, page),
+            (self._kv_chunk_elems,), chunk_id=cid)
 
     def _retire_finished(self) -> int:
         done = [r.rid for r in self._active
@@ -259,10 +273,12 @@ class CompiledServingEngine(ServingEngine):
                         self.params_mgr.access_tensor(n, "device")
                     self._release_layer(names)
                     for req in cohort:
-                        name = self._kv_name(req.rid, g.name, i)
-                        self._begin_op(("kv", req.rid, g.name, i))
-                        self.kv_mgr.access_tensor(name, "device")
-                        self.kv_mgr.release_tensor(name, TensorState.HOLD)
+                        for p in range(self._req_pages[req.rid]):
+                            name = self._kv_name(req.rid, g.name, i, p)
+                            self._begin_op(("kv", req.rid, g.name, i, p))
+                            self.kv_mgr.access_tensor(name, "device")
+                            self.kv_mgr.release_tensor(
+                                name, TensorState.HOLD)
         if decode_reqs:
             for g in self._decode_groups:
                 for i in range(g.length):
@@ -273,10 +289,12 @@ class CompiledServingEngine(ServingEngine):
                     # params stay COMPUTE-pinned while the kv chunks
                     # cycle under them, exactly like the eager sweep
                     for req in decode_reqs:
-                        name = self._kv_name(req.rid, g.name, i)
-                        self._begin_op(("kv", req.rid, g.name, i))
-                        self.kv_mgr.access_tensor(name, "device")
-                        self.kv_mgr.release_tensor(name, TensorState.HOLD)
+                        for p in range(self._req_pages[req.rid]):
+                            name = self._kv_name(req.rid, g.name, i, p)
+                            self._begin_op(("kv", req.rid, g.name, i, p))
+                            self.kv_mgr.access_tensor(name, "device")
+                            self.kv_mgr.release_tensor(
+                                name, TensorState.HOLD)
                     self._release_layer(names)
 
     # ----------------------------------------------------------- the round

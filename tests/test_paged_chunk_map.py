@@ -1,0 +1,183 @@
+"""Paged ``DynamicChunkMap``: page math, slot-range id reservation, and
+free-list recycling under admission/retirement churn.
+
+The property test models the compiled serving plane's traffic shape:
+"slots" reserve fixed page-id ranges and pin their page tensors into
+them with explicit ids, while "background" tensors use default
+allocation — the invariant under any interleaving is that default
+allocation and recycling NEVER hand out an id inside a live (or even
+retired) slot's reserved range.  Runs under hypothesis when installed
+(CI), and always as a seeded-random driver.
+"""
+
+import itertools
+import random
+
+import pytest
+
+from repro.core.chunk import (
+    ChunkMapError,
+    DynamicChunkMap,
+    TensorSpec,
+    build_kv_chunk_map,
+    pages_for,
+)
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # container without dev extras: seeded driver only
+    HAVE_HYPOTHESIS = False
+
+
+LAYERS = 2
+PAGES_PER_SLOT = 3
+SLOT_W = LAYERS * PAGES_PER_SLOT
+
+
+def test_pages_for_math():
+    dm = DynamicChunkMap(64, page_tokens=8)
+    assert dm.pages_for(0) == 1  # a sequence always holds >= 1 page
+    assert dm.pages_for(1) == 1
+    assert dm.pages_for(8) == 1
+    assert dm.pages_for(9) == 2
+    assert dm.pages_for(64) == 8
+    unpaged = DynamicChunkMap(64)
+    assert unpaged.pages_for(10_000) == 1
+    assert pages_for(17, 8) == 3
+    assert pages_for(17, None) == 1
+    assert build_kv_chunk_map(100, page_tokens=4).page_tokens == 4
+    with pytest.raises(ChunkMapError):
+        DynamicChunkMap(64, page_tokens=0)
+
+
+def test_reserved_ids_interop_with_default_allocation():
+    dm = DynamicChunkMap(16, page_tokens=4)
+    dm.reserve_ids(range(0, 6))
+    dm.reserve_ids([2, 3])  # idempotent
+    # default allocation skips the reserved range entirely
+    assert dm.add_tensor(TensorSpec("a", (8,))).chunk_id == 6
+    # explicit pin binds into it
+    assert dm.add_tensor(TensorSpec("s0.p0", (8,)), chunk_id=0).chunk_id == 0
+    # a freed reserved id is NOT recycled to default allocation ...
+    dm.remove_tensor("s0.p0")
+    assert dm.add_tensor(TensorSpec("b", (8,))).chunk_id == 7
+    # ... but an explicit re-pin reuses it
+    assert dm.add_tensor(TensorSpec("s0.p0b", (8,)), chunk_id=0).chunk_id == 0
+    # a live chunk cannot be reserved
+    with pytest.raises(ChunkMapError):
+        dm.reserve_ids([6])
+    with pytest.raises(ChunkMapError):
+        dm.reserve_ids([-1])
+    # freed unreserved ids still recycle LIFO as before
+    dm.remove_tensor("b")
+    assert dm.add_tensor(TensorSpec("c", (8,))).chunk_id == 7
+
+
+def test_explicit_pin_above_reserved_high_water():
+    dm = DynamicChunkMap(16)
+    dm.reserve_ids([1, 3])
+    # explicit bind past the high-water mark frees the gap EXCEPT the
+    # reserved ids inside it
+    dm.add_tensor(TensorSpec("x", (4,)), chunk_id=4)
+    assert dm.num_chunks == 5
+    got = {dm.add_tensor(TensorSpec(f"d{i}", (4,))).chunk_id
+           for i in range(3)}
+    assert got == {0, 2, 5}  # 1 and 3 stayed reserved
+
+
+def _run_trace(choices):
+    """Deterministic churn driven by a list of ints: admit slots (reserve
+    range + pin prompt pages), append pages, retire slots, and allocate/
+    free background tensors, checking invariants after every step."""
+    dm = DynamicChunkMap(32, page_tokens=4)
+    live = {}  # slot -> (list[name], pages)
+    background = []  # names with default-allocated ids
+    reserved_slots = set()  # every slot that EVER reserved its range
+    serial = itertools.count()
+
+    def check():
+        for slot, (names, _pages) in live.items():
+            lo, hi = slot * SLOT_W, (slot + 1) * SLOT_W
+            for nm in names:
+                cid = dm.placement(nm).chunk_id
+                assert lo <= cid < hi, (nm, cid, slot)
+        for nm in background:
+            cid = dm.placement(nm).chunk_id
+            for slot in reserved_slots:
+                assert not (slot * SLOT_W <= cid < (slot + 1) * SLOT_W), (
+                    f"default allocation handed out {cid} inside slot "
+                    f"{slot}'s reserved range")
+        expect = (sum(len(ns) for ns, _ in live.values()) + len(background))
+        assert dm.num_payload_chunks == expect
+
+    for c in choices:
+        kind = c % 4
+        if kind == 0 or not (live or background):
+            # admit: lowest free slot whose range holds no live chunk
+            # (reserving over a live default-allocated chunk is a
+            # ChunkMapError by design — the engine reserves a slot's
+            # range before anything else can squat on it, so the trace
+            # models the same discipline)
+            bg_ids = {dm.placement(nm).chunk_id for nm in background}
+            slot = next(
+                s for s in itertools.count()
+                if s not in live and not any(
+                    s * SLOT_W <= cid < (s + 1) * SLOT_W for cid in bg_ids))
+            dm.reserve_ids(range(slot * SLOT_W, (slot + 1) * SLOT_W))
+            reserved_slots.add(slot)
+            pages = 1 + (c // 4) % PAGES_PER_SLOT
+            names = []
+            for j in range(LAYERS):
+                for p in range(pages):
+                    nm = f"kv.{next(serial)}.{slot}.{j}.{p}"
+                    pl = dm.add_tensor(
+                        TensorSpec(nm, (16,)),
+                        chunk_id=slot * SLOT_W + j * PAGES_PER_SLOT + p)
+                    assert pl.chunk_id in range(slot * SLOT_W,
+                                                (slot + 1) * SLOT_W)
+                    names.append(nm)
+            live[slot] = (names, pages)
+        elif kind == 1 and live:
+            # append one page to a slot that has room
+            grow = [s for s, (_, p) in live.items() if p < PAGES_PER_SLOT]
+            if grow:
+                slot = grow[c // 4 % len(grow)]
+                names, pages = live[slot]
+                for j in range(LAYERS):
+                    nm = f"kv.{next(serial)}.{slot}.{j}.{pages}"
+                    dm.add_tensor(
+                        TensorSpec(nm, (16,)),
+                        chunk_id=slot * SLOT_W + j * PAGES_PER_SLOT + pages)
+                    names.append(nm)
+                live[slot] = (names, pages + 1)
+        elif kind == 2 and live:
+            # retire a slot: remove every page (ids stay reserved)
+            slot = sorted(live)[c // 4 % len(live)]
+            names, _ = live.pop(slot)
+            for nm in names:
+                dm.remove_tensor(nm)
+        else:
+            # background churn through the default allocator
+            if background and (c // 4) % 2:
+                dm.remove_tensor(background.pop(c // 8 % len(background)))
+            else:
+                nm = f"bg.{next(serial)}"
+                dm.add_tensor(TensorSpec(nm, (16,)))
+                background.append(nm)
+        check()
+
+
+def test_paged_map_seeded_churn():
+    for seed in range(20):
+        rng = random.Random(seed)
+        _run_trace([rng.randrange(1 << 16) for _ in range(120)])
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=60, deadline=None)
+    @given(st.lists(st.integers(0, (1 << 16) - 1), max_size=150))
+    def test_paged_map_property_churn(choices):
+        _run_trace(choices)

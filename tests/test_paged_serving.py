@@ -1,0 +1,146 @@
+"""Paged KV serving (page_tokens): token parity with the unpaged
+oracle across the eager and compiled engines, the page append/retire
+lifecycle, page-granular admission, and the compiled plane's
+slot page-range binding."""
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config, model_class
+from repro.core.serving import ServeRequest, ServingEngine, \
+    swap_headroom_bytes
+
+
+def _cfg():
+    return get_config("qwen3-0.6b", smoke=True).replace(
+        param_dtype="float32", compute_dtype="float32")
+
+
+def _prompts(cfg, n, plen, seed=11):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab_size, size=plen).astype(np.int32)
+            for _ in range(n)]
+
+
+def _serve(engine_cls, cfg, prompts, news, *, horizon=40,
+           device=1_300_000, host=8_000_000, **kw):
+    eng = engine_cls(model_class(cfg), cfg, device_memory_bytes=device,
+                     host_memory_bytes=host, max_seq_len=horizon, **kw)
+    rids = [eng.submit(p, n) for p, n in zip(prompts, news)]
+    for m in eng.run():
+        assert m.peak_device_bytes <= eng.device_capacity, (
+            m.round_index, m.peak_device_bytes)
+        eng.check_invariants()
+    return eng, [eng.result(r) for r in rids]
+
+
+def test_paged_eager_matches_unpaged_oracle():
+    """Paging changes the memory-management unit, never a token — and
+    the page chunk is a fraction of the whole-horizon chunk, which is
+    the admission-granularity win."""
+    cfg = _cfg()
+    prompts = _prompts(cfg, 4, 8)
+    news = [10, 4, 10, 6]  # staggered retirement churns the free list
+    e0, oracle = _serve(ServingEngine, cfg, prompts, news)
+    e1, paged = _serve(ServingEngine, cfg, prompts, news, page_tokens=8)
+    assert paged == oracle
+    assert e1.kv_chunk_bytes < e0.kv_chunk_bytes
+    assert e1._pages_per_seq == 5  # ceil(40 / 8)
+    assert e1.kv_seq_bytes == (e1._pages_per_seq * e1._total_layers
+                               * e1.kv_chunk_bytes)
+    # partial spill really happened: cold pages moved to host mid-flight
+    assert e1.pool.stats.d2h_bytes > 0
+
+
+def test_page_append_tracks_decode_position():
+    """Pages are appended exactly when decode crosses a page boundary,
+    and admission commits the request's true page footprint."""
+    cfg = _cfg()
+    T = 4
+    eng = ServingEngine(model_class(cfg), cfg,
+                        device_memory_bytes=1_300_000,
+                        host_memory_bytes=8_000_000, max_seq_len=24,
+                        page_tokens=T)
+    [prompt] = _prompts(cfg, 1, 6)
+    rid = eng.submit(prompt, 10)
+    # commit = pages at the final written position (prompt + new - 1)
+    req = ServeRequest(rid=-1, prompt=prompt, max_new_tokens=10)
+    assert eng._kv_commit_bytes(req) == (
+        -(-(6 + 10 - 1) // T) * eng._total_layers * eng.kv_chunk_bytes)
+    while eng.step_round() is not None:
+        active = [r for r in eng._active if r.rid == rid]
+        if not active:
+            break
+        r = active[0]
+        # pos positions are written; decode will extend to pos+1 next
+        want = max(1, -(-r.pos // T))
+        assert eng._req_pages[rid] == want, (r.pos, eng._req_pages[rid])
+        assert eng.kv_mgr.cmap.num_payload_chunks == (
+            want * eng._total_layers)
+    assert len(eng.result(rid)) == 10
+    assert eng.kv_mgr is None  # full drain dropped the stream
+
+
+def test_paged_compiled_matches_oracle_and_pins_page_ranges():
+    cfg = _cfg()
+    from repro.runtime import driver
+    from repro.runtime.serve import CompiledServingEngine
+
+    prompts = _prompts(cfg, 4, 8, seed=13)
+    news = [9, 4, 9, 6]
+    _, oracle = _serve(ServingEngine, cfg, prompts, news)
+    comp = CompiledServingEngine(
+        model_class(cfg), cfg, device_memory_bytes=1_300_000,
+        host_memory_bytes=8_000_000, max_seq_len=40, page_tokens=8)
+    rids = [comp.submit(p, n) for p, n in zip(prompts, news)]
+    stepped = False
+    while comp.step_round() is not None:
+        stepped = True
+        # every live kv page sits inside its slot's reserved id range
+        if comp.kv_mgr is not None:
+            for pl in comp.kv_mgr.cmap.placements:
+                rid = int(pl.name.split(".")[1])
+                r = driver.slot_page_range(
+                    comp._slot_of[rid], comp._total_layers,
+                    comp._pages_per_seq)
+                assert pl.chunk_id in r, (pl.name, pl.chunk_id, r)
+        comp.check_invariants()
+    assert stepped
+    assert [comp.result(r) for r in rids] == oracle
+
+
+def test_unpageable_cache_arch_rejected():
+    """An arch whose cache leaves have no clean position axis (xLSTM
+    recurrent state) must refuse page_tokens up front."""
+    cfg = get_config("xlstm-1.3b", smoke=True).replace(
+        param_dtype="float32", compute_dtype="float32")
+    with pytest.raises(ValueError, match="position axis"):
+        ServingEngine(model_class(cfg), cfg,
+                      device_memory_bytes=8_000_000,
+                      host_memory_bytes=32_000_000, max_seq_len=24,
+                      page_tokens=8)
+
+
+def test_paged_requires_managed_stream():
+    cfg = _cfg()
+    with pytest.raises(ValueError, match="manage_kv"):
+        ServingEngine(model_class(cfg), cfg,
+                      device_memory_bytes=4_000_000, max_seq_len=24,
+                      manage_kv=False, page_tokens=8)
+
+
+def test_swap_headroom_helper_is_the_admission_margin():
+    """The shared helper IS the margin at each admission site: the
+    floor check, the decode-batch fit and `_admissible` all route
+    through it with their site's co-scheduled streams."""
+    assert swap_headroom_bytes(3, 7) == 7
+    assert swap_headroom_bytes(5) == 5
+    with pytest.raises(ValueError):
+        swap_headroom_bytes()
+    cfg = _cfg()
+    eng = ServingEngine(model_class(cfg), cfg,
+                        device_memory_bytes=1_300_000,
+                        host_memory_bytes=8_000_000, max_seq_len=24)
+    fit = (eng.device_capacity - eng._param_floor_bytes
+           - swap_headroom_bytes(eng.kv_chunk_bytes)) // eng.kv_chunk_bytes
+    assert eng.max_decode_batch == max(1, min(8, fit))
