@@ -26,6 +26,7 @@ MODULES = [
     "benchmarks.serving_compiled",  # compiled round-step scaling
     "benchmarks.timeline",        # transfer timeline / Fig. 16 stalls
     "benchmarks.serving_scale",   # paged KV + rank-sharded fleet capacity
+    "benchmarks.tiers",           # third-tier (ZeRO-Infinity) host-wall unlock
 ]
 
 

@@ -32,6 +32,7 @@ PEAK_FLOPS = 197e12  # bf16 / chip
 HBM_BW = 819e9  # bytes/s
 ICI_BW = 50e9  # bytes/s/link
 HOST_LINK_BW = 32e9  # bytes/s — PCIe Gen4 x16-class host<->device link
+NVME_BW = 6e9  # bytes/s — NVMe-class host<->slow-tier link (ZeRO-Infinity)
 
 _DTYPE_BYTES = {
     "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,

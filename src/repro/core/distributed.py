@@ -96,6 +96,7 @@ class DistributedPatrickStarEngine:
         nproc: int,
         device_memory_bytes: int,  # PER-RANK device budget
         host_memory_bytes: int | None = None,
+        slow_memory_bytes: int | None = None,
         policy: str = "opt",
         chunk_size: int | None = None,
         lr: float = 1e-3,
@@ -129,6 +130,7 @@ class DistributedPatrickStarEngine:
                 model_cls, cfg,
                 device_memory_bytes=device_memory_bytes,
                 host_memory_bytes=host_memory_bytes,
+                slow_memory_bytes=slow_memory_bytes,
                 policy=policy, chunk_size=csize,
                 lr=lr, betas=betas, eps=eps, seed=seed,
                 device_aware_placement=device_aware_placement,

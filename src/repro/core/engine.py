@@ -158,6 +158,7 @@ class PatrickStarEngine:
         *,
         device_memory_bytes: int,
         host_memory_bytes: int | None = None,
+        slow_memory_bytes: int | None = None,
         policy: str = "opt",
         chunk_size: int | None = None,
         warmup_chunk_fraction: float = 0.2,
@@ -237,7 +238,8 @@ class PatrickStarEngine:
         # Under nproc > 1 every rank owns its own pool (its own GPU).
         self.pool = HeteroMemory(
             device_capacity_bytes=device_memory_bytes,
-            host_capacity_bytes=host_memory_bytes, policy=policy)
+            host_capacity_bytes=host_memory_bytes,
+            slow_capacity_bytes=slow_memory_bytes, policy=policy)
         # transfer timeline (optional): every tier move / collective is
         # enqueued on finite-bandwidth DMA engines and the per-step report
         # decomposes step time into compute + per-engine stalls.
@@ -394,15 +396,20 @@ class PatrickStarEngine:
         cb = self.act_mgr.chunk_bytes
         budget = self.pool.device_budget()
         host_cap = self.pool.host_capacity
+        slow_cap = self.pool.slow_capacity
         if (budget is not None and host_cap is not None
                 and self.pool.device_bytes_used() + cb > budget
-                and self.pool.host_bytes_used() + cb > host_cap):
+                and self.pool.host_bytes_used() + cb > host_cap
+                and (slow_cap is None
+                     or self.pool.slow_bytes_used() + cb > slow_cap)):
             # Fig. 10's dual-constrained corner: the device is over its
-            # dynamic budget (margin-overflow spills) AND the host is
-            # full, so admitting would only ping-pong evictions between
-            # the full tiers.  Refuse up-front — eviction attempts are
-            # not free, they relocate chunks — and hold the input live,
-            # honestly counted as non-model bytes.
+            # dynamic budget (margin-overflow spills) AND every lower
+            # tier is full, so admitting would only ping-pong evictions
+            # between the full tiers.  Refuse up-front — eviction
+            # attempts are not free, they relocate chunks — and hold the
+            # input live, honestly counted as non-model bytes.  A slow
+            # tier with headroom lifts the refusal: host evictions can
+            # demote further down instead of bouncing.
             return x
         name = f"act.{gname}.{layer}"
         try:
@@ -816,6 +823,8 @@ class PatrickStarEngine:
             vocab_size=self.cfg.vocab_size, hidden=self.cfg.d_model,
             batch_tokens=0,
             act_working_bytes=self._act_floor_bytes(),
+            host_capacity_bytes=self.pool.host_capacity,
+            slow_capacity_bytes=self.pool.slow_capacity,
         )
 
 

@@ -115,6 +115,7 @@ class ChunkManager:
         # incremental per-stream tier usage (pool keeps the global sums)
         self._device_used = 0
         self._host_used = 0
+        self._slow_used = 0
         self._peak_device_used = 0  # this stream's device high-water mark
 
     # ------------------------------------------------- pool-compat properties
@@ -127,6 +128,10 @@ class ChunkManager:
         return self.pool.host_capacity
 
     @property
+    def slow_capacity(self) -> int | None:
+        return self.pool.slow_capacity
+
+    @property
     def policy(self) -> EvictionPolicy:
         return self.pool.policy
 
@@ -136,6 +141,9 @@ class ChunkManager:
 
     def host_bytes_used(self) -> int:
         return self._host_used
+
+    def slow_bytes_used(self) -> int:
+        return self._slow_used
 
     def peak_device_bytes(self) -> int:
         """This stream's lifetime device high-water mark (the pool keeps

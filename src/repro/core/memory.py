@@ -71,8 +71,23 @@ from repro.core.timeline import TransferTimeline
 if TYPE_CHECKING:  # pragma: no cover - import cycle with manager.py
     from repro.core.manager import ChunkManager, _ChunkRecord
 
-Device = Literal["device", "host"]
+Device = Literal["device", "host", "slow"]
 EvictionPolicy = Literal["opt", "lru", "fifo"]
+
+# Tier stack, fastest first.  "slow" is the NVMe-class tier behind host
+# memory (ZeRO-Infinity direction); it only exists on pools constructed
+# with ``slow_capacity_bytes``.  Chunks move between ADJACENT tiers only:
+# device<->host over the h2d/d2h lanes, host<->slow over h2s/s2h — a
+# slow-resident chunk reaches the device via a two-hop route through host.
+TIER_ORDER: tuple[Device, ...] = ("device", "host", "slow")
+
+# DMA lane for a single-hop move between adjacent tiers.
+_LINKS: dict[tuple[Device, Device], str] = {
+    ("host", "device"): "h2d",
+    ("device", "host"): "d2h",
+    ("host", "slow"): "h2s",
+    ("slow", "host"): "s2h",
+}
 
 _NEVER = 2**62  # "no known future use" sentinel for OPT
 
@@ -87,14 +102,21 @@ class TransferStats:
     d2h_bytes: int = 0
     h2d_count: int = 0
     d2h_count: int = 0
+    # host<->slow lanes; identically zero on two-tier pools
+    h2s_bytes: int = 0
+    s2h_bytes: int = 0
+    h2s_count: int = 0
+    s2h_count: int = 0
 
     @property
     def total_bytes(self) -> int:
-        return self.h2d_bytes + self.d2h_bytes
+        return self.h2d_bytes + self.d2h_bytes + self.h2s_bytes + self.s2h_bytes
 
     def reset(self) -> None:
         self.h2d_bytes = self.d2h_bytes = 0
         self.h2d_count = self.d2h_count = 0
+        self.h2s_bytes = self.s2h_bytes = 0
+        self.h2s_count = self.s2h_count = 0
 
 
 @dataclasses.dataclass
@@ -170,12 +192,20 @@ class PrefetchStats:
 
 
 class HeteroMemory:
-    """The shared two-tier (device/host) chunk memory space.
+    """The shared tiered (device/host[/slow]) chunk memory space.
 
     Streams (:class:`ChunkManager` views) register themselves; the pool
     owns every byte-accounting and movement decision.  Usage counters are
     incremental — ``device_bytes_used`` is O(1), not a scan — and are
     mirrored per-stream on each manager.
+
+    By default the space is the paper's two-tier device/host budget.
+    Passing ``slow_capacity_bytes`` appends an NVMe-class third tier
+    behind host memory (the ZeRO-Infinity direction): host evictions
+    demote to the slow tier instead of bouncing back to the device, and a
+    slow-resident chunk promotes on demand via a two-hop s2h + h2d route.
+    ``slow_capacity_bytes=None`` keeps the pool behavior-identical to the
+    two-tier space.
     """
 
     def __init__(
@@ -183,10 +213,18 @@ class HeteroMemory:
         *,
         device_capacity_bytes: int | None = None,
         host_capacity_bytes: int | None = None,
+        slow_capacity_bytes: int | None = None,
         policy: EvictionPolicy = "opt",
     ) -> None:
         self.device_capacity = device_capacity_bytes
         self.host_capacity = host_capacity_bytes
+        self.slow_capacity = slow_capacity_bytes
+        # ordered tier stack, fastest first; the slow tier exists only
+        # when given a capacity (an unbounded NVMe tier would make the
+        # unbounded host tier unreachable as an eviction target).
+        self.tiers: tuple[Device, ...] = (
+            TIER_ORDER if slow_capacity_bytes is not None
+            else TIER_ORDER[:2])
         self.policy: EvictionPolicy = policy
         self.stats = TransferStats()  # unified, all streams
         self.prefetch = PrefetchStats()
@@ -195,6 +233,11 @@ class HeteroMemory:
         self._streams: dict[str, "ChunkManager"] = {}
         self._device_used = 0
         self._host_used = 0
+        self._slow_used = 0
+        # prefetchers holding installed reference queues over this pool;
+        # unregister_stream drops their refs so recycled DynamicChunkMap
+        # ids of a later stream never collide with stale entries.
+        self._prefetchers: list["SchedulePrefetcher"] = []
         self.peak_device_bytes = 0  # cumulative (lifetime) high-water mark
         self._step_peak_device_bytes = 0  # high-water mark since last take_
         # clock advances on every access; used by LRU/FIFO and as the
@@ -226,8 +269,15 @@ class HeteroMemory:
     def unregister_stream(self, name: str) -> None:
         """Detach a stream and release every byte it holds (used when the
         activation stream is rebuilt for a new batch shape: act chunk
-        layouts are batch-dependent, unlike the four model-data streams)."""
-        mgr = self._streams.pop(name)
+        layouts are batch-dependent, unlike the four model-data streams).
+        Installed prefetcher queues drop the stream's references too — a
+        later stream reusing the name (and recycled chunk ids) must never
+        be staged off a stale schedule."""
+        mgr = self._streams.pop(name, None)
+        if mgr is None:
+            raise KeyError(
+                f"stream {name!r} is not registered with this pool "
+                f"(known streams: {sorted(self._streams)})")
         for rec in mgr._records:
             if rec.payload is not None:
                 self._uncharge(mgr, rec.location, mgr.chunk_bytes)
@@ -237,6 +287,8 @@ class HeteroMemory:
             if self.timeline is not None:
                 self.timeline.cancel((name, rec.chunk_id))
         self._moments.pop(name, None)
+        for pf in self._prefetchers:
+            pf.drop_stream(name)
 
     @property
     def streams(self) -> dict[str, "ChunkManager"]:
@@ -249,6 +301,9 @@ class HeteroMemory:
     def host_bytes_used(self) -> int:
         return self._host_used
 
+    def slow_bytes_used(self) -> int:
+        return self._slow_used
+
     def _charge(self, mgr: "ChunkManager", dev: Device, nbytes: int) -> None:
         if dev == "device":
             self._device_used += nbytes
@@ -259,17 +314,23 @@ class HeteroMemory:
                 self.peak_device_bytes = self._device_used
             if self._device_used > self._step_peak_device_bytes:
                 self._step_peak_device_bytes = self._device_used
-        else:
+        elif dev == "host":
             self._host_used += nbytes
             mgr._host_used += nbytes
+        else:
+            self._slow_used += nbytes
+            mgr._slow_used += nbytes
 
     def _uncharge(self, mgr: "ChunkManager", dev: Device, nbytes: int) -> None:
         if dev == "device":
             self._device_used -= nbytes
             mgr._device_used -= nbytes
-        else:
+        elif dev == "host":
             self._host_used -= nbytes
             mgr._host_used -= nbytes
+        else:
+            self._slow_used -= nbytes
+            mgr._slow_used -= nbytes
 
     def take_step_peak_device_bytes(self) -> int:
         """Device-tier high-water mark since the previous call, then re-arm
@@ -281,30 +342,42 @@ class HeteroMemory:
 
     def check_invariants(self) -> None:
         """Recompute usage from the records and compare with the O(1)
-        counters (test/debug hook; never needed on the hot path)."""
-        dev = host = 0
+        counters, and assert no tier budget is exceeded (test/debug hook;
+        never needed on the hot path)."""
+        dev = host = slow = 0
         for mgr in self._streams.values():
-            mdev = mhost = 0
+            mdev = mhost = mslow = 0
             for rec in mgr._records:
                 if rec.payload is None:
                     continue
                 if rec.location == "device":
                     mdev += mgr.chunk_bytes
-                else:
+                elif rec.location == "host":
                     mhost += mgr.chunk_bytes
+                else:
+                    mslow += mgr.chunk_bytes
             assert mdev == mgr._device_used, (mgr.name, mdev, mgr._device_used)
             assert mhost == mgr._host_used, (mgr.name, mhost, mgr._host_used)
+            assert mslow == mgr._slow_used, (mgr.name, mslow, mgr._slow_used)
             dev += mdev
             host += mhost
+            slow += mslow
         assert dev == self._device_used, (dev, self._device_used)
         assert host == self._host_used, (host, self._host_used)
-        # bound against the STATIC capacity: host->device spills may by
+        assert slow == self._slow_used, (slow, self._slow_used)
+        # bound against the STATIC capacities: host->device spills may by
         # design exceed the dynamic chunkable budget of the current moment
         # (margin-space overflow), and that budget also legally shrinks
         # between an admission and this check.
         if self.device_capacity is not None:
             assert self._device_used <= self.device_capacity, (
                 self._device_used, self.device_capacity)
+        if self.host_capacity is not None:
+            assert self._host_used <= self.host_capacity, (
+                self._host_used, self.host_capacity)
+        if self.slow_capacity is not None:
+            assert self._slow_used <= self.slow_capacity, (
+                self._slow_used, self.slow_capacity)
 
     # ------------------------------------------------------------ collectives
     def account_allgather(self, nbytes: int, *, hidden: bool = False,
@@ -409,8 +482,11 @@ class HeteroMemory:
                 self._staged.discard(key)
                 if self.timeline is not None:
                     self.timeline.cancel(key)
-            self.make_room(dev, mgr.chunk_bytes, exclude=key)
-            self._move(mgr, rec, dev, kind="demand")
+            # moves run between adjacent tiers only: a slow<->device
+            # demand routes through host (s2h + h2d, both legs waited on)
+            for hop in self._route(rec.location, dev):
+                self.make_room(hop, mgr.chunk_bytes, exclude=key)
+                self._move(mgr, rec, hop, kind="demand")
         elif dev == "device" and key in self._staged:
             self.prefetch.hits += 1
             self._staged.discard(key)
@@ -433,19 +509,53 @@ class HeteroMemory:
             self.timeline.cancel((mgr.name, chunk_id))
 
     def _capacity(self, dev: Device) -> int | None:
-        return self.device_budget() if dev == "device" else self.host_capacity
+        """Admission budget of a tier (device is dynamically throttled)."""
+        if dev == "device":
+            return self.device_budget()
+        return self.host_capacity if dev == "host" else self.slow_capacity
+
+    def _static_capacity(self, dev: Device) -> int | None:
+        """Hard tier bound, ignoring the dynamic device throttle (the
+        spill-destination limit: margin-space overflow may exceed the
+        chunkable budget of the moment but never the physical tier)."""
+        if dev == "device":
+            return self.device_capacity
+        return self.host_capacity if dev == "host" else self.slow_capacity
 
     def _used(self, dev: Device) -> int:
-        return self._device_used if dev == "device" else self._host_used
+        if dev == "device":
+            return self._device_used
+        return self._host_used if dev == "host" else self._slow_used
 
-    def _account_transfer(self, mgr: "ChunkManager", *, to_dev: Device) -> None:
+    def _route(self, from_dev: Device, to_dev: Device) -> list[Device]:
+        """Hop sequence from ``from_dev`` to ``to_dev`` walking adjacent
+        tiers (device<->host<->slow): one hop between neighbours, two via
+        host for the slow<->device pair."""
+        if {from_dev, to_dev} == {"device", "slow"}:
+            return ["host", to_dev]
+        return [to_dev]
+
+    def _evict_target(self, from_dev: Device) -> Device:
+        """Eviction demotes one tier down the stack; the bottom tier
+        bounces back up (two-tier: host->device, the paper's margin-space
+        overflow; three-tier: slow->host)."""
+        i = self.tiers.index(from_dev)
+        return self.tiers[i + 1] if i + 1 < len(self.tiers) else self.tiers[i - 1]
+
+    def _account_transfer(self, mgr: "ChunkManager", *, link: str) -> None:
         for st in (self.stats, mgr.stats):
-            if to_dev == "device":
+            if link == "h2d":
                 st.h2d_bytes += mgr.chunk_bytes
                 st.h2d_count += 1
-            else:
+            elif link == "d2h":
                 st.d2h_bytes += mgr.chunk_bytes
                 st.d2h_count += 1
+            elif link == "h2s":
+                st.h2s_bytes += mgr.chunk_bytes
+                st.h2s_count += 1
+            else:
+                st.s2h_bytes += mgr.chunk_bytes
+                st.s2h_count += 1
 
     def _move(
         self,
@@ -454,13 +564,19 @@ class HeteroMemory:
         to_dev: Device,
         *,
         kind: str,  # "demand" | "evict" | "stage"
-    ) -> None:
+        after: float | None = None,
+    ) -> float | None:
         """The single tier-move bookkeeping point: transfer stats, the
         hidden/critical H2D split, byte counters, location and arrival.
         ``hidden + critical == h2d`` holds because every H2D goes through
-        here with exactly one classification."""
-        self._account_transfer(mgr, to_dev=to_dev)
-        if to_dev == "device":
+        here with exactly one classification.  Moves span exactly one DMA
+        link (adjacent tiers); multi-hop routes chain calls, passing the
+        previous leg's returned completion time as ``after`` so the
+        timeline serializes the legs.  Returns the timeline completion
+        time of this leg (None without a timeline)."""
+        link = _LINKS[(rec.location, to_dev)]
+        self._account_transfer(mgr, link=link)
+        if link == "h2d":
             if kind == "stage":
                 self.prefetch.hidden_h2d_bytes += mgr.chunk_bytes
                 self.prefetch.staged_transfers += 1
@@ -470,27 +586,60 @@ class HeteroMemory:
                 self.prefetch.critical_h2d_bytes += mgr.chunk_bytes
                 if kind == "demand":
                     self.prefetch.demand_misses += 1
+        end: float | None = None
         if self.timeline is not None:
             key = (mgr.name, rec.chunk_id)
-            if to_dev == "device":
+            if link == "h2d":
                 if kind == "stage":
-                    self.timeline.record_h2d(
+                    end = self.timeline.record_h2d(
                         mgr.chunk_bytes, stream=mgr.name, critical=False,
-                        key=key)
+                        key=key, start_after=after)
                 else:
-                    self.timeline.record_h2d(
-                        mgr.chunk_bytes, stream=mgr.name, critical=True)
-            else:
-                # a D2H issued by the staging path (making room ahead of
-                # demand) is overlappable; a demand-path eviction blocks
-                # the admission that triggered it.
-                self.timeline.record_d2h(
+                    end = self.timeline.record_h2d(
+                        mgr.chunk_bytes, stream=mgr.name, critical=True,
+                        start_after=after)
+            elif link == "s2h":
+                # the fetch direction of the slow lane: a demand promotion
+                # waits on it; a staged two-hop overlaps (the h2d leg
+                # chained ``after`` it carries the rendezvous key).
+                end = self.timeline.record_s2h(
                     mgr.chunk_bytes, stream=mgr.name,
-                    critical=self._staging == 0)
+                    critical=kind != "stage" and self._staging == 0,
+                    start_after=after)
+            else:
+                # d2h / h2s, the demotion directions: issued by the
+                # staging path (making room ahead of demand) they are
+                # overlappable; a demand-path eviction blocks the
+                # admission that triggered it.
+                record = (self.timeline.record_d2h if link == "d2h"
+                          else self.timeline.record_h2s)
+                end = record(mgr.chunk_bytes, stream=mgr.name,
+                             critical=self._staging == 0, start_after=after)
         self._uncharge(mgr, rec.location, mgr.chunk_bytes)
         rec.location = to_dev
         self._charge(mgr, to_dev, mgr.chunk_bytes)
         rec.arrival = self.tick()
+        return end
+
+    def _usage_report(self) -> str:
+        """Per-tier, per-stream usage breakdown for OutOfMemory messages."""
+        lines = []
+        for dev in self.tiers:
+            cap = self._static_capacity(dev)
+            per = ", ".join(
+                f"{name}={self._stream_used(mgr, dev)}"
+                for name, mgr in sorted(self._streams.items()))
+            lines.append(
+                f"  {dev}: used={self._used(dev)}"
+                f"/{'unbounded' if cap is None else cap}"
+                + (f" ({per})" if per else ""))
+        return "tier usage by stream:\n" + "\n".join(lines)
+
+    @staticmethod
+    def _stream_used(mgr: "ChunkManager", dev: Device) -> int:
+        if dev == "device":
+            return mgr._device_used
+        return mgr._host_used if dev == "host" else mgr._slow_used
 
     def make_room(
         self, dev: Device, nbytes: int, *, exclude: tuple[str, int]
@@ -498,17 +647,25 @@ class HeteroMemory:
         cap = self._capacity(dev)
         if cap is None:
             return
-        # bound the loop: with a full opposite tier an eviction can bounce
+        # bound the loop: with every other tier full an eviction can bounce
         # its cascade right back (net-zero progress), so "no progress in
         # #chunks rounds" is a genuine capacity failure, not bad luck.
         rounds = sum(len(m._records) for m in self._streams.values()) + 1
         while self._used(dev) + nbytes > cap:
             victim = self._pick_victim(dev, exclude=exclude)
-            if victim is None or rounds <= 0:
+            if victim is None:
                 raise OutOfMemory(
                     f"unified pool: cannot fit {nbytes} bytes on {dev}: "
-                    f"used={self._used(dev)} cap={cap} and no evictable chunk "
-                    f"(streams: {sorted(self._streams)})"
+                    f"used={self._used(dev)} cap={cap} and no evictable "
+                    f"chunk (every resident is pinned, in COMPUTE, or the "
+                    f"incoming chunk itself)\n{self._usage_report()}"
+                )
+            if rounds <= 0:
+                raise OutOfMemory(
+                    f"unified pool: cannot fit {nbytes} bytes on {dev}: "
+                    f"used={self._used(dev)} cap={cap}; evictable chunks "
+                    f"remain but eviction made no net progress (cascades "
+                    f"bounce between full tiers)\n{self._usage_report()}"
                 )
             rounds -= 1
             self._evict(*victim, from_dev=dev)
@@ -552,10 +709,11 @@ class HeteroMemory:
         _depth: int = 0,
     ) -> None:
         if _depth > sum(len(m._records) for m in self._streams.values()):
-            # cascades bouncing device<->host with both tiers full would
-            # otherwise recurse forever; this is a genuine capacity fail
+            # cascades bouncing between full tiers would otherwise
+            # recurse forever; this is a genuine capacity fail
             raise OutOfMemory(
-                "unified pool: eviction cascade cycled — both tiers full"
+                "unified pool: eviction cascade cycled — every tier full\n"
+                + self._usage_report()
             )
         key = (mgr.name, rec.chunk_id)
         if key in self._staged:
@@ -566,20 +724,33 @@ class HeteroMemory:
         if mgr.chunk_state(rec.chunk_id) is ChunkState.FREE:
             self.release_payload(mgr, rec.chunk_id)
             return
-        to_dev: Device = "host" if from_dev == "device" else "device"
-        # spill destination bound: a host->device spill is the paper's
-        # margin-space overflow (Fig. 10, host-too-small case) and is
-        # limited by the *static* device capacity, not by the dynamic
-        # chunkable budget that throttles ordinary admissions.
-        cap = self.host_capacity if to_dev == "host" else self.device_capacity
-        if cap is not None and self._used(to_dev) + mgr.chunk_bytes > cap:
-            # try to cascade-evict on the destination tier
-            victim = self._pick_victim(to_dev, exclude=key)
-            if victim is None:
-                raise OutOfMemory(
-                    f"unified pool: eviction target {to_dev} full and no victim"
-                )
-            self._evict(*victim, from_dev=to_dev, _depth=_depth + 1)
+        to_dev = self._evict_target(from_dev)
+        # spill destination bound: a bottom-tier bounce (two-tier:
+        # host->device, the paper's margin-space overflow of Fig. 10's
+        # host-too-small case) is limited by the *static* tier capacity,
+        # not by the dynamic chunkable budget that throttles ordinary
+        # admissions.  Cascade size-aware: with heterogeneous per-stream
+        # chunk sizes one small victim can leave the destination still
+        # over budget, so keep evicting until the incoming chunk actually
+        # fits (a single-victim cascade silently overflowed the tier).
+        cap = self._static_capacity(to_dev)
+        if cap is not None:
+            rounds = sum(len(m._records) for m in self._streams.values()) + 1
+            while self._used(to_dev) + mgr.chunk_bytes > cap:
+                victim = self._pick_victim(to_dev, exclude=key)
+                if victim is None:
+                    raise OutOfMemory(
+                        f"unified pool: eviction target {to_dev} full and "
+                        f"no victim\n{self._usage_report()}"
+                    )
+                if rounds <= 0:
+                    raise OutOfMemory(
+                        f"unified pool: eviction target {to_dev} full and "
+                        f"cascades make no net progress\n"
+                        f"{self._usage_report()}"
+                    )
+                rounds -= 1
+                self._evict(*victim, from_dev=to_dev, _depth=_depth + 1)
         self._move(mgr, rec, to_dev, kind="evict")
 
     # -------------------------------------------------------------- staging
@@ -606,6 +777,11 @@ class HeteroMemory:
         mgr = self._streams.get(stream)
         if mgr is None:
             return False  # dynamic stream unregistered after refs installed
+        if not 0 <= chunk_id < len(mgr._records):
+            # a stale reference from before the stream was rebuilt: a new
+            # stream reusing the name may have fewer chunks than the ids
+            # an old schedule mentions (DynamicChunkMap recycles ids)
+            return False
         rec = mgr._records[chunk_id]
         key = (stream, chunk_id)
         if rec.payload is None or rec.location == "device":
@@ -655,7 +831,15 @@ class HeteroMemory:
                 return False
             self._evict(*best, from_dev="device")
             cap = self._capacity("device")
-        self._move(mgr, rec, "device", kind="stage")
+        # a slow-resident chunk needs a two-hop stage: s2h onto the host,
+        # then h2d chained after it on the timeline.  Host room is made
+        # under the staging flag, so any demotions it cascades stay
+        # overlappable.
+        after: float | None = None
+        if rec.location == "slow":
+            self.make_room("host", mgr.chunk_bytes, exclude=key)
+            after = self._move(mgr, rec, "host", kind="stage")
+        self._move(mgr, rec, "device", kind="stage", after=after)
         self._staged.add(key)
         return True
 
@@ -703,6 +887,9 @@ class SchedulePrefetcher:
         self.bw_horizon = bw_horizon  # max refs scanned per advance
         self._moments: list[int] = []
         self._refs: list[tuple[int, str, int]] = []
+        # the pool tells us when a stream detaches so the queue never
+        # stages a later same-named stream off a stale schedule
+        pool._prefetchers.append(self)
 
     @property
     def installed(self) -> bool:
@@ -711,6 +898,16 @@ class SchedulePrefetcher:
     def install(self, refs: Iterable[tuple[int, str, int]]) -> None:
         """``refs``: (moment, stream, chunk_id) for one whole iteration."""
         self._refs = sorted(refs)
+        self._moments = [m for m, _, _ in self._refs]
+
+    def drop_stream(self, stream: str) -> None:
+        """Forget every queued reference of a detached stream (called by
+        :meth:`HeteroMemory.unregister_stream`): a rebuilt stream reusing
+        the name recycles chunk ids, so stale refs could stage the wrong
+        chunk."""
+        if not self._refs:
+            return
+        self._refs = [r for r in self._refs if r[1] != stream]
         self._moments = [m for m, _, _ in self._refs]
 
     @property
@@ -742,11 +939,15 @@ class SchedulePrefetcher:
             if len(self.pool._staged) >= self.bw_inflight_cap:
                 break
             mgr = self.pool._streams.get(stream)
-            if mgr is None:
+            if mgr is None or not 0 <= chunk_id < len(mgr._records):
                 continue
             if (stream, chunk_id) in self.pool._staged:
                 continue
             ready = tl.projected_ready_s("h2d", mgr.chunk_bytes)
+            if mgr._records[chunk_id].location == "slow":
+                # two-hop stage: the chunk must first cross the slow lane,
+                # so its projected landing sums both links' backlogs
+                ready += tl.projected_ready_s("s2h", mgr.chunk_bytes)
             if ready <= tl.time_until(m):
                 # fits inside the projected idle window before its use
                 if self.pool.stage(stream, chunk_id):

@@ -40,6 +40,11 @@ class PlacementPlan:
     # act chunks that must co-reside with compute during FWD/BWD); margin
     # OS groups only claim what is left after this reservation
     act_reserved_bytes: int = 0
+    # host-resident OS groups whose steady-state home is the slow
+    # (NVMe-class) tier: they exceed the host budget left after the param
+    # fp16 spill, so between their ADAM visits they rest one tier further
+    # down instead of making the config inadmissible.  0 on two-tier plans.
+    os_slow_groups: int = 0
 
     @property
     def os_device_fraction(self) -> float:
@@ -58,6 +63,17 @@ class PlacementPlan:
             for c in cmap.comm_group_chunk_ids(g_idx)
         }
 
+    def os_slow_chunk_ids(self, cmap) -> set[int]:
+        """Chunk ids of the OS groups whose steady-state home is the slow
+        tier (the last ``os_slow_groups`` groups: the margin-placed ones
+        come first, host-placed next, overflow last)."""
+        return {
+            c
+            for g_idx in range(self.num_local_groups - self.os_slow_groups,
+                               self.num_local_groups)
+            for c in cmap.comm_group_chunk_ids(g_idx)
+        }
+
 
 def plan_placement(
     *,
@@ -71,6 +87,8 @@ def plan_placement(
     hidden: int = 0,
     batch_tokens: int = 0,
     act_working_bytes: int = 0,
+    host_capacity_bytes: int | None = None,
+    slow_capacity_bytes: int | None = None,
 ) -> PlacementPlan:
     """Derive the placement plan from warm-up statistics.
 
@@ -80,6 +98,13 @@ def plan_placement(
     carved out of the margin BEFORE optimizer-state groups claim it, so a
     margin-placed OS group can never force the act chunks an operator is
     reading/writing off the device.
+
+    With a bounded host (``host_capacity_bytes``) and a slow tier present
+    (``slow_capacity_bytes``), host-placed OS groups that do not fit the
+    host budget left after the param-fp16 spill overflow to the slow tier
+    (``os_slow_groups``) instead of making the configuration
+    inadmissible — the ZeRO-Infinity direction.  Without a slow tier the
+    plan is unchanged: overflow remains the pool's OutOfMemory to raise.
     """
     # one OS group = param fp32 + momentum + variance, all fp32
     group_bytes = 3 * chunk_size_elems * 4
@@ -102,6 +127,17 @@ def plan_placement(
     # Embedding placement: moving O(V*H) params vs O(B*H) activations.
     emb_on_host = bool(vocab_size and batch_tokens and vocab_size > batch_tokens)
 
+    # Third-tier overflow: host-placed OS groups beyond what the host
+    # budget can hold (after the fp16 spill it must absorb) rest on the
+    # slow tier between ADAM visits.
+    os_slow_groups = 0
+    if slow_capacity_bytes is not None and host_capacity_bytes is not None:
+        host_groups = num_local_groups - int(os_device_groups)
+        spill_fp16 = max(param_fp16_local_bytes - max(fp16_budget, 0), 0)
+        host_os_budget = max(host_capacity_bytes - spill_fp16, 0)
+        fit = host_os_budget // group_bytes if group_bytes > 0 else host_groups
+        os_slow_groups = int(max(0, host_groups - fit))
+
     return PlacementPlan(
         os_device_groups=int(os_device_groups),
         num_local_groups=num_local_groups,
@@ -109,4 +145,5 @@ def plan_placement(
         embedding_on_host=emb_on_host,
         margin_or_spill_groups=margin_or_spill,
         act_reserved_bytes=int(act_working_bytes),
+        os_slow_groups=os_slow_groups,
     )

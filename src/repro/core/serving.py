@@ -154,6 +154,7 @@ class ServingEngine:
         *,
         device_memory_bytes: int,
         host_memory_bytes: int | None = None,
+        slow_memory_bytes: int | None = None,
         policy: str = "opt",
         chunk_size: int | None = None,
         max_seq_len: int = 128,
@@ -184,6 +185,7 @@ class ServingEngine:
         self._page_tokens = page_tokens
         self.device_capacity = device_memory_bytes
         self.host_capacity = host_memory_bytes
+        self.slow_capacity = slow_memory_bytes
         if cfg.arch_type in ("audio", "vlm"):
             raise ValueError(
                 "ServingEngine serves token prompts; encoder-input archs "
@@ -223,7 +225,8 @@ class ServingEngine:
         self.cmap = build_chunk_map(specs, chunk_size)
         self.pool = HeteroMemory(
             device_capacity_bytes=device_memory_bytes,
-            host_capacity_bytes=host_memory_bytes, policy=policy)
+            host_capacity_bytes=host_memory_bytes,
+            slow_capacity_bytes=slow_memory_bytes, policy=policy)
         self.timeline = timeline
         if timeline is not None:
             self.pool.set_timeline(timeline)
@@ -424,11 +427,12 @@ class ServingEngine:
                     req: ServeRequest | None = None) -> bool:
         """Can the pool hold the param working set plus the running KV
         commitment and one more sequence's (``req``'s when given, the
-        full-horizon template otherwise)?  Managed KV may spill to host,
-        so the bound is the two-tier total; unmanaged KV is
-        device-resident raw arrays, so the device budget alone decides.
-        Paged streams reason in pages: each request commits only the
-        chunks it will actually hold at its final position."""
+        full-horizon template otherwise)?  Managed KV may spill to host
+        (and further to the slow tier when one exists), so the bound is
+        the total across every pool tier; unmanaged KV is device-resident
+        raw arrays, so the device budget alone decides.  Paged streams
+        reason in pages: each request commits only the chunks it will
+        actually hold at its final position."""
         if self.manage_kv:
             if self.host_capacity is None:
                 return True  # unbounded host tier
@@ -439,7 +443,9 @@ class ServingEngine:
             cand = (self._kv_commit_bytes(req) if req is not None
                     else self.kv_seq_bytes)
             need = self._param_stream_bytes + headroom + active_kv + cand
-            return need <= self.device_capacity + self.host_capacity
+            total = (self.device_capacity + self.host_capacity
+                     + (self.slow_capacity or 0))
+            return need <= total
         need = (self._param_floor_bytes
                 + (n_active + 1) * self._kv_seq_raw_bytes)
         return need <= self.device_capacity

@@ -16,6 +16,9 @@ Engines (one FIFO queue each, issue order preserved):
 
   ``h2d``   host->device stages and demand fetches;
   ``d2h``   device->host evictions and host-placed ADAM pulls;
+  ``h2s``   host->slow demotions onto the NVMe-class third tier;
+  ``s2h``   slow->host promotions (the first leg of a two-hop fetch —
+            the chained h2d leg starts only after it lands);
   ``coll``  the collective lane (group all-gathers, grad reduce-scatter,
             the stem all-reduce) of the distributed plane.
 
@@ -79,9 +82,14 @@ class DmaEngine:
             return 0.0
         return nbytes / float(self.bandwidth)
 
-    def enqueue(self, now: float, nbytes: int) -> float:
-        """FIFO issue: starts when the queue drains, returns the end."""
+    def enqueue(self, now: float, nbytes: int,
+                start_after: float | None = None) -> float:
+        """FIFO issue: starts when the queue drains (and, for the second
+        leg of a chained two-hop transfer, not before ``start_after`` —
+        the first leg's completion), returns the end."""
         start = max(now, self.busy_until)
+        if start_after is not None:
+            start = max(start, start_after)
         end = start + self.transfer_seconds(nbytes)
         self.busy_until = end
         return end
@@ -94,6 +102,8 @@ class StepTimeline:
     compute_s: float = 0.0
     h2d_stall_s: float = 0.0
     d2h_stall_s: float = 0.0
+    h2s_stall_s: float = 0.0
+    s2h_stall_s: float = 0.0
     gather_stall_s: float = 0.0
     # simulated wall seconds this step actually took (now - step start);
     # equals compute_s + stall_s up to float associativity
@@ -103,7 +113,8 @@ class StepTimeline:
 
     @property
     def stall_s(self) -> float:
-        return self.h2d_stall_s + self.d2h_stall_s + self.gather_stall_s
+        return (self.h2d_stall_s + self.d2h_stall_s + self.h2s_stall_s
+                + self.s2h_stall_s + self.gather_stall_s)
 
     @property
     def step_s(self) -> float:
@@ -113,6 +124,7 @@ class StepTimeline:
 
 # stall bucket per engine name
 _STALL_FIELD = {"h2d": "h2d_stall_s", "d2h": "d2h_stall_s",
+                "h2s": "h2s_stall_s", "s2h": "s2h_stall_s",
                 "coll": "gather_stall_s"}
 
 _DRAIN_STREAM = "(drain)"
@@ -132,12 +144,18 @@ class TransferTimeline:
         *,
         h2d_bandwidth: float | None = None,
         d2h_bandwidth: float | None = None,
+        h2s_bandwidth: float | None = None,
+        s2h_bandwidth: float | None = None,
         collective_bandwidth: float | None = None,
     ) -> None:
         self.h2d = DmaEngine("h2d", h2d_bandwidth)
         self.d2h = DmaEngine("d2h", d2h_bandwidth)
+        # slow-tier (NVMe-class) lanes; idle on two-tier pools
+        self.h2s = DmaEngine("h2s", h2s_bandwidth)
+        self.s2h = DmaEngine("s2h", s2h_bandwidth)
         self.coll = DmaEngine("coll", collective_bandwidth)
-        self._engines = {"h2d": self.h2d, "d2h": self.d2h, "coll": self.coll}
+        self._engines = {"h2d": self.h2d, "d2h": self.d2h,
+                         "h2s": self.h2s, "s2h": self.s2h, "coll": self.coll}
         self.now = 0.0
         self._step_start = 0.0
         self._cur: int | None = None
@@ -153,11 +171,13 @@ class TransferTimeline:
     def calibrated(cls) -> "TransferTimeline":
         """Timeline with bandwidths derived from the roofline hardware
         constants instead of ad-hoc test scales: H2D/D2H ride the
-        PCIe-class host link, collectives the ICI ring — so simulated
-        stalls come out in absolute Fig. 16-style seconds."""
-        from repro.analysis.roofline import HOST_LINK_BW, ICI_BW
+        PCIe-class host link, the slow-tier lanes an NVMe-class link,
+        collectives the ICI ring — so simulated stalls come out in
+        absolute Fig. 16-style seconds across every link."""
+        from repro.analysis.roofline import HOST_LINK_BW, ICI_BW, NVME_BW
 
         return cls(h2d_bandwidth=HOST_LINK_BW, d2h_bandwidth=HOST_LINK_BW,
+                   h2s_bandwidth=NVME_BW, s2h_bandwidth=NVME_BW,
                    collective_bandwidth=ICI_BW)
 
     # ------------------------------------------------------------- durations
@@ -215,28 +235,47 @@ class TransferTimeline:
 
     # -------------------------------------------------------------- transfers
     def record_h2d(self, nbytes: int, *, stream: str, critical: bool,
-                   key: Hashable | None = None) -> None:
-        self._record("h2d", nbytes, stream=stream, critical=critical, key=key)
+                   key: Hashable | None = None,
+                   start_after: float | None = None) -> float:
+        return self._record("h2d", nbytes, stream=stream, critical=critical,
+                            key=key, start_after=start_after)
 
     def record_d2h(self, nbytes: int, *, stream: str, critical: bool,
-                   key: Hashable | None = None) -> None:
-        self._record("d2h", nbytes, stream=stream, critical=critical, key=key)
+                   key: Hashable | None = None,
+                   start_after: float | None = None) -> float:
+        return self._record("d2h", nbytes, stream=stream, critical=critical,
+                            key=key, start_after=start_after)
+
+    def record_h2s(self, nbytes: int, *, stream: str, critical: bool,
+                   key: Hashable | None = None,
+                   start_after: float | None = None) -> float:
+        return self._record("h2s", nbytes, stream=stream, critical=critical,
+                            key=key, start_after=start_after)
+
+    def record_s2h(self, nbytes: int, *, stream: str, critical: bool,
+                   key: Hashable | None = None,
+                   start_after: float | None = None) -> float:
+        return self._record("s2h", nbytes, stream=stream, critical=critical,
+                            key=key, start_after=start_after)
 
     def record_collective(self, nbytes: int, *, critical: bool,
                           stream: str = "param",
-                          key: Hashable | None = None) -> None:
-        self._record("coll", nbytes, stream=stream, critical=critical, key=key)
+                          key: Hashable | None = None) -> float:
+        return self._record("coll", nbytes, stream=stream, critical=critical,
+                            key=key)
 
     def _record(self, engine: str, nbytes: int, *, stream: str,
-                critical: bool, key: Hashable | None) -> None:
+                critical: bool, key: Hashable | None,
+                start_after: float | None = None) -> float:
         eng = self._engines[engine]
-        end = eng.enqueue(self.now, nbytes)
+        end = eng.enqueue(self.now, nbytes, start_after)
         if critical:
             # the consumer waits for queue position + wire time (FIFO:
             # hidden backlog ahead of it delays it — engine contention)
             self._stall(engine, stream, end - self.now)
         elif key is not None:
             self._pending[key] = (engine, end, stream)
+        return end
 
     def wait_for(self, key: Hashable) -> float:
         """The consumer of an overlappable transfer arrived: stall for

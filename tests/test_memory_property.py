@@ -19,12 +19,13 @@ CB = SIZE * 4  # chunk bytes (fp32)
 
 
 def _pool(n_tensors, device_chunks, policy, stream_names,
-          host_chunks=None):
+          host_chunks=None, slow_chunks=None):
     specs = [TensorSpec(f"t{i}", (SIZE,)) for i in range(n_tensors)]
     cmap = build_chunk_map(specs, SIZE)
     pool = HeteroMemory(
         device_capacity_bytes=device_chunks * CB,
         host_capacity_bytes=None if host_chunks is None else host_chunks * CB,
+        slow_capacity_bytes=None if slow_chunks is None else slow_chunks * CB,
         policy=policy)
     mgrs = {s: ChunkManager(cmap, name=s, pool=pool) for s in stream_names}
     return pool, mgrs
@@ -95,6 +96,48 @@ def test_stream_counters_sum_to_pool_usage(t):
         assert pool.device_bytes_used() + pool.host_bytes_used() \
             == sum(g.device_bytes_used() + g.host_bytes_used()
                    for g in mgrs.values())
+        pool.check_invariants()
+
+
+@st.composite
+def tiered_traffic(draw):
+    n, streams, ops, policy, device_chunks = draw(traffic())
+    host_chunks = draw(st.integers(1, n * len(streams) + 2))
+    slow_chunks = draw(st.integers(1, n * len(streams) + 2))
+    return n, streams, ops, policy, device_chunks, host_chunks, slow_chunks
+
+
+@given(tiered_traffic())
+@settings(max_examples=60, deadline=None)
+def test_three_tier_budgets_never_exceeded(t):
+    """With a bounded slow tier behind the host, NO tier ever exceeds its
+    byte budget at any intermediate point (check_invariants asserts every
+    tier's cap after every move), and the per-stream counters — slow tier
+    included — sum to the pool's totals.  OutOfMemory is acceptable on
+    infeasible sequences; an overflow never is."""
+    n, streams, ops, policy, device_chunks, host_chunks, slow_chunks = t
+    pool, mgrs = _pool(n, device_chunks, policy, streams,
+                       host_chunks=host_chunks, slow_chunks=slow_chunks)
+    for m, (s_idx, t_idx, rel) in enumerate(ops):
+        mgr = mgrs[streams[s_idx]]
+        pool.set_moment(m)
+        try:
+            mgr.access_tensor(f"t{t_idx}")
+        except OutOfMemory:
+            pool.check_invariants()
+            return
+        mgr.release_tensor(
+            f"t{t_idx}",
+            TensorState.HOLD_AFTER_FWD if rel == "hold" else TensorState.FREE)
+        assert pool.device_bytes_used() <= device_chunks * CB
+        assert pool.host_bytes_used() <= host_chunks * CB
+        assert pool.slow_bytes_used() <= slow_chunks * CB
+        assert sum(g.slow_bytes_used() for g in mgrs.values()) \
+            == pool.slow_bytes_used()
+        assert sum(g.device_bytes_used() + g.host_bytes_used()
+                   + g.slow_bytes_used() for g in mgrs.values()) \
+            == (pool.device_bytes_used() + pool.host_bytes_used()
+                + pool.slow_bytes_used())
         pool.check_invariants()
 
 

@@ -1,0 +1,259 @@
+"""Tier-stack tests (core/memory.py): the heterogeneous-chunk-size
+eviction-cascade overflow regression, the three-tier (device/host/slow)
+unlock, demand promotion and two-hop staging from the slow tier, the
+improved OutOfMemory diagnostics, and stale-prefetcher-reference cleanup
+on unregister_stream."""
+
+import pytest
+
+from repro.core.chunk import TensorSpec, build_chunk_map
+from repro.core.manager import ChunkManager
+from repro.core.memory import HeteroMemory, OutOfMemory, SchedulePrefetcher
+from repro.core.state import TensorState
+from repro.core.timeline import TransferTimeline
+
+A_SIZE = 8  # elements per A tensor == per A chunk (32 B fp32)
+B_SIZE = 2  # elements per B tensor == per B chunk (8 B fp32)
+A_CB = A_SIZE * 4
+B_CB = B_SIZE * 4
+DEV_CAP = 2 * A_CB  # 64 B
+HOST_CAP = 5 * B_CB  # 40 B: holds 5 B chunks but NOT host-load + one A chunk
+
+
+def _two_stream_pool(slow_bytes=None, policy="fifo"):
+    a_map = build_chunk_map(
+        [TensorSpec(f"t{i}", (A_SIZE,)) for i in range(4)], A_SIZE)
+    b_map = build_chunk_map(
+        [TensorSpec(f"t{i}", (B_SIZE,)) for i in range(8)], B_SIZE)
+    pool = HeteroMemory(
+        device_capacity_bytes=DEV_CAP, host_capacity_bytes=HOST_CAP,
+        slow_capacity_bytes=slow_bytes, policy=policy)
+    A = ChunkManager(a_map, name="A", pool=pool)
+    B = ChunkManager(b_map, name="B", pool=pool)
+    return pool, A, B
+
+
+def _cascade_setup(slow_bytes=None):
+    """Both tiers near-full with heterogeneous chunk sizes, FIFO order
+    arranged so the next device admission evicts the large A chunk:
+
+      host:   b0..b4 (5 x 8 B, full)          arrivals 1..5
+      device: a0 (32 B) + b5 (8 B) = 40 B      arrivals 6, 7
+
+    Accessing a1 (32 B) on the device overflows it (40+32 > 64); FIFO
+    picks a0 (oldest arrival) as victim, whose spill to the full host
+    must cascade 32 B worth of B chunks out of the way — four of them.
+    A single-victim cascade frees only 8 B and overflows the host tier.
+    """
+    pool, A, B = _two_stream_pool(slow_bytes=slow_bytes)
+    for i in range(5):
+        B.access_tensor(f"t{i}", "host")
+        B.release_tensor(f"t{i}", TensorState.HOLD_AFTER_FWD)
+    A.access_tensor("t0", "device")
+    A.release_tensor("t0", TensorState.HOLD_AFTER_FWD)
+    B.access_tensor("t5", "device")
+    B.release_tensor("t5", TensorState.HOLD_AFTER_FWD)
+    assert pool.host_bytes_used() == HOST_CAP
+    assert pool.device_bytes_used() == A_CB + B_CB
+    return pool, A, B
+
+
+def test_heterogeneous_cascade_never_overflows_budgets():
+    """Regression: with different per-stream chunk_bytes a one-victim
+    destination cascade frees less than the incoming chunk needs, and the
+    spill silently overflowed the host budget.  The cascade must evict
+    size-aware until the chunk fits — or raise — but never overflow."""
+    pool, A, B = _cascade_setup()
+    try:
+        A.access_tensor("t1", "device")
+        A.release_tensor("t1", TensorState.HOLD_AFTER_FWD)
+    except OutOfMemory:
+        pass  # an honest refusal is acceptable; an overflow never is
+    assert pool.device_bytes_used() <= DEV_CAP
+    assert pool.host_bytes_used() <= HOST_CAP
+    pool.check_invariants()
+
+
+def test_slow_tier_absorbs_cascade():
+    """The same pressure with a slow tier behind the host trains through:
+    host victims demote DOWN to the slow tier (no device bounce), the A
+    chunk spills to the host, and the admission succeeds with every tier
+    inside budget."""
+    slow_cap = 25 * B_CB
+    pool, A, B = _cascade_setup(slow_bytes=slow_cap)
+    A.access_tensor("t1", "device")
+    A.release_tensor("t1", TensorState.HOLD_AFTER_FWD)
+    assert A.location(1) == "device"
+    assert pool.device_bytes_used() <= DEV_CAP
+    assert pool.host_bytes_used() <= HOST_CAP
+    assert 0 < pool.slow_bytes_used() <= slow_cap
+    # the cascade crossed the host->slow lane, not the host->device bounce
+    assert pool.stats.h2s_count >= 4
+    assert pool.stats.h2s_bytes == pool.stats.h2s_count * B_CB
+    assert pool.stats.total_bytes >= pool.stats.h2s_bytes
+    pool.check_invariants()
+
+
+def test_demand_promotion_from_slow():
+    """A slow-resident chunk promotes on demand via the two-hop
+    slow->host->device route (s2h then h2d, both booked)."""
+    pool, A, B = _cascade_setup(slow_bytes=25 * B_CB)
+    A.access_tensor("t1", "device")
+    A.release_tensor("t1", TensorState.HOLD_AFTER_FWD)
+    assert B.location(0) == "slow"  # FIFO demoted the oldest B chunks
+    h2d_before = pool.stats.h2d_count
+    B.access_tensor("t0", "device")
+    B.release_tensor("t0", TensorState.HOLD_AFTER_FWD)
+    assert B.location(0) == "device"
+    assert pool.stats.s2h_count >= 1
+    assert pool.stats.h2d_count > h2d_before
+    assert pool.stats.total_bytes == (
+        pool.stats.h2d_bytes + pool.stats.d2h_bytes
+        + pool.stats.h2s_bytes + pool.stats.s2h_bytes)
+    pool.check_invariants()
+
+
+def test_two_tier_pool_has_no_slow_tier():
+    """slow_capacity=None keeps the two-tier stack: host evictions bounce
+    to the device (margin-overflow), the slow lanes stay untouched."""
+    pool, A, B = _two_stream_pool()
+    assert pool.tiers == ("device", "host")
+    assert pool._evict_target("host") == "device"
+    assert pool.slow_bytes_used() == 0
+    pool3, _, _ = _two_stream_pool(slow_bytes=100)
+    assert pool3.tiers == ("device", "host", "slow")
+    assert pool3._evict_target("host") == "slow"
+    assert pool3._evict_target("slow") == "host"
+
+
+def _one_stream_pool(n=4, device_chunks=1, host_bytes=None, slow_bytes=None,
+                     policy="opt"):
+    cmap = build_chunk_map(
+        [TensorSpec(f"t{i}", (A_SIZE,)) for i in range(n)], A_SIZE)
+    pool = HeteroMemory(
+        device_capacity_bytes=device_chunks * A_CB,
+        host_capacity_bytes=host_bytes, slow_capacity_bytes=slow_bytes,
+        policy=policy)
+    return pool, ChunkManager(cmap, name="param", pool=pool)
+
+
+def test_oom_message_empty_candidate_set():
+    """A genuinely empty victim set (every resident in COMPUTE) says so,
+    with a per-tier/per-stream usage breakdown."""
+    pool, mgr = _one_stream_pool(device_chunks=1)
+    mgr.access_tensor("t0", "device")  # stays in COMPUTE: unevictable
+    with pytest.raises(OutOfMemory) as ei:
+        mgr.access_tensor("t1", "device")
+    msg = str(ei.value)
+    assert "no evictable chunk" in msg
+    assert "tier usage by stream" in msg
+    assert "param=" in msg
+
+
+def test_oom_message_cascade_no_progress():
+    """Evictable chunks exist but cascades ping-pong between full tiers:
+    the message must NOT claim there was no evictable chunk."""
+    pool, mgr = _one_stream_pool(device_chunks=1, host_bytes=A_CB)
+    mgr.access_tensor("t0", "device")
+    mgr.release_tensor("t0", TensorState.HOLD_AFTER_FWD)
+    mgr.access_tensor("t1", "host")
+    mgr.release_tensor("t1", TensorState.HOLD_AFTER_FWD)
+    with pytest.raises(OutOfMemory) as ei:
+        mgr.access_tensor("t2", "device")
+    msg = str(ei.value)
+    assert "no evictable chunk" not in msg
+    assert "tier usage by stream" in msg
+    pool.check_invariants()
+
+
+def test_two_hop_stage_from_slow():
+    """Staging a slow-resident chunk runs s2h + h2d, books both legs
+    hidden on the H2D side (hidden+critical==h2d stays conserved), and on
+    the timeline the h2d leg starts only after the s2h leg lands."""
+    tl = TransferTimeline(h2d_bandwidth=1e3, d2h_bandwidth=1e3,
+                          h2s_bandwidth=500.0, s2h_bandwidth=500.0)
+    pool, mgr = _one_stream_pool(device_chunks=2, host_bytes=A_CB,
+                                 slow_bytes=4 * A_CB, policy="opt")
+    pool.set_timeline(tl)
+    # t0 -> host, then t1 -> host evicts t0 down to the slow tier
+    mgr.access_tensor("t0", "host")
+    mgr.release_tensor("t0", TensorState.HOLD_AFTER_FWD)
+    mgr.access_tensor("t1", "host")
+    mgr.release_tensor("t1", TensorState.HOLD_AFTER_FWD)
+    assert mgr.location(0) == "slow"
+    mgr.register_moments({0: [5]})
+    pool.set_moment(0)
+    assert pool.stage("param", 0)
+    assert mgr.location(0) == "device"
+    assert pool.prefetch.staged_transfers == 1
+    assert pool.stats.s2h_count == 1
+    assert (pool.prefetch.hidden_h2d_bytes + pool.prefetch.critical_h2d_bytes
+            == pool.stats.h2d_bytes)
+    # chained legs: the h2d wire starts after the s2h completion
+    assert tl.h2d.busy_until >= tl.s2h.busy_until
+    # the consumer's arrival resolves the rendezvous as a hit
+    pool.set_moment(5)
+    mgr.access_tensor("t0", "device")
+    mgr.release_tensor("t0", TensorState.HOLD_AFTER_FWD)
+    assert pool.prefetch.hits == 1
+    pool.check_invariants()
+
+
+def test_three_tier_timeline_conservation():
+    """wall == compute + stalls holds with the slow lanes in play, the
+    slow lanes actually see traffic, and infinite bandwidth stalls 0."""
+
+    def drive(tl):
+        pool, A, B = _cascade_setup(slow_bytes=25 * B_CB)
+        pool.set_timeline(tl)
+        tl.install_durations({m: 1e-3 for m in range(4)})
+        pool.set_moment(0)
+        A.access_tensor("t1", "device")  # cascade: d2h + 4x h2s
+        A.release_tensor("t1", TensorState.HOLD_AFTER_FWD)
+        pool.set_moment(1)
+        B.access_tensor("t0", "device")  # two-hop promotion: s2h + h2d
+        B.release_tensor("t0", TensorState.HOLD_AFTER_FWD)
+        pool.set_moment(2)
+        rep = tl.take_step()
+        pool.check_invariants()
+        return pool, rep
+
+    pool, rep = drive(TransferTimeline(
+        h2d_bandwidth=1e6, d2h_bandwidth=1e6,
+        h2s_bandwidth=2e5, s2h_bandwidth=2e5))
+    assert abs(rep.wall_s - rep.step_s) <= 1e-9 * max(rep.wall_s, 1e-30)
+    assert rep.h2s_stall_s > 0.0 and rep.s2h_stall_s > 0.0
+    assert (pool.prefetch.hidden_h2d_bytes + pool.prefetch.critical_h2d_bytes
+            == pool.stats.h2d_bytes)
+
+    _, rep_inf = drive(TransferTimeline())
+    assert rep_inf.stall_s == 0.0
+    assert abs(rep_inf.wall_s - rep_inf.compute_s) <= 1e-12
+
+
+def test_unregister_stream_drops_prefetcher_refs():
+    """unregister_stream purges the stream from installed prefetcher
+    queues; a rebuilt stream reusing the name (with recycled, possibly
+    fewer chunk ids) is never staged off the stale schedule."""
+    pool, mgr = _one_stream_pool(n=4, device_chunks=4, policy="opt")
+    kv_map = build_chunk_map(
+        [TensorSpec(f"t{i}", (A_SIZE,)) for i in range(6)], A_SIZE)
+    kv = ChunkManager(kv_map, name="kv", pool=pool)
+    pf = SchedulePrefetcher(pool, lookahead=4)
+    pf.install([(0, "param", 0), (1, "kv", 5), (2, "kv", 1), (3, "param", 1)])
+    pool.unregister_stream("kv")
+    assert all(stream != "kv" for _, stream, _ in pf._refs)
+    assert len(pf._refs) == 2
+    # a rebuilt, smaller "kv" stream: the stale id 5 is out of range and
+    # stage() must tolerate it (no IndexError), not stage a wrong chunk
+    small_map = build_chunk_map([TensorSpec("t0", (A_SIZE,))], A_SIZE)
+    ChunkManager(small_map, name="kv", pool=pool)
+    assert pool.stage("kv", 5) is False
+    assert pf.advance(0) >= 0  # queue still consistent after the drop
+    pool.check_invariants()
+
+
+def test_unregister_unknown_stream_raises():
+    pool, _ = _one_stream_pool()
+    with pytest.raises(KeyError, match="not registered"):
+        pool.unregister_stream("nope")
