@@ -1,0 +1,273 @@
+"""Co-tenancy benchmark: training + serving on ONE HeteroMemory pool.
+
+A PatrickStarEngine fine-tunes one model while a ServingEngine serves
+another, both leased from the same pool (Angel-PTM direction: one memory
+manager hosting many jobs).  The serving tenant gets a high eviction
+priority and per-tier soft budgets; the trainer is unbudgeted and
+backfills whatever the server is not using.  Compared against:
+
+  * **solo baselines** — each engine alone on a private pool sized to
+    its co-tenancy planning share (what the tenant "paid for").
+  * **a static 50/50 split** — two private pools, each half the shared
+    pool.  The halves strand capacity: the trainer's model data does not
+    fit half the host tier and it cannot borrow the half the server
+    never touches, so the split OOMs where the shared pool trains fine.
+
+Asserted acceptance bars:
+
+1. co-resident serving emits token-for-token the solo-serving outputs;
+2. the serve tenant's tier budgets hold every round (tenant-scoped
+   device peak <= its device budget, host usage <= its host budget) and
+   the trainer never evicts a single serve chunk
+   (``pool.evictions[("serve", "train")] == 0`` — the priority shield);
+3. mean serving round latency (modeled, shared calibrated timeline)
+   <= LATENCY_BAR x solo-serving;
+4. co-resident trainer throughput >= THROUGHPUT_BAR x solo training,
+   and its per-step losses match solo exactly (placement never changes
+   math);
+5. the static split fails at least one of bars 3/4.
+
+``--smoke`` shrinks the burst/steps for CI; every assertion stays on.
+"""
+
+import argparse
+import json
+import statistics
+
+import jax
+import numpy as np
+
+from benchmarks.common import csv, lm_batch
+from repro.configs import get_config, model_class
+from repro.core.engine import PatrickStarEngine
+from repro.core.memory import HeteroMemory, OutOfMemory
+from repro.core.serving import ServingEngine
+from repro.core.timeline import TransferTimeline
+
+# shared pool = the sum of the two tenants' planning shares
+SERVE_DEVICE = 1_200_000  # serve tenant device soft budget (tight: < params)
+SERVE_HOST = 2_500_000    # holds the param stream + the whole kv burst
+TRAIN_DEVICE = 4_000_000  # trainer planning share (explicit, not a budget)
+DEVICE_POOL = SERVE_DEVICE + TRAIN_DEVICE
+HOST_POOL = 13_000_000    # > trainer-need + serve budget, but HALF of it
+                          # is far below the trainer's host floor (~8-10MB
+                          # of optimizer state + warm-up residency): the
+                          # split strands the host bytes the server never
+                          # uses
+
+LATENCY_BAR = 1.25        # co-resident serve latency vs solo
+THROUGHPUT_BAR = 0.5      # co-resident trainer throughput vs solo
+
+SEQ = 64
+BATCH = 4
+HORIZON = 40
+PAGE_TOKENS = 8
+
+
+def _serve_cfg():
+    return get_config("qwen3-0.6b", smoke=True).replace(
+        param_dtype="float32", compute_dtype="float32")
+
+
+def _train_cfg():
+    return get_config("gpt2-paper-1b", smoke=True).replace(
+        num_layers=3, param_dtype="float32", compute_dtype="float32")
+
+
+def _drive_serving(eng, prompts, new_tokens, *, budgets=None, pool=None):
+    """Submit the burst and round it to completion; returns (tokens,
+    per-round modeled latencies).  ``budgets`` asserts the serve
+    tenant's soft budgets after every round (co-tenancy mode)."""
+    rids = [eng.submit(p, new_tokens) for p in prompts]
+    lat = []
+    while (m := eng.step_round()) is not None:
+        lat.append(m.timeline.wall_s)
+        if budgets is not None:
+            dev_budget, host_budget = budgets
+            assert m.peak_device_bytes <= dev_budget, (
+                m.round_index, m.peak_device_bytes)
+            assert eng.tenant.host_bytes_used() <= host_budget, (
+                m.round_index, eng.tenant.host_bytes_used())
+            assert pool.evictions[("serve", "train")] == 0, dict(
+                pool.evictions)
+        eng.check_invariants()
+    return [eng.result(r) for r in rids], lat
+
+
+def solo_serving(prompts, new_tokens, *, device=SERVE_DEVICE,
+                 host=SERVE_HOST):
+    cfg = _serve_cfg()
+    eng = ServingEngine(
+        model_class(cfg), cfg, device_memory_bytes=device,
+        host_memory_bytes=host, max_seq_len=HORIZON,
+        page_tokens=PAGE_TOKENS, seed=0,
+        timeline=TransferTimeline.calibrated())
+    toks, lat = _drive_serving(eng, prompts, new_tokens)
+    eng.pool.check_invariants()
+    return toks, lat
+
+
+def solo_training(steps, *, device=TRAIN_DEVICE, host=HOST_POOL):
+    cfg = _train_cfg()
+    eng = PatrickStarEngine(
+        model_class(cfg), cfg, device_memory_bytes=device,
+        host_memory_bytes=host, timeline=TransferTimeline.calibrated())
+    batch = lm_batch(cfg, BATCH, SEQ)
+    losses, walls = [], []
+    for _ in range(steps):
+        met = eng.step(batch)
+        losses.append(float(met.loss))
+        walls.append(met.timeline.wall_s)
+    eng.pool.check_invariants()
+    return losses, walls
+
+
+def coresident(prompts, new_tokens, steps, serve_every=3):
+    """Both engines on one pool: the trainer takes a step, the server
+    runs up to ``serve_every`` rounds in between (coarse interleave —
+    one process, so rounds and steps alternate rather than overlap; the
+    shared calibrated timeline still prices both tenants' traffic over
+    the same DMA lanes)."""
+    pool = HeteroMemory(
+        device_capacity_bytes=DEVICE_POOL, host_capacity_bytes=HOST_POOL,
+        policy="opt")
+    pool.set_timeline(TransferTimeline.calibrated())
+    serve_t = pool.create_tenant(
+        "serve", priority=10, device_budget_bytes=SERVE_DEVICE,
+        host_budget_bytes=SERVE_HOST)
+    train_t = pool.create_tenant("train")
+
+    scfg, tcfg = _serve_cfg(), _train_cfg()
+    serve_eng = ServingEngine(
+        model_class(scfg), scfg, pool=pool, tenant=serve_t,
+        max_seq_len=HORIZON, page_tokens=PAGE_TOKENS, seed=0)
+    train_eng = PatrickStarEngine(
+        model_class(tcfg), tcfg, pool=pool, tenant=train_t,
+        device_memory_bytes=TRAIN_DEVICE)
+    batch = lm_batch(tcfg, BATCH, SEQ)
+
+    rids = [serve_eng.submit(p, new_tokens) for p in prompts]
+    lat, losses, walls = [], [], []
+    step = 0
+    while True:
+        served = False
+        for _ in range(serve_every):
+            m = serve_eng.step_round()
+            if m is None:
+                break
+            served = True
+            lat.append(m.timeline.wall_s)
+            # bar 2: the serve tenant's soft budgets hold every round,
+            # and the trainer never claimed one of its chunks
+            assert m.peak_device_bytes <= SERVE_DEVICE, (
+                m.round_index, m.peak_device_bytes)
+            assert serve_t.host_bytes_used() <= SERVE_HOST, (
+                m.round_index, serve_t.host_bytes_used())
+            assert pool.evictions[("serve", "train")] == 0, dict(
+                pool.evictions)
+            serve_eng.check_invariants()
+        if step < steps:
+            met = train_eng.step(batch)
+            losses.append(float(met.loss))
+            walls.append(met.timeline.wall_s)
+            step += 1
+        elif not served:
+            break
+    pool.check_invariants()
+    toks = [serve_eng.result(r) for r in rids]
+    report = {
+        "serve_rounds": serve_eng.rounds,
+        "train_steps": step,
+        "cross_evictions": {f"{v}<-{b}": n
+                            for (v, b), n in sorted(pool.evictions.items())},
+        "serve_peak_device_bytes": serve_t.peak_device_bytes,
+        "train_peak_device_bytes": train_t.peak_device_bytes,
+        "serve_h2d_bytes": serve_t.stats.h2d_bytes,
+        "train_h2d_bytes": train_t.stats.h2d_bytes,
+    }
+    return toks, lat, losses, walls, report
+
+
+def static_split(prompts, new_tokens, steps):
+    """The baseline: two private pools, each HALF the shared pool on
+    both tiers.  Serving is fine on its half; the trainer's model data
+    does not fit half the host tier and cannot borrow the rest."""
+    toks, lat = solo_serving(prompts, new_tokens,
+                             device=DEVICE_POOL // 2, host=HOST_POOL // 2)
+    try:
+        _, walls = solo_training(steps, device=DEVICE_POOL // 2,
+                                 host=HOST_POOL // 2)
+        oom = False
+    except OutOfMemory:
+        walls, oom = [], True
+    return toks, lat, walls, oom
+
+
+def _throughput(walls):
+    """Steps per modeled second, first (trace/compile) step excluded."""
+    tail = walls[1:] if len(walls) > 1 else walls
+    if not tail:
+        return 0.0
+    return 1.0 / statistics.mean(tail)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI subset: smaller burst, assertions intact")
+    args = ap.parse_args()
+    n_req, new_tokens, steps = (8, 6, 4) if args.smoke else (16, 10, 8)
+    scfg = _serve_cfg()
+    prompts = np.asarray(jax.random.randint(
+        jax.random.key(5), (n_req, 8), 0, scfg.vocab_size))
+
+    solo_toks, solo_lat = solo_serving(prompts, new_tokens)
+    solo_losses, solo_walls = solo_training(steps)
+    co_toks, co_lat, co_losses, co_walls, co_rep = coresident(
+        prompts, new_tokens, steps)
+    sp_toks, sp_lat, sp_walls, sp_oom = static_split(
+        prompts, new_tokens, steps)
+
+    lat_ratio = statistics.mean(co_lat) / statistics.mean(solo_lat)
+    tp_ratio = _throughput(co_walls) / _throughput(solo_walls)
+    sp_lat_ratio = statistics.mean(sp_lat) / statistics.mean(solo_lat)
+    sp_tp = _throughput(sp_walls)
+    sp_tp_ratio = sp_tp / _throughput(solo_walls)
+
+    report = {
+        "device_pool_bytes": DEVICE_POOL,
+        "host_pool_bytes": HOST_POOL,
+        "serve_budgets": [SERVE_DEVICE, SERVE_HOST],
+        "requests": n_req,
+        "train_steps": steps,
+        "latency_ratio": round(lat_ratio, 3),
+        "throughput_ratio": round(tp_ratio, 3),
+        "split_trainer_oom": sp_oom,
+        "split_latency_ratio": round(sp_lat_ratio, 3),
+        "split_throughput_ratio": round(sp_tp_ratio, 3),
+        "coresident": co_rep,
+    }
+    print(json.dumps(report, indent=2))
+
+    # bar 1: chunk residency, shared or not, never changes a token
+    assert co_toks == solo_toks
+    assert sp_toks == solo_toks
+    # bar 4: co-training is the solo math exactly, at acceptable speed
+    assert co_losses == solo_losses, (co_losses, solo_losses)
+    assert lat_ratio <= LATENCY_BAR, lat_ratio
+    assert tp_ratio >= THROUGHPUT_BAR, tp_ratio
+    # bar 5: the static 50/50 split fails at least one bar the shared
+    # pool passes (its trainer cannot even run at half the host tier)
+    assert sp_lat_ratio > LATENCY_BAR or sp_tp_ratio < THROUGHPUT_BAR, (
+        sp_lat_ratio, sp_tp_ratio)
+
+    csv("cotenancy/latency", 0.0,
+        f"co={statistics.mean(co_lat):.3e};solo={statistics.mean(solo_lat):.3e};"
+        f"ratio={lat_ratio:.3f}")
+    csv("cotenancy/throughput", 0.0,
+        f"ratio={tp_ratio:.3f};split_oom={sp_oom};"
+        f"split_tp_ratio={sp_tp_ratio:.3f}")
+
+
+if __name__ == "__main__":
+    main()

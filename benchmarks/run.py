@@ -27,6 +27,7 @@ MODULES = [
     "benchmarks.timeline",        # transfer timeline / Fig. 16 stalls
     "benchmarks.serving_scale",   # paged KV + rank-sharded fleet capacity
     "benchmarks.tiers",           # third-tier (ZeRO-Infinity) host-wall unlock
+    "benchmarks.cotenancy",       # multi-tenant pool: train + serve co-resident
 ]
 
 

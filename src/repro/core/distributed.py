@@ -111,9 +111,18 @@ class DistributedPatrickStarEngine:
         bandwidth_aware_prefetch: bool = True,
         manage_activations: bool = True,
         strict_device_budget: bool = False,
+        pools: "list | None" = None,
+        tenants: "list | None" = None,
     ) -> None:
         if nproc < 2:
             raise ValueError("nproc must be >= 2 (use PatrickStarEngine)")
+        # co-tenancy: one shared pool (+ tenant handle) PER RANK — each
+        # simulated rank owns its own device, so a co-resident serving
+        # fleet shares memory rank-to-rank, never across ranks
+        for arg, label in ((pools, "pools"), (tenants, "tenants")):
+            if arg is not None and len(arg) != nproc:
+                raise ValueError(f"{label}= needs one entry per rank "
+                                 f"({len(arg)} != nproc {nproc})")
         self.nproc = nproc
         # ONE init for all ranks (the paper's replicated init — every rank
         # derives the same values, so initializing nproc times would only
@@ -131,6 +140,8 @@ class DistributedPatrickStarEngine:
                 device_memory_bytes=device_memory_bytes,
                 host_memory_bytes=host_memory_bytes,
                 slow_memory_bytes=slow_memory_bytes,
+                pool=pools[r] if pools is not None else None,
+                tenant=tenants[r] if tenants is not None else None,
                 policy=policy, chunk_size=csize,
                 lr=lr, betas=betas, eps=eps, seed=seed,
                 device_aware_placement=device_aware_placement,
@@ -469,10 +480,16 @@ class DistributedServingEngine:
         host_memory_bytes: int | None = None,
         compiled: bool = False,
         seed: int = 0,
+        pools: "list | None" = None,
+        tenants: "list | None" = None,
         **engine_kw,
     ) -> None:
         if nproc < 1:
             raise ValueError(f"nproc must be >= 1, got {nproc}")
+        for arg, label in ((pools, "pools"), (tenants, "tenants")):
+            if arg is not None and len(arg) != nproc:
+                raise ValueError(f"{label}= needs one entry per rank "
+                                 f"({len(arg)} != nproc {nproc})")
         self.nproc = nproc
         from repro.core.serving import ServingEngine
         from repro.models.layers import AxisCtx
@@ -489,17 +506,19 @@ class DistributedServingEngine:
         init_params = model_cls(cfg, AxisCtx()).init_params(
             jax.random.key(seed))
 
-        def make_core(csize):
+        def make_core(r, csize):
             return engine_cls(
                 model_cls, cfg,
                 device_memory_bytes=device_memory_bytes,
                 host_memory_bytes=host_memory_bytes,
+                pool=pools[r] if pools is not None else None,
+                tenant=tenants[r] if tenants is not None else None,
                 chunk_size=csize, seed=seed, init_params=init_params,
                 **engine_kw)
 
-        rank0 = make_core(engine_kw.pop("chunk_size", None))
-        self.ranks = [rank0] + [make_core(rank0.cmap.chunk_size)
-                                for _ in range(1, nproc)]
+        rank0 = make_core(0, engine_kw.pop("chunk_size", None))
+        self.ranks = [rank0] + [make_core(r, rank0.cmap.chunk_size)
+                                for r in range(1, nproc)]
         self._placement: dict[int, tuple[int, int]] = {}  # gid -> (rank, rid)
         self._next_gid = 0
         self._rr = 0

@@ -65,7 +65,13 @@ from repro.core.chunk import (
     search_chunk_size,
 )
 from repro.core.manager import ChunkManager
-from repro.core.memory import HeteroMemory, OutOfMemory, SchedulePrefetcher
+from repro.core.memory import (
+    HeteroMemory,
+    OutOfMemory,
+    SchedulePrefetcher,
+    Tenant,
+    acquire_pool,
+)
 from repro.core.placement import PlacementPlan, plan_placement
 from repro.core.state import ChunkState, TensorState
 from repro.core.timeline import StepTimeline, TransferTimeline
@@ -156,9 +162,11 @@ class PatrickStarEngine:
         model_cls,
         cfg,
         *,
-        device_memory_bytes: int,
+        device_memory_bytes: int | None = None,
         host_memory_bytes: int | None = None,
         slow_memory_bytes: int | None = None,
+        pool: HeteroMemory | None = None,
+        tenant: Tenant | None = None,
         policy: str = "opt",
         chunk_size: int | None = None,
         warmup_chunk_fraction: float = 0.2,
@@ -188,7 +196,6 @@ class PatrickStarEngine:
         self.model: Model = model_cls(cfg, self.ctx)
         self.lr, self.betas, self.eps = lr, betas, eps
         self.device_aware_placement = device_aware_placement
-        self.policy = policy
         self.nproc = nproc
         self.rank = rank
         self.collective = collective
@@ -236,26 +243,38 @@ class PatrickStarEngine:
         # fp32, momentum and variance are views of a single pool with a
         # single device budget, so eviction sees cross-stream pressure.
         # Under nproc > 1 every rank owns its own pool (its own GPU).
-        self.pool = HeteroMemory(
-            device_capacity_bytes=device_memory_bytes,
-            host_capacity_bytes=host_memory_bytes,
-            slow_capacity_bytes=slow_memory_bytes, policy=policy)
+        # With pool= (+ tenant=), the engine instead joins a SHARED pool
+        # as one tenant — co-resident with e.g. a ServingEngine — and the
+        # budget args become its planning shares, not tier capacities.
+        self._lease = acquire_pool(
+            pool=pool, tenant=tenant,
+            device_memory_bytes=device_memory_bytes,
+            host_memory_bytes=host_memory_bytes,
+            slow_memory_bytes=slow_memory_bytes,
+            policy=policy, timeline=timeline)
+        self.pool = self._lease.pool
+        self.tenant = self._lease.tenant
+        # the pool's policy governs (identical to the policy arg for an
+        # owned pool; an external pool was built with its own)
+        self.policy = self.pool.policy
         # transfer timeline (optional): every tier move / collective is
         # enqueued on finite-bandwidth DMA engines and the per-step report
         # decomposes step time into compute + per-engine stalls.
-        self.timeline = timeline
-        if timeline is not None:
-            self.pool.set_timeline(timeline)
-        self.params_mgr = ChunkManager(
-            self.cmap, dtype=np.float32, name="param", pool=self.pool)
+        self.timeline = self._lease.timeline
+        device_share = self._lease.device_bytes
+        if device_share is None:
+            raise ValueError(
+                "the trainer needs a device budget: pass "
+                "device_memory_bytes= or give its tenant a "
+                "device_budget_bytes soft budget")
+        self.params_mgr = self._lease.stream("param", self.cmap)
         self.os_mgrs = {
-            name: ChunkManager(self.cmap, dtype=np.float32, name=name,
-                               pool=self.pool)
+            name: self._lease.stream(name, self.cmap)
             for name in ("p32", "m", "v")
         }
-        # tracer over the simulated device
+        # tracer over the simulated device (this tenant's share of it)
         self.tracer = RuntimeMemoryTracer(
-            device_memory_bytes, warmup_chunk_fraction=warmup_chunk_fraction)
+            device_share, warmup_chunk_fraction=warmup_chunk_fraction)
         # the chunkable budget must never drop below one operator's working
         # set: the largest layer's param chunks during FWD/BWD (plus, on
         # the distributed plane, one communication group pinned while its
@@ -267,7 +286,9 @@ class PatrickStarEngine:
             for layers in self._group_tensor_names.values() for layer in layers)
         self._model_floor_bytes = max(max_layer_chunks + max(nproc, 1), 5) \
             * self.params_mgr.chunk_bytes
-        self.pool.set_chunkable_memory_fn(self._chunkable_budget)
+        self.pool.set_chunkable_memory_fn(self._chunkable_budget,
+                                          tenant=self.tenant,
+                                          basis_bytes=device_share)
 
         # ---- activation chunk stream (the fifth managed stream) ---------
         # Checkpointed layer inputs become chunks in the same pool: written
@@ -291,10 +312,9 @@ class PatrickStarEngine:
         # iteration).  OPT only: staging consumes the same future-reference
         # schedule, and running it under lru/fifo would contaminate those
         # baselines with future knowledge.
-        self.prefetcher = SchedulePrefetcher(
-            self.pool, lookahead=prefetch_lookahead,
-            timeline=timeline if bandwidth_aware_prefetch else None) \
-            if prefetch and policy == "opt" else None
+        self.prefetcher = self._lease.prefetcher(
+            lookahead=prefetch_lookahead,
+            bandwidth_aware=bandwidth_aware_prefetch) if prefetch else None
 
         # initialize payloads: param fp16 stream + param fp32 copies, for
         # the chunks THIS rank owns (every chunk when nproc == 1); tensors
@@ -324,7 +344,7 @@ class PatrickStarEngine:
     # ------------------------------------------------------------------ utils
     def _moment(self, op: str, phase: str) -> None:
         m = self.tracer.record_moment(op, phase, self._live_activation_bytes)
-        self.pool.set_moment(m)
+        self.tenant.set_moment(m)
         # schedule-driven prefetch: stage the next-k chunk references
         # before the operator at this moment runs (their H2D overlaps it)
         if self.prefetcher is not None and not self.tracer.warmup:
@@ -376,12 +396,11 @@ class PatrickStarEngine:
         if self.act_mgr is not None:
             # batch shape changed: the act chunk layout is stale (and the
             # traced schedules with it — they re-form on the next warm-up)
-            self.pool.unregister_stream("act")
+            self.pool.unregister_stream(self.tenant.qualify("act"))
         names = [f"act.{g.name}.{i}"
                  for g in self.model.groups() for i in range(g.length)]
         self.act_cmap = build_act_chunk_map(names, numel)
-        self.act_mgr = ChunkManager(
-            self.act_cmap, dtype=np.float32, name="act", pool=self.pool)
+        self.act_mgr = self._lease.stream("act", self.act_cmap)
         self._act_numel = numel
 
     def _save_activation(self, gname: str, layer: int, x):
@@ -530,7 +549,8 @@ class PatrickStarEngine:
             if self.timeline is not None:
                 # the traced moment schedule (and with it the per-moment
                 # durations) is stale; re-installed after the re-warm-up
-                self.timeline.install_durations({})
+                self.timeline.install_durations(
+                    {}, tenant=self.tenant.timeline_ns)
         self._batch_sig = sig
         tok = batch.get("tokens")
         if tok is not None and getattr(tok, "ndim", 0) >= 2:
@@ -538,8 +558,8 @@ class PatrickStarEngine:
         self.tracer.begin_iteration()
         return _StepState(
             batch=batch, met=EngineMetrics(),
-            h2d0=self.pool.stats.h2d_bytes, d2h0=self.pool.stats.d2h_bytes,
-            pf0=dataclasses.replace(self.pool.prefetch))
+            h2d0=self.tenant.stats.h2d_bytes, d2h0=self.tenant.stats.d2h_bytes,
+            pf0=dataclasses.replace(self.tenant.prefetch))
 
     def forward_embed(self, st: _StepState) -> None:
         st.t0 = time.perf_counter()
@@ -636,15 +656,16 @@ class PatrickStarEngine:
 
     def end_backward(self, st: _StepState) -> None:
         st.met.bwd_s = time.perf_counter() - st.t0
-        st.met.h2d_bytes = self.pool.stats.h2d_bytes - st.h2d0
-        st.met.d2h_bytes = self.pool.stats.d2h_bytes - st.d2h0
+        st.met.h2d_bytes = self.tenant.stats.h2d_bytes - st.h2d0
+        st.met.d2h_bytes = self.tenant.stats.d2h_bytes - st.d2h0
 
     def adam_chunks(self, st: _StepState) -> None:
         """Chunked ADAM over the chunks THIS rank owns (Section 7: "the
         ADAM stage is executed locally" — after the reduce-scatter the
         owner's grad chunk already holds the cross-rank sum)."""
         st.t0 = time.perf_counter()
-        a_h2d0, a_d2h0 = self.pool.stats.h2d_bytes, self.pool.stats.d2h_bytes
+        a_h2d0, a_d2h0 = (self.tenant.stats.h2d_bytes,
+                          self.tenant.stats.d2h_bytes)
         b1, b2 = self.betas
         t = self.step_count + 1
         bc1 = 1.0 - b1**t
@@ -660,8 +681,8 @@ class PatrickStarEngine:
                 if not self.cmap.chunk_tensors(chunk_id):
                     continue
                 self._adam_chunk(chunk_id, comp_dev, bc1, bc2)
-        st.met.adam_h2d_bytes = self.pool.stats.h2d_bytes - a_h2d0
-        st.met.adam_d2h_bytes = self.pool.stats.d2h_bytes - a_d2h0
+        st.met.adam_h2d_bytes = self.tenant.stats.h2d_bytes - a_h2d0
+        st.met.adam_d2h_bytes = self.tenant.stats.d2h_bytes - a_d2h0
         st.met.adam_s = time.perf_counter() - st.t0
 
     def _adam_chunk(self, chunk_id: int, comp_dev: str,
@@ -726,12 +747,12 @@ class PatrickStarEngine:
     def end_step(self, st: _StepState) -> EngineMetrics:
         met = st.met
         # ----------------------------------- overlap / prefetch accounting
-        pf = self.pool.prefetch
+        pf = self.tenant.prefetch
         met.hidden_h2d_bytes = pf.hidden_h2d_bytes - st.pf0.hidden_h2d_bytes
         met.critical_h2d_bytes = pf.critical_h2d_bytes - st.pf0.critical_h2d_bytes
         met.prefetch_hits = pf.hits - st.pf0.hits
         met.demand_misses = pf.demand_misses - st.pf0.demand_misses
-        met.peak_device_bytes = self.pool.take_step_peak_device_bytes()
+        met.peak_device_bytes = self.tenant.take_step_peak_device_bytes()
 
         # ----------------------------------------------- end of iteration
         self._live_activation_bytes = 0
@@ -758,14 +779,20 @@ class PatrickStarEngine:
                 # exploit to spill/restage activations mid-step
                 self.act_mgr.register_moments(by_stream.get("act", {}))
             if self.prefetcher is not None:
+                # tracer stream labels are tenant-local; the pool's
+                # stream registry keys are tenant-qualified
                 self.prefetcher.install(
-                    self.tracer.reference_sequence(by_stream))
+                    [(m, self.tenant.qualify(s), c) for m, s, c in
+                     self.tracer.reference_sequence(by_stream)])
         if self.timeline is not None:
             met.timeline = self.timeline.take_step()
-            if not self.tracer.warmup and not self.timeline.has_durations:
+            if not self.tracer.warmup and not self.timeline.has_durations_for(
+                    self.tenant.timeline_ns):
                 # first post-warm-up install (and re-install after a
                 # batch-shape re-warm-up): the traced moments now exist
-                self.timeline.install_durations(self._moment_durations())
+                self.timeline.install_durations(
+                    self._moment_durations(),
+                    tenant=self.tenant.timeline_ns)
         self.step_count += 1
         return met
 
@@ -823,8 +850,8 @@ class PatrickStarEngine:
             vocab_size=self.cfg.vocab_size, hidden=self.cfg.d_model,
             batch_tokens=0,
             act_working_bytes=self._act_floor_bytes(),
-            host_capacity_bytes=self.pool.host_capacity,
-            slow_capacity_bytes=self.pool.slow_capacity,
+            host_capacity_bytes=self._lease.host_bytes,
+            slow_capacity_bytes=self._lease.slow_bytes,
         )
 
 

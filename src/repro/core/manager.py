@@ -38,6 +38,7 @@ from repro.core.memory import (
     EvictionPolicy,
     HeteroMemory,
     OutOfMemory,
+    Tenant,
     TransferStats,
 )
 from repro.core.state import (
@@ -52,6 +53,7 @@ __all__ = [
     "EvictionPolicy",
     "HeteroMemory",
     "OutOfMemory",
+    "Tenant",
     "TransferStats",
 ]
 
@@ -79,10 +81,20 @@ class ChunkManager:
         policy: EvictionPolicy | None = None,
         name: str = "chunks",
         pool: HeteroMemory | None = None,
+        tenant: "Tenant | None" = None,
     ) -> None:
         self.cmap = cmap
         self.dtype = np.dtype(dtype)
         self.chunk_bytes = cmap.chunk_size * self.dtype.itemsize
+        if tenant is not None:
+            if pool is None:
+                pool = tenant.pool
+            elif tenant.pool is not pool:
+                raise ValueError(
+                    f"tenant {tenant.name!r} belongs to a different pool")
+            # tenant-qualified pool-wide stream name: two tenants can then
+            # both own e.g. a "param" stream without colliding
+            name = tenant.qualify(name)
         self.name = name
         if pool is None:
             pool = HeteroMemory(
@@ -98,7 +110,7 @@ class ChunkManager:
                 "with pool="
             )
         self.pool = pool
-        pool.register_stream(self)
+        pool.register_stream(self, tenant)
         self.stats = TransferStats()  # this stream's share of pool.stats
 
         self._records = [
@@ -192,11 +204,13 @@ class ChunkManager:
         self.pool.register_moments(self.name, moments)
 
     def set_moment(self, moment: int) -> None:
-        self.pool.set_moment(moment)
+        self.tenant.set_moment(moment)
 
-    def set_chunkable_memory_fn(self, fn: Callable[[], int | None]) -> None:
+    def set_chunkable_memory_fn(self, fn: Callable[[], int | None],
+                                basis_bytes: int | None = None) -> None:
         """Tracer hook: returns the device bytes currently usable for chunks."""
-        self.pool.set_chunkable_memory_fn(fn)
+        self.pool.set_chunkable_memory_fn(fn, tenant=self.tenant,
+                                          basis_bytes=basis_bytes)
 
     # ------------------------------------------------------------- tensor API
     def access_tensor(self, name: str, comp_dev: Device = "device") -> np.ndarray:

@@ -61,6 +61,7 @@ from __future__ import annotations
 
 import bisect
 import dataclasses
+from collections import Counter
 from typing import TYPE_CHECKING, Callable, Iterable, Literal
 
 import numpy as np
@@ -191,6 +192,138 @@ class PrefetchStats:
         self.staged_transfers = self.wasted_stages = 0
 
 
+_DEFAULT_TENANT = "default"
+
+
+class Tenant:
+    """One consumer of a shared :class:`HeteroMemory` pool (Angel-PTM
+    direction: a single memory manager hosting many jobs).
+
+    A tenant sits between the pool and its :class:`ChunkManager` streams:
+    every stream registers under exactly one tenant, and the pool keeps a
+    tenant-scoped mirror of the accounting it already keeps per stream —
+    :class:`TransferStats`, :class:`PrefetchStats`, per-tier usage and the
+    device high-water marks.  Two knobs give the co-tenancy semantics:
+
+    ``priority``
+        Victim selection shields higher-priority tenants: as long as such
+        a tenant sits *within* its soft budget on a tier, a lower-priority
+        tenant's demand can never evict its chunks there (serving's
+        latency-critical kv pages outrank the trainer's cold optimizer
+        states).  Same-or-higher-priority requesters see no shield.
+    ``*_budget_bytes`` (per tier, all optional)
+        *Soft* budgets.  They do not gate admission — the pool's tiers are
+        one shared space with a common overflow region — but they anchor
+        the eviction policy twice: within-budget residency of a
+        higher-priority tenant is protected (above), and chunks of a
+        tenant *over* its soft budget are reclaimed first, so the overflow
+        region drains before anyone's in-budget residency is touched.
+
+    Every pool starts with the ``"default"`` tenant (priority 0, no
+    budgets); single-tenant pools never leave it, and with only the
+    default tenant registered every rule above degenerates to the
+    historical single-owner behavior bit-for-bit (same victims, same
+    counters, same OOM points).
+
+    Each tenant also owns a *moment cursor*: OPT schedules are per-stream
+    and stream names are tenant-qualified (:meth:`qualify`), so one
+    tenant's warm-up clock never positions another tenant's chunks in
+    time — cross-tenant OPT comparisons normalize to distance-from-own-
+    cursor instead of absolute moments.
+    """
+
+    def __init__(
+        self,
+        pool: "HeteroMemory",
+        name: str,
+        *,
+        priority: int = 0,
+        device_budget_bytes: int | None = None,
+        host_budget_bytes: int | None = None,
+        slow_budget_bytes: int | None = None,
+    ) -> None:
+        self.pool = pool
+        self.name = name
+        self.priority = priority
+        self.device_budget_bytes = device_budget_bytes
+        self.host_budget_bytes = host_budget_bytes
+        self.slow_budget_bytes = slow_budget_bytes
+        self.stats = TransferStats()
+        self.prefetch = PrefetchStats()
+        self._device_used = 0
+        self._host_used = 0
+        self._slow_used = 0
+        self.peak_device_bytes = 0
+        self._step_peak_device_bytes = 0
+        self.current_moment = 0
+
+    @property
+    def is_default(self) -> bool:
+        return self.name == _DEFAULT_TENANT
+
+    @property
+    def timeline_ns(self) -> str | None:
+        """Moment namespace on a shared :class:`TransferTimeline` (the
+        default tenant uses the unnamed namespace — byte-compatible with
+        single-tenant pools that never mention tenants)."""
+        return None if self.is_default else self.name
+
+    def qualify(self, stream: str) -> str:
+        """Pool-wide stream name for this tenant's ``stream``.  Identity
+        for the default tenant (historical names), ``"tenant:stream"``
+        otherwise — two engines can then both own a "param" stream."""
+        return stream if self.is_default else f"{self.name}:{stream}"
+
+    # ------------------------------------------------------------ accounting
+    def device_bytes_used(self) -> int:
+        return self._device_used
+
+    def host_bytes_used(self) -> int:
+        return self._host_used
+
+    def slow_bytes_used(self) -> int:
+        return self._slow_used
+
+    def bytes_used(self, dev: Device) -> int:
+        if dev == "device":
+            return self._device_used
+        return self._host_used if dev == "host" else self._slow_used
+
+    def soft_budget(self, dev: Device) -> int | None:
+        if dev == "device":
+            return self.device_budget_bytes
+        return (self.host_budget_bytes if dev == "host"
+                else self.slow_budget_bytes)
+
+    def over_budget(self, dev: Device) -> bool:
+        """Holding more than the soft budget on this tier (no budget
+        configured -> never over: nothing staked out, nothing to drain)."""
+        b = self.soft_budget(dev)
+        return b is not None and self.bytes_used(dev) > b
+
+    def protected_on(self, dev: Device) -> bool:
+        """Within a *configured* soft budget on this tier: lower-priority
+        tenants cannot evict this tenant's chunks there."""
+        b = self.soft_budget(dev)
+        return b is not None and self.bytes_used(dev) <= b
+
+    def take_step_peak_device_bytes(self) -> int:
+        """Tenant-scoped analogue of the pool method: high-water mark since
+        the previous call, re-armed at current usage."""
+        peak = self._step_peak_device_bytes
+        self._step_peak_device_bytes = self._device_used
+        return peak
+
+    # -------------------------------------------------------------- schedule
+    def set_moment(self, moment: int) -> None:
+        """Advance this tenant's moment cursor (and its namespace on the
+        shared timeline).  Other tenants' clocks are untouched."""
+        self.current_moment = moment
+        if self.pool.timeline is not None:
+            self.pool.timeline.advance_to_moment(moment,
+                                                 tenant=self.timeline_ns)
+
+
 class HeteroMemory:
     """The shared tiered (device/host[/slow]) chunk memory space.
 
@@ -246,10 +379,26 @@ class HeteroMemory:
         # OPT future-reference schedules, one per stream:
         # stream -> chunk_id -> sorted list of reference moments.
         self._moments: dict[str, dict[int, list[int]]] = {}
-        self._current_moment = 0
-        # optional callback letting the tracer shrink the device tier by
-        # the live non-model footprint at the current moment.
-        self._chunkable_device_bytes: Callable[[], int | None] | None = None
+        # tenants: every stream belongs to exactly one.  The pool starts
+        # with the "default" tenant (priority 0, no soft budgets);
+        # single-tenant pools never leave it and keep the historical
+        # single-owner behavior bit-for-bit.
+        self._default_tenant = Tenant(self, _DEFAULT_TENANT)
+        self._tenants: dict[str, Tenant] = {
+            _DEFAULT_TENANT: self._default_tenant}
+        # cross-tenant eviction ledger: (victim_tenant, requesting_tenant)
+        # -> chunks demoted.  The co-tenancy protection guarantee is
+        # checkable as evictions[(hi, lo)] == 0 while ``hi`` stays within
+        # its soft budgets (asserted in benchmarks/cotenancy.py).
+        self.evictions: Counter[tuple[str, str]] = Counter()
+        # optional callbacks letting each tenant's tracer shrink the
+        # device tier by its live non-model footprint; the deduction is
+        # measured against that tenant's device share.
+        self._chunkable_fns: dict[
+            str, tuple[Tenant, Callable[[], int | None], int | None]] = {}
+        # tenants whose soft budget shielded candidates in the most recent
+        # victim scan — names a multi-tenant OOM refusal in make_room.
+        self._blocked_by: set[str] = set()
         # chunks brought to device by the prefetcher, awaiting their use
         self._staged: set[tuple[str, int]] = set()
         # optional transfer timeline: every tier move is enqueued on a
@@ -260,10 +409,63 @@ class HeteroMemory:
         # overlappable (issued ahead of demand), not consumer waits.
         self._staging = 0
 
+    # --------------------------------------------------------------- tenants
+    @property
+    def default_tenant(self) -> Tenant:
+        return self._default_tenant
+
+    @property
+    def tenants(self) -> dict[str, Tenant]:
+        return dict(self._tenants)
+
+    @property
+    def _current_moment(self) -> int:
+        """Historical single-tenant cursor — the default tenant's clock."""
+        return self._default_tenant.current_moment
+
+    def create_tenant(
+        self,
+        name: str,
+        *,
+        priority: int = 0,
+        device_budget_bytes: int | None = None,
+        host_budget_bytes: int | None = None,
+        slow_budget_bytes: int | None = None,
+    ) -> Tenant:
+        """Add a named tenant with per-tier soft budgets and an eviction
+        priority (see :class:`Tenant`).  Streams register under it via
+        ``ChunkManager(..., tenant=)`` / :meth:`PoolLease.stream`."""
+        if not name or ":" in name:
+            raise ValueError(
+                f"invalid tenant name {name!r} (non-empty, no ':')")
+        if name in self._tenants:
+            raise ValueError(f"tenant {name!r} already exists")
+        t = Tenant(self, name, priority=priority,
+                   device_budget_bytes=device_budget_bytes,
+                   host_budget_bytes=host_budget_bytes,
+                   slow_budget_bytes=slow_budget_bytes)
+        self._tenants[name] = t
+        return t
+
+    def staged_count(self, tenant: Tenant | None = None) -> int:
+        """In-flight staged chunks, pool-wide or for one tenant (the
+        prefetcher in-flight caps are per tenant on shared pools — one
+        tenant's staging burst must not throttle another's)."""
+        if tenant is None:
+            return len(self._staged)
+        return sum(1 for s, _c in self._staged
+                   if s in self._streams and self._streams[s].tenant is tenant)
+
     # --------------------------------------------------------------- streams
-    def register_stream(self, mgr: "ChunkManager") -> None:
+    def register_stream(self, mgr: "ChunkManager",
+                        tenant: Tenant | None = None) -> None:
         if mgr.name in self._streams:
             raise ValueError(f"stream name {mgr.name!r} already registered")
+        t = tenant or self._default_tenant
+        if t.pool is not self:
+            raise ValueError(
+                f"tenant {t.name!r} belongs to a different pool")
+        mgr.tenant = t
         self._streams[mgr.name] = mgr
 
     def unregister_stream(self, name: str) -> None:
@@ -305,11 +507,17 @@ class HeteroMemory:
         return self._slow_used
 
     def _charge(self, mgr: "ChunkManager", dev: Device, nbytes: int) -> None:
+        t = mgr.tenant
         if dev == "device":
             self._device_used += nbytes
             mgr._device_used += nbytes
+            t._device_used += nbytes
             if mgr._device_used > mgr._peak_device_used:
                 mgr._peak_device_used = mgr._device_used
+            if t._device_used > t.peak_device_bytes:
+                t.peak_device_bytes = t._device_used
+            if t._device_used > t._step_peak_device_bytes:
+                t._step_peak_device_bytes = t._device_used
             if self._device_used > self.peak_device_bytes:
                 self.peak_device_bytes = self._device_used
             if self._device_used > self._step_peak_device_bytes:
@@ -317,20 +525,26 @@ class HeteroMemory:
         elif dev == "host":
             self._host_used += nbytes
             mgr._host_used += nbytes
+            t._host_used += nbytes
         else:
             self._slow_used += nbytes
             mgr._slow_used += nbytes
+            t._slow_used += nbytes
 
     def _uncharge(self, mgr: "ChunkManager", dev: Device, nbytes: int) -> None:
+        t = mgr.tenant
         if dev == "device":
             self._device_used -= nbytes
             mgr._device_used -= nbytes
+            t._device_used -= nbytes
         elif dev == "host":
             self._host_used -= nbytes
             mgr._host_used -= nbytes
+            t._host_used -= nbytes
         else:
             self._slow_used -= nbytes
             mgr._slow_used -= nbytes
+            t._slow_used -= nbytes
 
     def take_step_peak_device_bytes(self) -> int:
         """Device-tier high-water mark since the previous call, then re-arm
@@ -345,6 +559,8 @@ class HeteroMemory:
         counters, and assert no tier budget is exceeded (test/debug hook;
         never needed on the hot path)."""
         dev = host = slow = 0
+        by_tenant: dict[str, list[int]] = {
+            name: [0, 0, 0] for name in self._tenants}
         for mgr in self._streams.values():
             mdev = mhost = mslow = 0
             for rec in mgr._records:
@@ -359,9 +575,21 @@ class HeteroMemory:
             assert mdev == mgr._device_used, (mgr.name, mdev, mgr._device_used)
             assert mhost == mgr._host_used, (mgr.name, mhost, mgr._host_used)
             assert mslow == mgr._slow_used, (mgr.name, mslow, mgr._slow_used)
+            acc = by_tenant[mgr.tenant.name]
+            acc[0] += mdev
+            acc[1] += mhost
+            acc[2] += mslow
             dev += mdev
             host += mhost
             slow += mslow
+        # tenant mirrors agree with their streams' sums, and the tenants'
+        # sums agree with the pool totals (per-tenant counters sum to pool
+        # usage — the co-tenancy accounting invariant).
+        for name, t in self._tenants.items():
+            tdev, thost, tslow = by_tenant[name]
+            assert tdev == t._device_used, (name, tdev, t._device_used)
+            assert thost == t._host_used, (name, thost, t._host_used)
+            assert tslow == t._slow_used, (name, tslow, t._slow_used)
         assert dev == self._device_used, (dev, self._device_used)
         assert host == self._host_used, (host, self._host_used)
         assert slow == self._slow_used, (slow, self._slow_used)
@@ -423,36 +651,68 @@ class HeteroMemory:
         self._moments[stream] = {c: sorted(ms) for c, ms in moments.items()}
 
     def set_moment(self, moment: int) -> None:
-        self._current_moment = moment
-        if self.timeline is not None:
-            self.timeline.advance_to_moment(moment)
+        """Advance the *default tenant's* moment cursor (the single-tenant
+        entry point; engines on named tenants call their
+        :meth:`Tenant.set_moment`)."""
+        self._default_tenant.set_moment(moment)
 
     def set_timeline(self, timeline: TransferTimeline | None) -> None:
         """Attach a transfer timeline: every tier move (and collective)
         from here on is enqueued on its DMA engines."""
         self.timeline = timeline
 
-    def set_chunkable_memory_fn(self, fn: Callable[[], int | None]) -> None:
-        """Tracer hook: returns the device bytes currently usable for chunks."""
-        self._chunkable_device_bytes = fn
+    def set_chunkable_memory_fn(self, fn: Callable[[], int | None],
+                                tenant: Tenant | None = None,
+                                basis_bytes: int | None = None) -> None:
+        """Tracer hook: returns the device bytes currently usable for the
+        tenant's chunks.  On shared pools each tenant installs its own fn;
+        the shortfall it reports (vs ``basis_bytes``, the device share the
+        fn measures against — its lease/planning share) shrinks the
+        pool-wide admission budget."""
+        t = tenant or self._default_tenant
+        self._chunkable_fns[t.name] = (t, fn, basis_bytes)
 
     def device_budget(self) -> int | None:
+        if not self._chunkable_fns:
+            return self.device_capacity
+        if self.device_capacity is None:
+            # unbounded tier: the throttle IS the budget (tightest wins)
+            dyns = [fn() for _t, fn, _b in self._chunkable_fns.values()]
+            dyns = [d for d in dyns if d is not None]
+            return min(dyns) if dyns else None
+        # each tenant's fn reports its chunkable bytes against its own
+        # device share (the basis registered with the fn, else its soft
+        # budget, else the whole tier); the shortfall is that tenant's
+        # live non-model footprint and shrinks the shared tier for
+        # everyone.  Single tenant: basis == cap, and
+        # cap - max(0, cap - dyn) == min(cap, dyn), the historical value.
         budget = self.device_capacity
-        if self._chunkable_device_bytes is not None:
-            dyn = self._chunkable_device_bytes()
-            if dyn is not None:
-                budget = dyn if budget is None else min(budget, dyn)
+        for t, fn, basis in self._chunkable_fns.values():
+            dyn = fn()
+            if dyn is None:
+                continue
+            if basis is None:
+                basis = t.device_budget_bytes
+            if basis is None:
+                basis = self.device_capacity
+            budget -= max(0, basis - dyn)
         return budget
 
     def _next_use(self, stream: str, chunk_id: int, at: int | None = None) -> int:
         ms = self._moments.get(stream, {}).get(chunk_id)
         if not ms:
             return _NEVER  # never used again -> perfect victim
+        if at is None:
+            # the stream's own tenant clock: one tenant's schedule is
+            # meaningless under another tenant's moment cursor
+            mgr = self._streams.get(stream)
+            at = (mgr.tenant.current_moment if mgr is not None
+                  else self._default_tenant.current_moment)
         # bisect_left: a reference AT the query moment is still upcoming
         # (several chunks share one operator moment and are accessed in
         # sequence after it is recorded) — treating it as past would mark
         # a chunk the running operator needs as a perfect victim.
-        i = bisect.bisect_left(ms, self._current_moment if at is None else at)
+        i = bisect.bisect_left(ms, at)
         return ms[i] if i < len(ms) else _NEVER
 
     # --------------------------------------------------------------- paging
@@ -478,17 +738,38 @@ class HeteroMemory:
                 # staged chunks live on the device, so this move is d2h:
                 # the chunk was pulled host-side before its device use and
                 # the staged H2D will be re-paid later — a wasted stage.
-                self.prefetch.wasted_stages += 1
+                for pf in (self.prefetch, mgr.tenant.prefetch):
+                    pf.wasted_stages += 1
                 self._staged.discard(key)
                 if self.timeline is not None:
                     self.timeline.cancel(key)
             # moves run between adjacent tiers only: a slow<->device
-            # demand routes through host (s2h + h2d, both legs waited on)
-            for hop in self._route(rec.location, dev):
-                self.make_room(hop, mgr.chunk_bytes, exclude=key)
-                self._move(mgr, rec, hop, kind="demand")
+            # demand routes through host (s2h + h2d, both legs waited on).
+            # Pin across the route: ``exclude`` shields the chunk from
+            # direct victim picks, but an eviction CASCADE excludes only
+            # its own incoming chunk — without the pin it could demote
+            # this record off its mid-route tier (e.g. the h2d leg's
+            # make_room bouncing it host->slow right before the move).
+            rec.pinned += 1
+            try:
+                for hop in self._route(rec.location, dev):
+                    # the chunk vacates its source tier as it lands on
+                    # the next: let the capacity checks along the
+                    # eviction cascade see those bytes as in flight,
+                    # else a full mid-route tier deadlocks on the
+                    # chunk's own (pinned, departing) residency
+                    src = rec.location
+                    self._uncharge(mgr, src, mgr.chunk_bytes)
+                    try:
+                        self.make_room(hop, mgr.chunk_bytes, exclude=key)
+                    finally:
+                        self._charge(mgr, src, mgr.chunk_bytes)
+                    self._move(mgr, rec, hop, kind="demand")
+            finally:
+                rec.pinned -= 1
         elif dev == "device" and key in self._staged:
-            self.prefetch.hits += 1
+            for pf in (self.prefetch, mgr.tenant.prefetch):
+                pf.hits += 1
             self._staged.discard(key)
             if self.timeline is not None:
                 # the consumer arrived: a staged transfer still on the
@@ -543,7 +824,7 @@ class HeteroMemory:
         return self.tiers[i + 1] if i + 1 < len(self.tiers) else self.tiers[i - 1]
 
     def _account_transfer(self, mgr: "ChunkManager", *, link: str) -> None:
-        for st in (self.stats, mgr.stats):
+        for st in (self.stats, mgr.stats, mgr.tenant.stats):
             if link == "h2d":
                 st.h2d_bytes += mgr.chunk_bytes
                 st.h2d_count += 1
@@ -577,15 +858,16 @@ class HeteroMemory:
         link = _LINKS[(rec.location, to_dev)]
         self._account_transfer(mgr, link=link)
         if link == "h2d":
-            if kind == "stage":
-                self.prefetch.hidden_h2d_bytes += mgr.chunk_bytes
-                self.prefetch.staged_transfers += 1
-            else:
-                # demand misses and evictions bounced back to the device
-                # are traffic the consuming operator waits on
-                self.prefetch.critical_h2d_bytes += mgr.chunk_bytes
-                if kind == "demand":
-                    self.prefetch.demand_misses += 1
+            for pf in (self.prefetch, mgr.tenant.prefetch):
+                if kind == "stage":
+                    pf.hidden_h2d_bytes += mgr.chunk_bytes
+                    pf.staged_transfers += 1
+                else:
+                    # demand misses and evictions bounced back to the
+                    # device are traffic the consuming operator waits on
+                    pf.critical_h2d_bytes += mgr.chunk_bytes
+                    if kind == "demand":
+                        pf.demand_misses += 1
         end: float | None = None
         if self.timeline is not None:
             key = (mgr.name, rec.chunk_id)
@@ -622,13 +904,33 @@ class HeteroMemory:
         return end
 
     def _usage_report(self) -> str:
-        """Per-tier, per-stream usage breakdown for OutOfMemory messages."""
+        """Per-tier, per-stream usage breakdown for OutOfMemory messages.
+        On multi-tenant pools streams group under their tenant, each
+        tenant annotated with its tier usage (and soft budget when set) —
+        a refusal must be explainable per tenant, not just per stream."""
         lines = []
+        multi = len(self._tenants) > 1
         for dev in self.tiers:
             cap = self._static_capacity(dev)
-            per = ", ".join(
-                f"{name}={self._stream_used(mgr, dev)}"
-                for name, mgr in sorted(self._streams.items()))
+            if multi:
+                groups = []
+                for tname, t in sorted(self._tenants.items()):
+                    per_t = ", ".join(
+                        f"{name}={self._stream_used(mgr, dev)}"
+                        for name, mgr in sorted(self._streams.items())
+                        if mgr.tenant is t)
+                    if not per_t:
+                        continue
+                    budget = t.soft_budget(dev)
+                    used = t.bytes_used(dev)
+                    head = (f"{tname}[{used}/{budget}]" if budget is not None
+                            else f"{tname}[{used}]")
+                    groups.append(f"{head}: {per_t}")
+                per = "; ".join(groups)
+            else:
+                per = ", ".join(
+                    f"{name}={self._stream_used(mgr, dev)}"
+                    for name, mgr in sorted(self._streams.items()))
             lines.append(
                 f"  {dev}: used={self._used(dev)}"
                 f"/{'unbounded' if cap is None else cap}"
@@ -644,6 +946,26 @@ class HeteroMemory:
     def make_room(
         self, dev: Device, nbytes: int, *, exclude: tuple[str, int]
     ) -> None:
+        # the requesting tenant — the incoming chunk's owner — drives the
+        # priority shield at this hop
+        emgr = self._streams.get(exclude[0])
+        req = emgr.tenant if emgr is not None else self._default_tenant
+        # a requester with a soft budget on this tier keeps ITSELF inside
+        # it when it can: its own coldest chunks demote first — the
+        # eviction pressure a solo engine's pool cap exerts, reproduced
+        # against the tenant share on shared pools (otherwise a budgeted
+        # tenant would sprawl into the peer's headroom and its "budgets
+        # hold" guarantee would be vacuous).  Soft: with no own victim
+        # the overflow stands; budgets never hard-gate admission.
+        budget = req.soft_budget(dev)
+        if budget is not None:
+            rounds = sum(len(m._records) for m in self._streams.values()) + 1
+            while req.bytes_used(dev) + nbytes > budget and rounds > 0:
+                victim = self._pick_victim(dev, exclude=exclude, within=req)
+                if victim is None:
+                    break
+                rounds -= 1
+                self._evict(*victim, from_dev=dev, by=req)
         cap = self._capacity(dev)
         if cap is None:
             return
@@ -652,13 +974,19 @@ class HeteroMemory:
         # #chunks rounds" is a genuine capacity failure, not bad luck.
         rounds = sum(len(m._records) for m in self._streams.values()) + 1
         while self._used(dev) + nbytes > cap:
-            victim = self._pick_victim(dev, exclude=exclude)
+            victim = self._pick_victim(dev, exclude=exclude, by=req)
             if victim is None:
+                blocked = ""
+                if self._blocked_by:
+                    blocked = (
+                        "; candidates remain but are shielded by the soft "
+                        "budget of higher-priority tenant(s): "
+                        + ", ".join(sorted(self._blocked_by)))
                 raise OutOfMemory(
                     f"unified pool: cannot fit {nbytes} bytes on {dev}: "
                     f"used={self._used(dev)} cap={cap} and no evictable "
                     f"chunk (every resident is pinned, in COMPUTE, or the "
-                    f"incoming chunk itself)\n{self._usage_report()}"
+                    f"incoming chunk itself){blocked}\n{self._usage_report()}"
                 )
             if rounds <= 0:
                 raise OutOfMemory(
@@ -668,13 +996,20 @@ class HeteroMemory:
                     f"bounce between full tiers)\n{self._usage_report()}"
                 )
             rounds -= 1
-            self._evict(*victim, from_dev=dev)
+            self._evict(*victim, from_dev=dev, by=req)
 
     def _evictable(
-        self, dev: Device, exclude: tuple[str, int]
+        self, dev: Device, exclude: tuple[str, int],
+        by: Tenant | None = None,
+        within: "Tenant | None" = None,
     ) -> list[tuple["ChunkManager", "_ChunkRecord"]]:
         out = []
+        self._blocked_by = set()
         for mgr in self._streams.values():
+            if within is not None and mgr.tenant is not within:
+                # self-eviction-to-budget scan: only the requester's own
+                # residency is a candidate
+                continue
             for rec in mgr._records:
                 if (mgr.name, rec.chunk_id) == exclude:
                     continue
@@ -684,21 +1019,46 @@ class HeteroMemory:
                     continue
                 if mgr.chunk_state(rec.chunk_id) is ChunkState.COMPUTE:
                     continue
+                t = mgr.tenant
+                if (by is not None and t is not by
+                        and t.priority > by.priority and t.protected_on(dev)):
+                    # priority shield: a higher-priority tenant within its
+                    # soft budget never loses a chunk to a lower-priority
+                    # tenant's demand
+                    self._blocked_by.add(t.name)
+                    continue
                 out.append((mgr, rec))
         return out
 
     def _pick_victim(
-        self, dev: Device, *, exclude: tuple[str, int]
+        self, dev: Device, *, exclude: tuple[str, int],
+        by: Tenant | None = None,
+        within: "Tenant | None" = None,
     ) -> tuple["ChunkManager", "_ChunkRecord"] | None:
-        cands = self._evictable(dev, exclude)
+        cands = self._evictable(dev, exclude, by, within)
         if not cands:
             return None
+        # tenants over their soft budget give up chunks first (the shared
+        # overflow region drains before anyone's in-budget residency);
+        # single-tenant pools never configure budgets, so the urgency key
+        # is constant and the historical ordering — ties included — is
+        # preserved exactly.
         if self.policy == "fifo":
-            return min(cands, key=lambda mr: mr[1].arrival)
+            return min(cands, key=lambda mr: (
+                0 if mr[0].tenant.over_budget(dev) else 1, mr[1].arrival))
         if self.policy == "lru":
-            return min(cands, key=lambda mr: mr[1].last_use)
-        # OPT / Belady: farthest next use according to the tracer schedule.
-        return max(cands, key=lambda mr: self._next_use(mr[0].name, mr[1].chunk_id))
+            return min(cands, key=lambda mr: (
+                0 if mr[0].tenant.over_budget(dev) else 1, mr[1].last_use))
+        # OPT / Belady: farthest next use according to the tracer
+        # schedule.  Cross-tenant moment clocks are incomparable absolute
+        # values (a serving tenant's moments grow without bound while a
+        # trainer's reset each step), so compare the *distance* from each
+        # chunk's own tenant cursor — a constant offset within one tenant,
+        # hence argmax- and tie-break-identical on single-tenant pools.
+        return max(cands, key=lambda mr: (
+            0 if not mr[0].tenant.over_budget(dev) else 1,
+            self._next_use(mr[0].name, mr[1].chunk_id)
+            - mr[0].tenant.current_moment))
 
     def _evict(
         self,
@@ -706,6 +1066,7 @@ class HeteroMemory:
         rec: "_ChunkRecord",
         *,
         from_dev: Device,
+        by: Tenant | None = None,
         _depth: int = 0,
     ) -> None:
         if _depth > sum(len(m._records) for m in self._streams.values()):
@@ -717,13 +1078,18 @@ class HeteroMemory:
             )
         key = (mgr.name, rec.chunk_id)
         if key in self._staged:
-            self.prefetch.wasted_stages += 1
+            for pf in (self.prefetch, mgr.tenant.prefetch):
+                pf.wasted_stages += 1
             self._staged.discard(key)
             if self.timeline is not None:
                 self.timeline.cancel(key)
         if mgr.chunk_state(rec.chunk_id) is ChunkState.FREE:
             self.release_payload(mgr, rec.chunk_id)
             return
+        if by is not None:
+            # who-demoted-whom ledger (FREE releases above lose nothing
+            # and are not evictions in the accountable sense)
+            self.evictions[(mgr.tenant.name, by.name)] += 1
         to_dev = self._evict_target(from_dev)
         # spill destination bound: a bottom-tier bounce (two-tier:
         # host->device, the paper's margin-space overflow of Fig. 10's
@@ -737,7 +1103,10 @@ class HeteroMemory:
         if cap is not None:
             rounds = sum(len(m._records) for m in self._streams.values()) + 1
             while self._used(to_dev) + mgr.chunk_bytes > cap:
-                victim = self._pick_victim(to_dev, exclude=key)
+                # at this hop the incoming chunk is the demoted victim, so
+                # ITS tenant is the requester for the priority shield
+                victim = self._pick_victim(to_dev, exclude=key,
+                                           by=mgr.tenant)
                 if victim is None:
                     raise OutOfMemory(
                         f"unified pool: eviction target {to_dev} full and "
@@ -750,7 +1119,8 @@ class HeteroMemory:
                         f"{self._usage_report()}"
                     )
                 rounds -= 1
-                self._evict(*victim, from_dev=to_dev, _depth=_depth + 1)
+                self._evict(*victim, from_dev=to_dev, by=mgr.tenant,
+                            _depth=_depth + 1)
         self._move(mgr, rec, to_dev, kind="evict")
 
     # -------------------------------------------------------------- staging
@@ -799,8 +1169,20 @@ class HeteroMemory:
 
     def _stage_locked(self, mgr: "ChunkManager", rec: "_ChunkRecord",
                       key: tuple[str, int], t_use: int) -> bool:
-        cap = self._capacity("device")
-        while cap is not None and self._used("device") + mgr.chunk_bytes > cap:
+        # a budgeted tenant's staging makes room against the TIGHTER of
+        # the shared tier cap and its own device soft budget — speculative
+        # prefetch must not sprawl past the share its demand path defends
+        budget = mgr.tenant.soft_budget("device")
+
+        def _need_room() -> bool:
+            cap = self._capacity("device")
+            if cap is not None and self._used("device") + mgr.chunk_bytes > cap:
+                return True
+            return (budget is not None
+                    and mgr.tenant.bytes_used("device") + mgr.chunk_bytes
+                    > budget)
+
+        while _need_room():
             # one sweep over device residents: collect the best evictable
             # victim (not needed before t_use, farthest as seen from it)
             # and the farthest-from-t_use value over ALL residents — if
@@ -810,6 +1192,13 @@ class HeteroMemory:
             best_at_use = -1
             resident_max = -1
             for omgr in self._streams.values():
+                if omgr.tenant is not mgr.tenant:
+                    # staging stays tenant-scoped: a tenant's warm-up
+                    # prefetch reasons in its own moment clock and must
+                    # never reclaim another tenant's residency — cross-
+                    # tenant space is taken only on the demand path, under
+                    # the priority shield.
+                    continue
                 for orec in omgr._records:
                     if orec.payload is None or orec.location != "device":
                         continue
@@ -829,8 +1218,7 @@ class HeteroMemory:
                         best = (omgr, orec)
             if best is None or best_at_use < resident_max:
                 return False
-            self._evict(*best, from_dev="device")
-            cap = self._capacity("device")
+            self._evict(*best, from_dev="device", by=mgr.tenant)
         # a slow-resident chunk needs a two-hop stage: s2h onto the host,
         # then h2d chained after it on the timeline.  Host room is made
         # under the staging flag, so any demotions it cascades stay
@@ -872,9 +1260,15 @@ class SchedulePrefetcher:
     def __init__(
         self, pool: HeteroMemory, *, lookahead: int = 6, max_inflight: int = 2,
         timeline: TransferTimeline | None = None, bw_inflight_cap: int = 16,
-        bw_horizon: int = 64,
+        bw_horizon: int = 64, tenant: Tenant | None = None,
     ) -> None:
         self.pool = pool
+        # the tenant whose schedule this queue serves: in-flight caps
+        # count only its staged chunks and the bandwidth-aware policy
+        # reads its moment namespace on a shared timeline.  None (the
+        # historical single-owner construction) behaves pool-wide.
+        self.tenant = tenant
+        self._ns = tenant.timeline_ns if tenant is not None else None
         self.lookahead = lookahead
         # staged-but-not-yet-consumed chunks are capped: staging far past
         # the working set only parks chunks where the next demand miss
@@ -912,7 +1306,8 @@ class SchedulePrefetcher:
 
     @property
     def bandwidth_aware(self) -> bool:
-        return self.timeline is not None and self.timeline.has_durations
+        return (self.timeline is not None
+                and self.timeline.has_durations_for(self._ns))
 
     def advance(self, moment: int) -> int:
         """Stage upcoming references; returns how many chunks were staged."""
@@ -924,7 +1319,7 @@ class SchedulePrefetcher:
         hi = bisect.bisect_right(self._moments, moment + self.lookahead)
         staged = 0
         for m, stream, chunk_id in self._refs[lo:hi]:
-            if len(self.pool._staged) >= self.max_inflight:
+            if self.pool.staged_count(self.tenant) >= self.max_inflight:
                 break
             if self.pool.stage(stream, chunk_id):
                 staged += 1
@@ -936,7 +1331,7 @@ class SchedulePrefetcher:
         lo = bisect.bisect_right(self._moments, moment)
         staged = 0
         for m, stream, chunk_id in self._refs[lo:lo + self.bw_horizon]:
-            if len(self.pool._staged) >= self.bw_inflight_cap:
+            if self.pool.staged_count(self.tenant) >= self.bw_inflight_cap:
                 break
             mgr = self.pool._streams.get(stream)
             if mgr is None or not 0 <= chunk_id < len(mgr._records):
@@ -948,7 +1343,7 @@ class SchedulePrefetcher:
                 # two-hop stage: the chunk must first cross the slow lane,
                 # so its projected landing sums both links' backlogs
                 ready += tl.projected_ready_s("s2h", mgr.chunk_bytes)
-            if ready <= tl.time_until(m):
+            if ready <= tl.time_until(m, tenant=self._ns):
                 # fits inside the projected idle window before its use
                 if self.pool.stage(stream, chunk_id):
                     staged += 1
@@ -1088,3 +1483,114 @@ class GatherPrefetcher:
             else:
                 break
         return fetched
+
+
+@dataclasses.dataclass
+class PoolLease:
+    """One engine's handle on a :class:`HeteroMemory` pool.
+
+    Both engines build their memory plane through :func:`acquire_pool`
+    so the owned-pool path (budget args -> private ``HeteroMemory``) and
+    the external-pool path (shared pool + :class:`Tenant`) cannot drift:
+    the lease resolves the tier *shares* the engine should plan against
+    (tenant soft budgets, falling back to the pool caps), constructs its
+    tenant-tagged streams, and installs its tenant-scoped prefetcher.
+
+    ``device_bytes``/``host_bytes``/``slow_bytes`` are the engine's
+    planning shares — for an owned pool they equal the pool caps; for a
+    shared pool they are the tenant's soft budgets (the pool itself only
+    enforces the hard tier caps; shares bound *planning*, the overflow
+    region absorbs transients).
+    """
+
+    pool: "HeteroMemory"
+    tenant: Tenant
+    device_bytes: int | None
+    host_bytes: int | None
+    slow_bytes: int | None
+    timeline: TransferTimeline | None
+    owned: bool
+
+    def qualify(self, stream: str) -> str:
+        return self.tenant.qualify(stream)
+
+    def stream(self, name, cmap, *, dtype=np.float32):
+        """A :class:`ChunkManager` on this lease's pool under its tenant
+        (the manager tenant-qualifies ``name`` itself)."""
+        from repro.core.manager import ChunkManager
+
+        return ChunkManager(cmap, dtype=dtype, name=name,
+                            pool=self.pool, tenant=self.tenant)
+
+    def prefetcher(self, *, lookahead: int,
+                   bandwidth_aware: bool = True) -> SchedulePrefetcher | None:
+        """Tenant-scoped OPT prefetcher (None under lru/fifo policies —
+        they have no schedule to follow)."""
+        if self.pool.policy != "opt":
+            return None
+        return SchedulePrefetcher(
+            self.pool, lookahead=lookahead,
+            timeline=self.timeline if bandwidth_aware else None,
+            tenant=self.tenant)
+
+
+def acquire_pool(
+    *,
+    pool: "HeteroMemory | None" = None,
+    tenant: Tenant | None = None,
+    device_memory_bytes: int | None = None,
+    host_memory_bytes: int | None = None,
+    slow_memory_bytes: int | None = None,
+    policy: EvictionPolicy = "opt",
+    timeline: TransferTimeline | None = None,
+) -> PoolLease:
+    """Resolve an engine's memory plane to a :class:`PoolLease`.
+
+    Two modes, one construction path (so they cannot drift):
+
+    * **Owned** (``pool=None``): build a private :class:`HeteroMemory`
+      from the budget args — the historical single-tenant constructor
+      path, running on the pool's default tenant.
+    * **External** (``pool=`` given): join a shared pool under
+      ``tenant`` (default tenant if omitted).  The budget args then only
+      *override* the engine's planning shares; tier capacities belong to
+      the pool, and the timeline must already be attached to it.
+    """
+    if pool is None:
+        if tenant is not None:
+            raise ValueError("tenant= requires an external pool=")
+        if device_memory_bytes is None:
+            raise ValueError(
+                "an owned pool needs device_memory_bytes= (pass pool= to "
+                "join an existing one)")
+        pool = HeteroMemory(
+            device_capacity_bytes=device_memory_bytes,
+            host_capacity_bytes=host_memory_bytes,
+            slow_capacity_bytes=slow_memory_bytes,
+            policy=policy)
+        if timeline is not None:
+            pool.set_timeline(timeline)
+        return PoolLease(pool, pool.default_tenant, device_memory_bytes,
+                         host_memory_bytes, slow_memory_bytes,
+                         timeline, owned=True)
+    t = tenant if tenant is not None else pool.default_tenant
+    if t.pool is not pool:
+        raise ValueError(
+            f"tenant {t.name!r} belongs to a different pool")
+    if timeline is not None and timeline is not pool.timeline:
+        raise ValueError(
+            "external pools own their timeline: attach it with "
+            "pool.set_timeline() before constructing engines on it")
+    dev = (device_memory_bytes if device_memory_bytes is not None
+           else t.device_budget_bytes)
+    if dev is None:
+        dev = pool.device_capacity
+    host = (host_memory_bytes if host_memory_bytes is not None
+            else t.host_budget_bytes)
+    if host is None:
+        host = pool.host_capacity
+    slow = (slow_memory_bytes if slow_memory_bytes is not None
+            else t.slow_budget_bytes)
+    if slow is None:
+        slow = pool.slow_capacity
+    return PoolLease(pool, t, dev, host, slow, pool.timeline, owned=False)

@@ -105,6 +105,12 @@ def plan_placement(
     (``os_slow_groups``) instead of making the configuration
     inadmissible — the ZeRO-Infinity direction.  Without a slow tier the
     plan is unchanged: overflow remains the pool's OutOfMemory to raise.
+
+    On a shared multi-tenant pool the caller passes its *tenant's* tier
+    shares (``PoolLease.host_bytes`` / ``slow_bytes`` — soft budgets,
+    falling back to the pool caps), not the raw pool capacities: each
+    tenant plans inside its own share and the pool's common overflow
+    region absorbs transients at eviction-priority cost.
     """
     # one OS group = param fp32 + momentum + variance, all fp32
     group_bytes = 3 * chunk_size_elems * 4

@@ -81,7 +81,12 @@ from repro.core.chunk import (
     search_chunk_size,
 )
 from repro.core.manager import ChunkManager
-from repro.core.memory import HeteroMemory, SchedulePrefetcher
+from repro.core.memory import (
+    HeteroMemory,
+    SchedulePrefetcher,
+    Tenant,
+    acquire_pool,
+)
 from repro.core.state import TensorState
 from repro.core.timeline import StepTimeline, TransferTimeline
 
@@ -152,9 +157,11 @@ class ServingEngine:
         model_cls,
         cfg,
         *,
-        device_memory_bytes: int,
+        device_memory_bytes: int | None = None,
         host_memory_bytes: int | None = None,
         slow_memory_bytes: int | None = None,
+        pool: HeteroMemory | None = None,
+        tenant: Tenant | None = None,
         policy: str = "opt",
         chunk_size: int | None = None,
         max_seq_len: int = 128,
@@ -183,9 +190,24 @@ class ServingEngine:
                     "paged KV requires the managed kv stream (manage_kv=True);"
                     " the unmanaged baseline holds whole-horizon raw arrays")
         self._page_tokens = page_tokens
-        self.device_capacity = device_memory_bytes
-        self.host_capacity = host_memory_bytes
-        self.slow_capacity = slow_memory_bytes
+        # owned pool: capacities == tier caps (historical behavior).
+        # shared pool (pool= + tenant=): capacities are this tenant's
+        # planning SHARES — admission budgets against them while the pool
+        # enforces only the physical tier caps.
+        self._lease = acquire_pool(
+            pool=pool, tenant=tenant,
+            device_memory_bytes=device_memory_bytes,
+            host_memory_bytes=host_memory_bytes,
+            slow_memory_bytes=slow_memory_bytes,
+            policy=policy, timeline=timeline)
+        self.tenant = self._lease.tenant
+        if self._lease.device_bytes is None:
+            raise ValueError(
+                "serving needs a device budget: pass device_memory_bytes= "
+                "or give its tenant a device_budget_bytes soft budget")
+        self.device_capacity = self._lease.device_bytes
+        self.host_capacity = self._lease.host_bytes
+        self.slow_capacity = self._lease.slow_bytes
         if cfg.arch_type in ("audio", "vlm"):
             raise ValueError(
                 "ServingEngine serves token prompts; encoder-input archs "
@@ -223,15 +245,9 @@ class ServingEngine:
         if chunk_size is None:
             chunk_size = search_chunk_size(specs, align=256).chunk_size
         self.cmap = build_chunk_map(specs, chunk_size)
-        self.pool = HeteroMemory(
-            device_capacity_bytes=device_memory_bytes,
-            host_capacity_bytes=host_memory_bytes,
-            slow_capacity_bytes=slow_memory_bytes, policy=policy)
-        self.timeline = timeline
-        if timeline is not None:
-            self.pool.set_timeline(timeline)
-        self.params_mgr = ChunkManager(
-            self.cmap, dtype=np.float32, name="param", pool=self.pool)
+        self.pool = self._lease.pool
+        self.timeline = self._lease.timeline
+        self.params_mgr = self._lease.stream("param", self.cmap)
         for name, val in named:
             view = self.params_mgr.access_tensor(name, "host")
             view[...] = np.asarray(val, np.float32)
@@ -326,9 +342,9 @@ class ServingEngine:
         floor = self._param_floor_bytes + (
             self.kv_chunk_bytes + swap_headroom_bytes(self.kv_chunk_bytes)
             if manage_kv else 0)
-        if device_memory_bytes < floor:
+        if self.device_capacity < floor:
             raise ValueError(
-                f"device budget {device_memory_bytes} below the serving "
+                f"device budget {self.device_capacity} below the serving "
                 f"working-set floor {floor} (one layer's param chunks plus "
                 f"two kv chunks)")
 
@@ -340,11 +356,12 @@ class ServingEngine:
             # out of the pool's chunkable device budget so params and raw
             # KV honestly share the same fixed device capacity.
             self.pool.set_chunkable_memory_fn(
-                lambda: self.device_capacity - self._raw_kv_bytes)
-        self.prefetcher = SchedulePrefetcher(
-            self.pool, lookahead=prefetch_lookahead,
-            timeline=timeline if bandwidth_aware_prefetch else None) \
-            if prefetch and policy == "opt" and manage_kv else None
+                lambda: self.device_capacity - self._raw_kv_bytes,
+                tenant=self.tenant, basis_bytes=self.device_capacity)
+        self.prefetcher = self._lease.prefetcher(
+            lookahead=prefetch_lookahead,
+            bandwidth_aware=bandwidth_aware_prefetch) \
+            if prefetch and manage_kv else None
 
         # batched decode: same-position active sequences pack into ONE
         # g.decode call per layer.  The cap bounds how many kv chunks sit
@@ -354,7 +371,7 @@ class ServingEngine:
         # unmanaged baseline so both modes group (and therefore batch)
         # identically — chunk management must never change a token.
         if max_decode_batch is None:
-            fit = (device_memory_bytes - self._param_floor_bytes
+            fit = (self.device_capacity - self._param_floor_bytes
                    - swap_headroom_bytes(self.kv_chunk_bytes)
                    ) // max(self.kv_chunk_bytes, 1)
             max_decode_batch = max(1, min(8, int(fit)))
@@ -508,10 +525,9 @@ class ServingEngine:
         unregister/re-register path as the act stream's batch-shape
         rebuild."""
         if self.kv_mgr is None:
-            self.kv_mgr = ChunkManager(
-                build_kv_chunk_map(self._kv_chunk_elems,
-                                   page_tokens=self._page_tokens),
-                dtype=np.float32, name="kv", pool=self.pool)
+            self.kv_mgr = self._lease.stream(
+                "kv", build_kv_chunk_map(self._kv_chunk_elems,
+                                         page_tokens=self._page_tokens))
 
     @staticmethod
     def _kv_name(rid: int, gname: str, layer: int, page: int = 0) -> str:
@@ -617,27 +633,29 @@ class ServingEngine:
             if op[0] == "param":
                 for cid in self._layer_chunks[(op[1], op[2])]:
                     param_sched.setdefault(cid, []).append(m + k)
-                    refs.append((m + k, "param", cid))
+                    refs.append((m + k, self.params_mgr.name, cid))
             else:
                 cid = self.kv_mgr.cmap.placement(
                     self._kv_name(op[1], op[2], op[3], op[4])).chunk_id
                 kv_sched.setdefault(cid, []).append(m + k)
-                refs.append((m + k, "kv", cid))
+                refs.append((m + k, self.kv_mgr.name, cid))
             if k < len(ops):
                 self._planned.append((m + k, op))
         self._moment = m + len(ops) + len(future)
-        self.pool.register_moments("param", param_sched)
+        self.pool.register_moments(self.params_mgr.name, param_sched)
         if self.kv_mgr is not None:
-            self.pool.register_moments("kv", kv_sched)
+            self.pool.register_moments(self.kv_mgr.name, kv_sched)
         if self.prefetcher is not None:
             self.prefetcher.install(refs)
         if self.pool.timeline is not None:
             # serving moments grow forever: drop already-flushed rounds,
             # then install this round's per-op compute durations (the
             # synthetic future never executes, so it carries none)
-            self.pool.timeline.prune_durations_before(m)
+            ns = self.tenant.timeline_ns
+            self.pool.timeline.prune_durations_before(m, tenant=ns)
             self.pool.timeline.extend_durations(
-                {m + k: d for k, (_op, d) in enumerate(ops) if d > 0.0})
+                {m + k: d for k, (_op, d) in enumerate(ops) if d > 0.0},
+                tenant=ns)
 
     def _begin_op(self, op: tuple) -> None:
         """Advance the moment cursor to the next planned op (asserting the
@@ -645,7 +663,7 @@ class ServingEngine:
         references ahead of it."""
         m, planned = self._planned.popleft()
         assert planned == op, (planned, op)
-        self.pool.set_moment(m)
+        self.tenant.set_moment(m)
         if self.prefetcher is not None:
             self.prefetcher.advance(m)
 
@@ -946,7 +964,7 @@ class ServingEngine:
         if not self._active and not self._queue and self.kv_mgr is not None:
             # full drain: drop the kv stream; the next admission
             # re-registers it from scratch
-            self.pool.unregister_stream("kv")
+            self.pool.unregister_stream(self.kv_mgr.name)
             self.kv_mgr = None
         return len(done)
 
@@ -958,8 +976,8 @@ class ServingEngine:
         if not self._queue and not self._active:
             return None
         t0 = time.perf_counter()
-        st0 = dataclasses.replace(self.pool.stats)
-        pf0 = dataclasses.replace(self.pool.prefetch)
+        st0 = dataclasses.replace(self.tenant.stats)
+        pf0 = dataclasses.replace(self.tenant.prefetch)
         prefill0 = self.total_prefill_tokens
         decode0 = self.total_decode_tokens
         newly = self._admit()
@@ -980,7 +998,7 @@ class ServingEngine:
         self._execute_round(cohorts, batches)
         completed = self._retire_finished()
         self.rounds += 1
-        pf = self.pool.prefetch
+        pf = self.tenant.prefetch
         return ServeRoundMetrics(
             round_index=self.rounds - 1,
             admitted=len(newly),
@@ -989,13 +1007,13 @@ class ServingEngine:
             queued=len(self._queue),
             prefill_tokens=self.total_prefill_tokens - prefill0,
             decode_tokens=self.total_decode_tokens - decode0,
-            h2d_bytes=self.pool.stats.h2d_bytes - st0.h2d_bytes,
-            d2h_bytes=self.pool.stats.d2h_bytes - st0.d2h_bytes,
+            h2d_bytes=self.tenant.stats.h2d_bytes - st0.h2d_bytes,
+            d2h_bytes=self.tenant.stats.d2h_bytes - st0.d2h_bytes,
             hidden_h2d_bytes=pf.hidden_h2d_bytes - pf0.hidden_h2d_bytes,
             critical_h2d_bytes=pf.critical_h2d_bytes - pf0.critical_h2d_bytes,
             prefetch_hits=pf.hits - pf0.hits,
             demand_misses=pf.demand_misses - pf0.demand_misses,
-            peak_device_bytes=self.pool.take_step_peak_device_bytes(),
+            peak_device_bytes=self.tenant.take_step_peak_device_bytes(),
             wall_s=time.perf_counter() - t0,
             timeline=(self.pool.timeline.take_step()
                       if self.pool.timeline is not None else None),
@@ -1039,9 +1057,11 @@ class ServingEngine:
         return len(self._queue)
 
     def device_bytes_in_use(self) -> int:
-        """Pool device bytes plus (unmanaged) raw KV reservations — the
-        quantity that must stay within the fixed device capacity."""
-        return self.pool.device_bytes_used() + self._raw_kv_bytes
+        """This tenant's device bytes plus (unmanaged) raw KV
+        reservations — the quantity that must stay within the fixed
+        device capacity (identical to the pool total on an owned
+        pool)."""
+        return self.tenant.device_bytes_used() + self._raw_kv_bytes
 
     def check_invariants(self) -> None:
         self.pool.check_invariants()
@@ -1050,5 +1070,9 @@ class ServingEngine:
                          for r in self._active) * self._total_layers
             assert self.kv_mgr.cmap.num_payload_chunks == expect, (
                 self.kv_mgr.cmap.num_payload_chunks, expect)
-        assert self.device_bytes_in_use() <= self.device_capacity, (
-            self.device_bytes_in_use(), self.device_capacity)
+        if self.tenant.is_default:
+            # on a shared pool the device share is a SOFT budget (the
+            # overflow region may absorb transients); the pool's own
+            # check bounds the physical tiers
+            assert self.device_bytes_in_use() <= self.device_capacity, (
+                self.device_bytes_in_use(), self.device_capacity)

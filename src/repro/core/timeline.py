@@ -130,6 +130,32 @@ _STALL_FIELD = {"h2d": "h2d_stall_s", "d2h": "d2h_stall_s",
 _DRAIN_STREAM = "(drain)"
 
 
+@dataclasses.dataclass
+class _Schedule:
+    """One moment namespace: a cursor plus its compute-duration table.
+
+    Multi-tenant pools give each non-default tenant its own namespace
+    (keyed by tenant name; the default tenant keeps the unnamed ``None``
+    namespace), because tenants' moment ids are independent clocks — the
+    trainer's moment 7 and the server's moment 7 are unrelated operators.
+    The DMA engines stay *shared* across namespaces: the lanes are the
+    physical contention point, so one tenant's backlog delays another's
+    critical fetch exactly as it would a sibling stream's."""
+
+    cur: int | None = None
+    durations: dict[int, float] = dataclasses.field(default_factory=dict)
+    order: list[int] = dataclasses.field(default_factory=list)
+    prefix: list[float] = dataclasses.field(default_factory=lambda: [0.0])
+
+    def rebuild(self) -> None:
+        self.order = sorted(self.durations)
+        acc = 0.0
+        self.prefix = [0.0]
+        for m in self.order:
+            acc += self.durations[m]
+            self.prefix.append(acc)
+
+
 class TransferTimeline:
     """Two DMA queues + a collective lane advanced against compute.
 
@@ -137,7 +163,14 @@ class TransferTimeline:
     forwards every tier move and the moment cursor.  Per-operator
     compute durations are installed after the warm-up iteration
     (:meth:`install_durations`, moment -> seconds) or extended
-    round-by-round on the serving plane (:meth:`extend_durations`)."""
+    round-by-round on the serving plane (:meth:`extend_durations`).
+
+    Every schedule method takes ``tenant=`` (a namespace name, ``None``
+    for the historical unnamed namespace): co-resident tenants keep
+    independent moment clocks over the *same* DMA engines, so the
+    bandwidth-aware issue policy sees both tenants' projected windows
+    through one ``projected_ready_s`` while ``time_until`` answers
+    against the asking tenant's own schedule."""
 
     def __init__(
         self,
@@ -158,10 +191,12 @@ class TransferTimeline:
                          "h2s": self.h2s, "s2h": self.s2h, "coll": self.coll}
         self.now = 0.0
         self._step_start = 0.0
-        self._cur: int | None = None
-        self._durations: dict[int, float] = {}
-        self._order: list[int] = []
-        self._prefix: list[float] = []
+        # moment namespaces (None == the historical unnamed one); the
+        # engines above are shared across all of them
+        self._sched: dict[str | None, _Schedule] = {None: _Schedule()}
+        # namespace of the last-advanced cursor: stalls recorded between
+        # advances are attributed to that tenant's current moment
+        self._active: str | None = None
         # in-flight overlappable transfers awaiting their consumer:
         # key -> (engine name, completion time, stream)
         self._pending: dict[Hashable, tuple[str, float, str]] = {}
@@ -181,42 +216,57 @@ class TransferTimeline:
                    collective_bandwidth=ICI_BW)
 
     # ------------------------------------------------------------- durations
+    def _ns(self, tenant: str | None) -> _Schedule:
+        ns = self._sched.get(tenant)
+        if ns is None:
+            ns = self._sched[tenant] = _Schedule()
+        return ns
+
     @property
     def has_durations(self) -> bool:
-        return bool(self._durations)
+        return any(ns.durations for ns in self._sched.values())
 
-    def install_durations(self, durations: dict[int, float]) -> None:
+    def has_durations_for(self, tenant: str | None = None) -> bool:
+        """Whether *this tenant's* namespace has a compute schedule (the
+        bandwidth-aware prefetcher gate: another tenant's durations say
+        nothing about this tenant's overlap windows)."""
+        ns = self._sched.get(tenant)
+        return ns is not None and bool(ns.durations)
+
+    def install_durations(self, durations: dict[int, float],
+                          tenant: str | None = None) -> None:
         """Replace the moment -> compute-seconds schedule (training: one
         iteration's moments, reused every step)."""
-        self._durations = dict(durations)
-        self._rebuild_prefix()
+        ns = self._ns(tenant)
+        ns.durations = dict(durations)
+        ns.rebuild()
 
-    def extend_durations(self, durations: dict[int, float]) -> None:
+    def extend_durations(self, durations: dict[int, float],
+                         tenant: str | None = None) -> None:
         """Merge additional moments (serving: each round plans fresh,
         strictly increasing moments)."""
-        self._durations.update(durations)
-        self._rebuild_prefix()
+        ns = self._ns(tenant)
+        ns.durations.update(durations)
+        ns.rebuild()
 
-    def _rebuild_prefix(self) -> None:
-        self._order = sorted(self._durations)
-        acc = 0.0
-        self._prefix = [0.0]
-        for m in self._order:
-            acc += self._durations[m]
-            self._prefix.append(acc)
-
-    def duration_of(self, moment: int) -> float:
-        return self._durations.get(moment, 0.0)
+    def duration_of(self, moment: int, tenant: str | None = None) -> float:
+        ns = self._sched.get(tenant)
+        return ns.durations.get(moment, 0.0) if ns is not None else 0.0
 
     # ----------------------------------------------------------------- clock
-    def advance_to_moment(self, moment: int) -> None:
-        """Moment cursor moved: the previous operator's compute elapsed."""
-        if self._cur is not None and moment != self._cur:
-            self._run_compute(self._cur)
-        self._cur = moment
+    def advance_to_moment(self, moment: int,
+                          tenant: str | None = None) -> None:
+        """Moment cursor moved: the previous operator's compute elapsed.
+        Each tenant namespace keeps its own cursor; the simulated clock
+        (and the shared engines behind it) advances for everyone."""
+        ns = self._ns(tenant)
+        if ns.cur is not None and moment != ns.cur:
+            self._run_compute(ns, ns.cur)
+        ns.cur = moment
+        self._active = tenant
 
-    def _run_compute(self, moment: int) -> None:
-        dur = self._durations.get(moment, 0.0)
+    def _run_compute(self, ns: _Schedule, moment: int) -> None:
+        dur = ns.durations.get(moment, 0.0)
         if dur > 0.0:
             self.now += dur
             self._step.compute_s += dur
@@ -229,9 +279,11 @@ class TransferTimeline:
                 getattr(self._step, _STALL_FIELD[engine]) + seconds)
         by_s = self._step.stall_by_stream
         by_s[stream] = by_s.get(stream, 0.0) + seconds
-        if self._cur is not None:
+        cur = self._sched[self._active].cur if self._active in self._sched \
+            else None
+        if cur is not None:
             by_m = self._step.stall_by_moment
-            by_m[self._cur] = by_m.get(self._cur, 0.0) + seconds
+            by_m[cur] = by_m.get(cur, 0.0) + seconds
 
     # -------------------------------------------------------------- transfers
     def record_h2d(self, nbytes: int, *, stream: str, critical: bool,
@@ -301,27 +353,31 @@ class TransferTimeline:
         eng = self._engines[engine]
         return max(0.0, eng.busy_until - self.now) + eng.transfer_seconds(nbytes)
 
-    def time_until(self, moment: int) -> float:
-        """Summed compute seconds between the current cursor and
+    def time_until(self, moment: int, tenant: str | None = None) -> float:
+        """Summed compute seconds between the tenant's current cursor and
         ``moment`` — the overlap window a transfer issued now can hide
         inside (includes the current operator's own duration: transfers
         issue at operator start)."""
-        if self._cur is None or not self._order:
+        ns = self._sched.get(tenant)
+        if ns is None or ns.cur is None or not ns.order:
             return 0.0
-        i = bisect.bisect_left(self._order, self._cur)
-        j = bisect.bisect_left(self._order, moment)
+        i = bisect.bisect_left(ns.order, ns.cur)
+        j = bisect.bisect_left(ns.order, moment)
         if j <= i:
             return 0.0
-        return self._prefix[j] - self._prefix[i]
+        return ns.prefix[j] - ns.prefix[i]
 
     # ----------------------------------------------------------------- steps
     def take_step(self) -> StepTimeline:
-        """Close the step: flush the current operator's compute, drain
-        residual queue backlog (marginal attribution in completion
-        order), return this step's decomposition and re-arm."""
-        if self._cur is not None:
-            self._run_compute(self._cur)
-            self._cur = None
+        """Close the step: flush every namespace's current operator's
+        compute (under the coarse co-tenancy interleave at most one
+        cursor is armed at a time), drain residual queue backlog
+        (marginal attribution in completion order), return this step's
+        decomposition and re-arm."""
+        for ns in self._sched.values():
+            if ns.cur is not None:
+                self._run_compute(ns, ns.cur)
+                ns.cur = None
         for eng in sorted(self._engines.values(), key=lambda e: e.busy_until):
             self._stall(eng.name, _DRAIN_STREAM, eng.busy_until - self.now)
         rep = self._step
@@ -330,10 +386,11 @@ class TransferTimeline:
         self._step_start = self.now
         return rep
 
-    def prune_durations_before(self, moment: int) -> None:
+    def prune_durations_before(self, moment: int,
+                               tenant: str | None = None) -> None:
         """Drop duration entries for moments < ``moment`` (the serving
         plane's moments increase forever; training reuses one iteration's
         ids and never calls this)."""
-        self._durations = {m: d for m, d in self._durations.items()
-                           if m >= moment}
-        self._rebuild_prefix()
+        ns = self._ns(tenant)
+        ns.durations = {m: d for m, d in ns.durations.items() if m >= moment}
+        ns.rebuild()

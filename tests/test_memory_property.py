@@ -171,6 +171,82 @@ def _belady_misses(pattern, cap):
     return misses
 
 
+@st.composite
+def two_tenant_traffic(draw):
+    """Interleaved traffic for a shielded "serve" tenant and the default
+    "train" tenant on a three-tier pool.  Serve's soft budgets are sized
+    to its WHOLE footprint on every tier, so it can never run over
+    budget and the priority shield must hold unconditionally."""
+    serve_chunks = draw(st.integers(1, 3))
+    train_chunks = draw(st.integers(2, 8))
+    device_chunks = draw(st.integers(serve_chunks + 1, serve_chunks + 6))
+    host_chunks = draw(st.integers(serve_chunks, serve_chunks + 6))
+    slow_chunks = draw(st.integers(serve_chunks, 16))
+    ops = draw(st.lists(
+        st.tuples(
+            st.booleans(),  # True -> serve tenant
+            st.integers(0, 7),  # tensor index (mod the stream's size)
+            st.sampled_from(["device", "host"]),
+            st.sampled_from(["hold", "free"])),
+        min_size=5, max_size=80))
+    policy = draw(st.sampled_from(["opt", "lru", "fifo"]))
+    return (serve_chunks, train_chunks, device_chunks, host_chunks,
+            slow_chunks, ops, policy)
+
+
+@given(two_tenant_traffic())
+@settings(max_examples=60, deadline=None)
+def test_two_tenant_traffic_holds_cotenancy_invariants(t):
+    """Arbitrary interleaved two-tenant traffic: no tier ever exceeds its
+    cap, per-tenant counters sum to pool usage after every operation, and
+    the higher-priority serve tenant — in budget by construction — never
+    loses a chunk to the trainer (the evictions ledger stays zero).
+    OutOfMemory is acceptable on infeasible sequences; a cap overflow or
+    a shield breach never is."""
+    (serve_chunks, train_chunks, device_chunks, host_chunks, slow_chunks,
+     ops, policy) = t
+    pool = HeteroMemory(
+        device_capacity_bytes=device_chunks * CB,
+        host_capacity_bytes=host_chunks * CB,
+        slow_capacity_bytes=slow_chunks * CB,
+        policy=policy)
+    serve = pool.create_tenant(
+        "serve", priority=10,
+        device_budget_bytes=serve_chunks * CB,
+        host_budget_bytes=serve_chunks * CB,
+        slow_budget_bytes=serve_chunks * CB)
+    kv = ChunkManager(_cmap_n(serve_chunks), name="kv", pool=pool,
+                      tenant=serve)
+    train = ChunkManager(_cmap_n(train_chunks), name="os", pool=pool)
+    for m, (is_serve, t_idx, dev, rel) in enumerate(ops):
+        pool.set_moment(m)
+        mgr, n = (kv, serve_chunks) if is_serve else (train, train_chunks)
+        name = f"t{t_idx % n}"
+        try:
+            mgr.access_tensor(name, dev)
+        except OutOfMemory:
+            pool.check_invariants()
+            assert pool.evictions[("serve", "default")] == 0
+            return
+        mgr.release_tensor(
+            name,
+            TensorState.HOLD_AFTER_FWD if rel == "hold" else TensorState.FREE)
+        assert pool.device_bytes_used() <= device_chunks * CB
+        assert pool.host_bytes_used() <= host_chunks * CB
+        assert pool.slow_bytes_used() <= slow_chunks * CB
+        for tier in ("device", "host", "slow"):
+            assert (serve.bytes_used(tier)
+                    + pool.default_tenant.bytes_used(tier)
+                    == pool._used(tier))
+        assert pool.evictions[("serve", "default")] == 0
+        pool.check_invariants()
+
+
+def _cmap_n(n):
+    return build_chunk_map([TensorSpec(f"t{i}", (SIZE,)) for i in range(n)],
+                           SIZE)
+
+
 @given(opt_schedules())
 @settings(max_examples=60, deadline=None)
 def test_opt_eviction_matches_belady_replay(t):

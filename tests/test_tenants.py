@@ -1,0 +1,411 @@
+"""Two-tenant pool tests (core/memory.py Tenant layer, PR 9): tenant
+creation and stream-name qualification, per-tenant accounting mirrors,
+the priority/soft-budget eviction shield, over-budget-first victim
+urgency, tenant-grouped OutOfMemory diagnostics, tenant-scoped staging,
+acquire_pool lease resolution, and an always-on seeded random driver
+asserting the co-tenancy invariants under interleaved traffic."""
+
+import random
+
+import pytest
+
+from repro.core.chunk import TensorSpec, build_chunk_map
+from repro.core.manager import ChunkManager
+from repro.core.memory import (
+    HeteroMemory,
+    OutOfMemory,
+    acquire_pool,
+)
+from repro.core.state import TensorState
+from repro.core.timeline import TransferTimeline
+
+SIZE = 8  # elements per tensor == per chunk (one tensor per chunk)
+CB = SIZE * 4  # chunk bytes (fp32)
+
+
+def _cmap(n):
+    return build_chunk_map([TensorSpec(f"t{i}", (SIZE,)) for i in range(n)],
+                           SIZE)
+
+
+def _two_tenant_pool(
+    *,
+    policy="fifo",
+    device_chunks=4,
+    host_chunks=4,
+    slow_chunks=None,
+    serve_chunks=2,
+    train_chunks=8,
+    serve_priority=10,
+    device_budget_chunks=2,
+    host_budget_chunks=2,
+    slow_budget_chunks=None,
+):
+    pool = HeteroMemory(
+        device_capacity_bytes=device_chunks * CB,
+        host_capacity_bytes=host_chunks * CB,
+        slow_capacity_bytes=(None if slow_chunks is None
+                             else slow_chunks * CB),
+        policy=policy)
+    serve = pool.create_tenant(
+        "serve", priority=serve_priority,
+        device_budget_bytes=(None if device_budget_chunks is None
+                             else device_budget_chunks * CB),
+        host_budget_bytes=(None if host_budget_chunks is None
+                           else host_budget_chunks * CB),
+        slow_budget_bytes=(None if slow_budget_chunks is None
+                           else slow_budget_chunks * CB))
+    kv = ChunkManager(_cmap(serve_chunks), name="kv", pool=pool,
+                      tenant=serve)
+    train = ChunkManager(_cmap(train_chunks), name="os", pool=pool)
+    return pool, serve, kv, train
+
+
+def _hold(mgr, i, dev="device"):
+    mgr.access_tensor(f"t{i}", dev)
+    mgr.release_tensor(f"t{i}", TensorState.HOLD_AFTER_FWD)
+
+
+# ---------------------------------------------------------------------------
+# tenant registry + stream naming
+# ---------------------------------------------------------------------------
+
+
+def test_create_tenant_validation():
+    pool = HeteroMemory(device_capacity_bytes=4 * CB)
+    with pytest.raises(ValueError, match="invalid tenant name"):
+        pool.create_tenant("")
+    with pytest.raises(ValueError, match="invalid tenant name"):
+        pool.create_tenant("a:b")
+    pool.create_tenant("serve")
+    with pytest.raises(ValueError, match="already exists"):
+        pool.create_tenant("serve")
+    with pytest.raises(ValueError, match="already exists"):
+        pool.create_tenant("default")
+
+
+def test_stream_names_are_tenant_qualified():
+    """Two tenants can both own a "param" stream: named tenants' streams
+    register pool-wide as "tenant:stream", the default tenant keeps the
+    historical bare names."""
+    pool = HeteroMemory(device_capacity_bytes=8 * CB)
+    serve = pool.create_tenant("serve")
+    a = ChunkManager(_cmap(2), name="param", pool=pool)
+    b = ChunkManager(_cmap(2), name="param", pool=pool, tenant=serve)
+    assert a.name == "param"
+    assert b.name == "serve:param"
+    assert set(pool.streams) == {"param", "serve:param"}
+    assert a.tenant is pool.default_tenant
+    assert b.tenant is serve
+    assert serve.qualify("kv") == "serve:kv"
+    assert pool.default_tenant.qualify("kv") == "kv"
+
+
+def test_stream_rejects_tenant_from_other_pool():
+    pool_a = HeteroMemory(device_capacity_bytes=4 * CB)
+    pool_b = HeteroMemory(device_capacity_bytes=4 * CB)
+    foreign = pool_b.create_tenant("serve")
+    with pytest.raises(ValueError, match="different pool"):
+        ChunkManager(_cmap(2), name="kv", pool=pool_a, tenant=foreign)
+
+
+def test_tenant_counters_mirror_streams():
+    """Per-tenant tier counters equal the sum over the tenant's streams,
+    and the tenants' sums equal the pool totals (also re-asserted from
+    scratch by check_invariants)."""
+    pool, serve, kv, train = _two_tenant_pool()
+    _hold(kv, 0)
+    _hold(kv, 1, "host")
+    _hold(train, 0)
+    _hold(train, 1)
+    assert serve.device_bytes_used() == CB
+    assert serve.host_bytes_used() == CB
+    assert pool.default_tenant.device_bytes_used() == 2 * CB
+    assert (serve.device_bytes_used()
+            + pool.default_tenant.device_bytes_used()
+            == pool.device_bytes_used())
+    assert (serve.host_bytes_used()
+            + pool.default_tenant.host_bytes_used()
+            == pool.host_bytes_used())
+    pool.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# priority shield + victim urgency
+# ---------------------------------------------------------------------------
+
+
+def test_priority_shield_protects_in_budget_tenant():
+    """A higher-priority tenant within its soft budget never loses a
+    chunk to a lower-priority tenant's demand: the trainer fills the rest
+    of the device tier, then its next admission must evict ITS OWN chunks
+    (or refuse), never serve's."""
+    pool, serve, kv, train = _two_tenant_pool(
+        device_chunks=4, host_chunks=8, serve_chunks=2,
+        device_budget_chunks=2)
+    _hold(kv, 0)
+    _hold(kv, 1)  # serve at its device budget (2 chunks), not over
+    for i in range(4):  # 2 fit, then each admission must victimize train
+        _hold(train, i)
+    assert kv.location(0) == "device"
+    assert kv.location(1) == "device"
+    assert pool.evictions[("serve", "default")] == 0
+    assert pool.evictions[("default", "default")] >= 2
+    pool.check_invariants()
+
+
+def test_priority_shield_drops_when_over_budget():
+    """The shield covers only IN-budget residency: a high-priority tenant
+    holding more than its soft budget on a tier is fair game there (the
+    shared overflow region drains first).
+
+    The over-budget state is built with access-without-release:
+    COMPUTE-pinned chunks cannot be self-evicted, so the budget loop
+    yields softly and serve lands three resident chunks against a
+    one-chunk budget once they drop to HOLD."""
+    pool, serve, kv, train = _two_tenant_pool(
+        device_chunks=4, host_chunks=8, serve_chunks=3,
+        device_budget_chunks=1)
+    for i in range(3):  # pin 3 chunks against a 1-chunk budget
+        kv.access_tensor(f"t{i}")
+    for i in range(3):
+        kv.release_tensor(f"t{i}", TensorState.HOLD_AFTER_FWD)
+    assert serve.over_budget("device")
+    _hold(train, 0)  # fills the 4th slot, no eviction yet
+    _hold(train, 1)
+    _hold(train, 2)
+    # the over-budget serve chunks were reclaimed first, down to (not
+    # below) serve's soft budget; the next trainer admission then has to
+    # victimize the trainer's own chunks
+    assert pool.evictions[("serve", "default")] == 2
+    assert serve.device_bytes_used() == CB
+    assert not serve.over_budget("device")
+    _hold(train, 3)
+    assert pool.evictions[("serve", "default")] == 2
+    assert serve.device_bytes_used() == CB
+    pool.check_invariants()
+
+
+def test_over_budget_tenant_gives_up_chunks_first():
+    """Victim urgency: chunks of a tenant over its soft budget are
+    reclaimed before the other tenant's residency, even when FIFO age
+    says otherwise (serve's chunks are YOUNGER here).  Serve goes over
+    budget by holding both chunks in COMPUTE simultaneously — the budget
+    self-eviction loop cannot touch pinned chunks."""
+    pool, serve, kv, train = _two_tenant_pool(
+        device_chunks=4, host_chunks=8, serve_chunks=2,
+        serve_priority=0, device_budget_chunks=1)
+    _hold(train, 0)  # oldest arrival
+    kv.access_tensor("t0")
+    kv.access_tensor("t1")
+    kv.release_tensor("t0", TensorState.HOLD_AFTER_FWD)
+    kv.release_tensor("t1", TensorState.HOLD_AFTER_FWD)
+    assert serve.over_budget("device")
+    _hold(train, 1)
+    _hold(train, 2)  # must evict: urgency picks over-budget serve first
+    assert pool.evictions[("serve", "default")] == 1
+    assert train.location(0) == "device"  # FIFO-oldest but in budget
+    pool.check_invariants()
+
+
+def test_budgeted_tenant_self_evicts_to_budget():
+    """A tenant with a device soft budget reproduces, against its share,
+    the eviction pressure a solo pool cap would exert: sequential HOLD
+    accesses beyond the budget evict the tenant's OWN colder chunks even
+    when the shared pool has plenty of free device space."""
+    pool, serve, kv, train = _two_tenant_pool(
+        device_chunks=8, host_chunks=8, serve_chunks=3,
+        device_budget_chunks=1, host_budget_chunks=None)
+    _hold(kv, 0)
+    _hold(kv, 1)  # over budget -> t0 self-evicted to host
+    _hold(kv, 2)  # and again for t1
+    assert serve.device_bytes_used() == CB
+    assert not serve.over_budget("device")
+    assert pool.evictions[("serve", "serve")] == 2
+    assert pool.evictions[("serve", "default")] == 0
+    assert kv.location(0) == "host"
+    assert kv.location(1) == "host"
+    assert kv.location(2) == "device"
+    pool.check_invariants()
+
+
+def test_shielded_oom_names_blocking_tenant():
+    """When every candidate is shielded by a higher-priority tenant's
+    soft budget, the refusal says so and names the tenant — and the usage
+    report groups streams per tenant with [used/budget] annotations."""
+    pool, serve, kv, train = _two_tenant_pool(
+        device_chunks=2, host_chunks=2, serve_chunks=2, train_chunks=4,
+        device_budget_chunks=2, host_budget_chunks=2)
+    _hold(kv, 0)
+    _hold(kv, 1)  # serve fills the device tier, within budget
+    _hold(train, 0, "host")
+    _hold(train, 1, "host")  # host full too: no cascade escape
+    with pytest.raises(OutOfMemory) as ei:
+        _hold(train, 2)
+    msg = str(ei.value)
+    assert "shielded by the soft budget of higher-priority tenant(s): serve" \
+        in msg
+    assert "serve[64/64]" in msg  # tenant-grouped report with budgets
+    assert "serve:kv=" in msg
+    assert "default[" in msg
+    pool.check_invariants()
+
+
+def test_single_tenant_oom_report_unchanged():
+    """With only the default tenant the report keeps the historical
+    per-stream shape — no tenant grouping, no budget annotations."""
+    pool = HeteroMemory(device_capacity_bytes=CB, host_capacity_bytes=CB)
+    mgr = ChunkManager(_cmap(3), name="param", pool=pool)
+    _hold(mgr, 0)
+    _hold(mgr, 1, "host")
+    mgr.access_tensor("t0")  # pin t0 in COMPUTE
+    with pytest.raises(OutOfMemory) as ei:
+        mgr.access_tensor("t2")
+    msg = str(ei.value)
+    assert "tier usage by stream" in msg
+    assert "param=" in msg
+    assert "default[" not in msg
+    assert "shielded" not in msg
+
+
+def test_equal_priority_sees_no_shield():
+    """The shield needs strictly higher priority: between equal-priority
+    tenants, soft budgets only set urgency, never block eviction."""
+    pool, serve, kv, train = _two_tenant_pool(
+        device_chunks=2, host_chunks=8, serve_chunks=2,
+        serve_priority=0, device_budget_chunks=2)
+    _hold(kv, 0)
+    _hold(kv, 1)
+    _hold(train, 0)  # evicts a serve chunk despite serve being in budget
+    assert pool.evictions[("serve", "default")] == 1
+    pool.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# staging stays tenant-scoped
+# ---------------------------------------------------------------------------
+
+
+def test_staging_never_reclaims_other_tenants_residency():
+    """A tenant's prefetch staging may only evict ITS OWN device
+    residents: cross-tenant space is taken on the demand path (under the
+    shield), never by the speculative staging path."""
+    pool = HeteroMemory(device_capacity_bytes=2 * CB,
+                        host_capacity_bytes=8 * CB, policy="opt")
+    serve = pool.create_tenant("serve")
+    kv = ChunkManager(_cmap(2), name="kv", pool=pool, tenant=serve)
+    train = ChunkManager(_cmap(2), name="os", pool=pool)
+    _hold(train, 0)
+    _hold(train, 1)  # device full with default-tenant chunks
+    _hold(kv, 0, "host")  # serve's chunk parked on host
+    kv.register_moments({0: [100]})
+    train.register_moments({0: [500], 1: [600]})  # far, tempting victims
+    assert pool.stage("serve:kv", 0) is False  # refused: not serve's space
+    assert train.location(0) == "device"
+    assert train.location(1) == "device"
+    assert pool.staged_count(serve) == 0
+    pool.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# acquire_pool / PoolLease resolution
+# ---------------------------------------------------------------------------
+
+
+def test_acquire_pool_owned_builds_private_pool():
+    lease = acquire_pool(device_memory_bytes=4 * CB,
+                         host_memory_bytes=8 * CB, policy="fifo")
+    assert lease.owned
+    assert lease.tenant is lease.pool.default_tenant
+    assert lease.device_bytes == 4 * CB
+    assert lease.host_bytes == 8 * CB
+    assert lease.pool.policy == "fifo"
+    mgr = lease.stream("param", _cmap(2))
+    assert mgr.name == "param"  # default tenant: historical bare name
+    assert mgr.pool is lease.pool
+
+
+def test_acquire_pool_validation():
+    pool = HeteroMemory(device_capacity_bytes=4 * CB)
+    other = HeteroMemory(device_capacity_bytes=4 * CB)
+    with pytest.raises(ValueError, match="owned pool needs"):
+        acquire_pool()
+    with pytest.raises(ValueError, match="requires an external pool"):
+        acquire_pool(tenant=pool.create_tenant("t"),
+                     device_memory_bytes=4 * CB)
+    with pytest.raises(ValueError, match="different pool"):
+        acquire_pool(pool=other, tenant=pool.tenants["t"])
+    with pytest.raises(ValueError, match="own their timeline"):
+        acquire_pool(pool=pool, timeline=TransferTimeline())
+
+
+def test_acquire_pool_share_resolution():
+    """External-lease planning shares resolve explicit arg -> tenant soft
+    budget -> pool cap, per tier independently."""
+    pool = HeteroMemory(device_capacity_bytes=10 * CB,
+                        host_capacity_bytes=20 * CB,
+                        slow_capacity_bytes=30 * CB)
+    t = pool.create_tenant("serve", device_budget_bytes=4 * CB)
+    lease = acquire_pool(pool=pool, tenant=t, host_memory_bytes=5 * CB)
+    assert not lease.owned
+    assert lease.device_bytes == 4 * CB  # tenant soft budget
+    assert lease.host_bytes == 5 * CB  # explicit override
+    assert lease.slow_bytes == 30 * CB  # pool cap fallback
+    mgr = lease.stream("param", _cmap(2))
+    assert mgr.name == "serve:param"
+    assert mgr.tenant is t
+
+
+# ---------------------------------------------------------------------------
+# always-on seeded two-tenant driver (the hypothesis-free variant of the
+# property suite: runs in every environment)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("policy", ["fifo", "lru", "opt"])
+def test_random_interleaved_traffic_holds_cotenancy_invariants(policy):
+    """Seeded random interleaving of two tenants' chunk traffic on a
+    three-tier pool.  After EVERY operation: no tier exceeds its cap,
+    per-tenant counters sum to pool usage (check_invariants), and — since
+    serve's whole footprint fits inside its per-tier soft budgets, so it
+    can never be over budget anywhere — the higher-priority serve tenant
+    never loses a chunk to the trainer (evictions ledger stays zero)."""
+    rng = random.Random(1234 + len(policy))
+    pool, serve, kv, train = _two_tenant_pool(
+        policy=policy, device_chunks=5, host_chunks=4, slow_chunks=16,
+        serve_chunks=4, train_chunks=12, serve_priority=10,
+        device_budget_chunks=4, host_budget_chunks=4, slow_budget_chunks=4)
+    dev_cap, host_cap, slow_cap = 5 * CB, 4 * CB, 16 * CB
+    oom = 0
+    for m in range(400):
+        pool.set_moment(m)
+        if rng.random() < 0.3:
+            mgr, n = kv, 4
+        else:
+            mgr, n = train, 12
+        i = rng.randrange(n)
+        dev = "device" if rng.random() < 0.75 else "host"
+        try:
+            mgr.access_tensor(f"t{i}", dev)
+        except OutOfMemory:
+            oom += 1
+            pool.check_invariants()
+            continue
+        mgr.release_tensor(
+            f"t{i}",
+            TensorState.HOLD_AFTER_FWD if rng.random() < 0.8
+            else TensorState.FREE)
+        assert pool.device_bytes_used() <= dev_cap
+        assert pool.host_bytes_used() <= host_cap
+        assert pool.slow_bytes_used() <= slow_cap
+        assert (serve.bytes_used(dev)
+                + pool.default_tenant.bytes_used(dev)
+                == pool._used(dev))
+        # serve's 4 chunks always fit its 4-chunk budgets -> never over
+        # budget -> the shield must have held on every tier
+        assert pool.evictions[("serve", "default")] == 0
+        pool.check_invariants()
+    # the run must actually have exercised contention, not idled
+    assert pool.evictions[("default", "default")] > 0 or oom > 0
+    assert serve.stats.total_bytes > 0
+    assert pool.default_tenant.stats.total_bytes > 0

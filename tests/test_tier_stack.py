@@ -257,3 +257,61 @@ def test_unregister_unknown_stream_raises():
     pool, _ = _one_stream_pool()
     with pytest.raises(KeyError, match="not registered"):
         pool.unregister_stream("nope")
+
+
+# ---------------------------------------------------------------------------
+# satellite (PR 9): kv pages ride the cascade to the slow tier
+# ---------------------------------------------------------------------------
+
+
+def test_serving_kv_pages_demote_to_slow_and_survive_long_burst():
+    """Admission counts the slow tier, so a long-horizon burst that does
+    NOT fit device+host must actually be able to park its cold kv pages
+    there: cold HOLD pages demote host->slow like model-data streams, and
+    the whole burst decodes to completion without OOM — token-for-token
+    equal to a roomy-host reference."""
+    import jax
+    import numpy as np
+
+    from repro.configs import get_config, model_class
+    from repro.core.serving import ServingEngine
+
+    cfg = get_config("qwen3-0.6b", smoke=True).replace(
+        param_dtype="float32", compute_dtype="float32")
+    prompts = np.asarray(jax.random.randint(
+        jax.random.key(3), (12, 8), 0, cfg.vocab_size))
+
+    def run(**kw):
+        eng = ServingEngine(model_class(cfg), cfg, max_seq_len=48,
+                            page_tokens=8, seed=0, **kw)
+        rids = [eng.submit(p, 32) for p in prompts]
+        kv_h2s = kv_slow_peak = 0
+        while True:
+            m = eng.step_round()
+            if m is None:
+                break
+            if eng.kv_mgr is not None:
+                kv_h2s = max(kv_h2s, eng.kv_mgr.stats.h2s_bytes)
+                kv_slow_peak = max(kv_slow_peak,
+                                   eng.kv_mgr.slow_bytes_used())
+            eng.check_invariants()
+        return eng, [eng.result(r) for r in rids], kv_h2s, kv_slow_peak
+
+    # host tier deliberately tight: it holds the device's param overflow
+    # with almost no room left for cold kv, so kv residency must lean on
+    # the slow tier
+    eng, toks, kv_h2s, kv_slow_peak = run(
+        device_memory_bytes=1_200_000, host_memory_bytes=600_000,
+        slow_memory_bytes=2_000_000)
+    assert all(len(t) == 32 for t in toks)
+    # the burst was admitted AGAINST slow capacity: at peak concurrency
+    # the admission bound exceeds what device+host alone could cover
+    assert (eng._param_stream_bytes + eng.peak_concurrency * eng.kv_seq_bytes
+            > eng.device_capacity + eng.host_capacity)
+    # and kv pages genuinely rode the cascade there
+    assert kv_h2s > 0
+    assert kv_slow_peak > 0
+    # chunk residency must never change tokens
+    _, ref, _, _ = run(device_memory_bytes=1_200_000,
+                       host_memory_bytes=16_000_000)
+    assert toks == ref
