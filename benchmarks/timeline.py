@@ -75,6 +75,42 @@ def run(cfg, batch, *, h2d_bw, d2h_bw, aware, calibrated=False):
     return out
 
 
+def telemetry_overhead_guard(cfg, batch, report):
+    """The telemetry plane must be cheap: disabled it is one predicate
+    per call site (covered by the byte-identity unit test); enabled it
+    may not add more than 15% to a traced step's wall time.  Min over
+    repeats plus a small absolute floor to keep CI timer noise out."""
+    import time
+
+    from repro.core.telemetry import Telemetry
+
+    def once(hub):
+        tl = TransferTimeline(h2d_bandwidth=None, d2h_bandwidth=None)
+        eng = PatrickStarEngine(
+            model_class(cfg), cfg, device_memory_bytes=BUDGET, policy="opt",
+            device_aware_placement=True, timeline=tl, telemetry=hub)
+        eng.step(batch)  # warm-up (compile + tracer + schedules)
+        t0 = time.perf_counter()
+        eng.step(batch)
+        return time.perf_counter() - t0
+
+    # interleave the two variants: host-load drift then hits both mins
+    # equally instead of biasing whichever ran in the quiet window
+    hub = Telemetry()
+    pairs = [(once(None), once(hub)) for _ in range(4)]
+    base = min(b for b, _ in pairs)
+    traced = min(t for _, t in pairs)
+    assert hub.events, "enabled hub recorded nothing"
+    ratio = traced / base
+    assert traced <= 1.15 * base + 1e-2, (
+        f"telemetry overhead too high: {traced:.4f}s traced vs "
+        f"{base:.4f}s disabled ({ratio:.2f}x)")
+    report["telemetry_overhead"] = {
+        "disabled_s": base, "enabled_s": traced, "ratio": round(ratio, 3)}
+    csv("timeline/telemetry_overhead", 0.0,
+        f"disabled={base:.3e};enabled={traced:.3e};ratio={ratio:.3f}")
+
+
 def bar(label, r, scale):
     """One Fig. 16-style horizontal breakdown bar (text)."""
     seg = lambda s, ch: ch * max(int(round(s / scale * 60)), 1 if s > 0 else 0)
@@ -140,6 +176,9 @@ def main():
     report["infinite_bw"] = inf
     csv("timeline/infinite_bw", 0.0,
         f"compute={inf['compute_s']:.3e};stall={inf['stall_s']:.3e}")
+
+    # -------- telemetry overhead guard (runs in smoke too) ---------------
+    telemetry_overhead_guard(cfg, batch, report)
 
     # -------- calibrated bandwidth: absolute Fig. 16-style seconds -------
     # H2D/D2H at the roofline's PCIe-class host-link rate (collectives at

@@ -108,6 +108,7 @@ class DistributedPatrickStarEngine:
         prefetch_lookahead: int = 6,
         gather_lookahead: int = 2,
         timeline_factory: "Callable[[], Any] | None" = None,
+        telemetry: "Any | None" = None,
         bandwidth_aware_prefetch: bool = True,
         manage_activations: bool = True,
         strict_device_budget: bool = False,
@@ -156,6 +157,13 @@ class DistributedPatrickStarEngine:
         rank0 = make_core(0, chunk_size)
         self.ranks = [rank0] + [
             make_core(r, rank0.cmap.chunk_size) for r in range(1, nproc)]
+        # rank-tag each core's telemetry (explicit hub or the default one
+        # its pool picked up) so every event and trace track names its
+        # rank; a shared hub merges all ranks into one trace.
+        for r, core in enumerate(self.ranks):
+            tel = telemetry if telemetry is not None else core.pool.telemetry
+            if tel is not None:
+                core.pool.set_telemetry(tel, rank=r)
         self.cmap = rank0.cmap
         if any(c.cmap != self.cmap for c in self.ranks[1:]):
             raise AssertionError("rank cores disagree on the chunk layout")
@@ -304,7 +312,25 @@ class DistributedPatrickStarEngine:
         warmup = cores[0].tracer.warmup
 
         sts = [core.begin_step(sh) for core, sh in zip(cores, shards)]
+
+        # per-rank phase spans (fwd/bwd/adam), each stamped on its own
+        # core's simulated clock
+        def _phase(label: str) -> None:
+            for core in cores:
+                tel = core.pool.telemetry
+                if tel is not None:
+                    tel.switch_span("phase", label, ts=core.pool._now(),
+                                    rank=core.pool.telemetry_rank)
+
+        def _phase_end() -> None:
+            for core in cores:
+                tel = core.pool.telemetry
+                if tel is not None:
+                    tel.close_span("phase", ts=core.pool._now(),
+                                   rank=core.pool.telemetry_rank)
+
         # ------------------------------------------------------------ forward
+        _phase("fwd")
         for core, st in zip(cores, sts):
             core.forward_embed(st)
         for g in cores[0].model.groups():
@@ -317,6 +343,7 @@ class DistributedPatrickStarEngine:
             core.end_forward(st)
 
         # ----------------------------------------------------------- backward
+        _phase("bwd")
         for core, st in zip(cores, sts):
             core.begin_backward(st)
         for idx in range(len(sts[0].saved) - 1, -1, -1):
@@ -342,12 +369,14 @@ class DistributedPatrickStarEngine:
             core.pool.account_allreduce(ar_bytes)
 
         # --------------------------------------------------------------- ADAM
+        _phase("adam")
         for core, st in zip(cores, sts):
             core.adam_chunks(st)
         cores[0].update_stem(total_stem)
         for core in cores[1:]:
             core._stem_np = cores[0]._stem_np  # replicated stem
 
+        _phase_end()
         mets = [core.end_step(st) for core, st in zip(cores, sts)]
         if warmup and self.gather_prefetcher is not None:
             self.gather_prefetcher.install(
@@ -519,6 +548,12 @@ class DistributedServingEngine:
         rank0 = make_core(0, engine_kw.pop("chunk_size", None))
         self.ranks = [rank0] + [make_core(r, rank0.cmap.chunk_size)
                                 for r in range(1, nproc)]
+        # rank-tag each core's hub (passed through **engine_kw or picked
+        # up from the module default) so fleet traces separate per rank
+        for r, core in enumerate(self.ranks):
+            tel = core.pool.telemetry
+            if tel is not None:
+                core.pool.set_telemetry(tel, rank=r)
         self._placement: dict[int, tuple[int, int]] = {}  # gid -> (rank, rid)
         self._next_gid = 0
         self._rr = 0

@@ -74,6 +74,7 @@ from repro.core.memory import (
 )
 from repro.core.placement import PlacementPlan, plan_placement
 from repro.core.state import ChunkState, TensorState
+from repro.core.telemetry import Telemetry
 from repro.core.timeline import StepTimeline, TransferTimeline
 from repro.core.tracer import RuntimeMemoryTracer
 from repro.models.api import Model
@@ -179,6 +180,7 @@ class PatrickStarEngine:
         prefetch: bool = True,
         prefetch_lookahead: int = 6,
         timeline: TransferTimeline | None = None,
+        telemetry: "Telemetry | None" = None,
         bandwidth_aware_prefetch: bool = True,
         manage_activations: bool = True,
         strict_device_budget: bool = False,
@@ -254,6 +256,8 @@ class PatrickStarEngine:
             policy=policy, timeline=timeline)
         self.pool = self._lease.pool
         self.tenant = self._lease.tenant
+        if telemetry is not None:
+            self.pool.set_telemetry(telemetry)
         # the pool's policy governs (identical to the policy arg for an
         # owned pool; an external pool was built with its own)
         self.policy = self.pool.policy
@@ -345,6 +349,12 @@ class PatrickStarEngine:
     def _moment(self, op: str, phase: str) -> None:
         m = self.tracer.record_moment(op, phase, self._live_activation_bytes)
         self.tenant.set_moment(m)
+        tel = self.pool.telemetry
+        if tel is not None:
+            tel.switch_span(self.tenant.qualify("moments"), f"{op}:{phase}",
+                            ts=self.pool._now(), moment=m,
+                            tenant=self.tenant.name,
+                            rank=self.pool.telemetry_rank)
         # schedule-driven prefetch: stage the next-k chunk references
         # before the operator at this moment runs (their H2D overlaps it)
         if self.prefetcher is not None and not self.tracer.warmup:
@@ -556,10 +566,16 @@ class PatrickStarEngine:
         if tok is not None and getattr(tok, "ndim", 0) >= 2:
             self._batch_tokens_shape = (int(tok.shape[0]), int(tok.shape[1]))
         self.tracer.begin_iteration()
+        tel = self.pool.telemetry
+        if tel is not None:
+            tel.begin_span(self.tenant.qualify("step"),
+                           f"step{self.step_count}", ts=self.pool._now(),
+                           tenant=self.tenant.name,
+                           rank=self.pool.telemetry_rank)
+        st0, pf0 = self.tenant.snapshot()
         return _StepState(
             batch=batch, met=EngineMetrics(),
-            h2d0=self.tenant.stats.h2d_bytes, d2h0=self.tenant.stats.d2h_bytes,
-            pf0=dataclasses.replace(self.tenant.prefetch))
+            h2d0=st0.h2d_bytes, d2h0=st0.d2h_bytes, pf0=pf0)
 
     def forward_embed(self, st: _StepState) -> None:
         st.t0 = time.perf_counter()
@@ -793,6 +809,24 @@ class PatrickStarEngine:
                 self.timeline.install_durations(
                     self._moment_durations(),
                     tenant=self.tenant.timeline_ns)
+        tel = self.pool.telemetry
+        if tel is not None:
+            # close AFTER take_step so the span end covers the drain
+            # stalls booked inside it
+            ts = self.pool._now()
+            rank = self.pool.telemetry_rank
+            tel.close_span(self.tenant.qualify("moments"), ts=ts, rank=rank)
+            tel.close_span(self.tenant.qualify("step"), ts=ts, rank=rank)
+            tel.snapshot(
+                f"{self.tenant.name}:step{self.step_count}", ts=ts,
+                rank=rank, loss=met.loss,
+                h2d_bytes=self.tenant.stats.h2d_bytes - st.h2d0,
+                d2h_bytes=self.tenant.stats.d2h_bytes - st.d2h0,
+                hidden_h2d_bytes=met.hidden_h2d_bytes,
+                critical_h2d_bytes=met.critical_h2d_bytes,
+                prefetch_hits=met.prefetch_hits,
+                demand_misses=met.demand_misses,
+                peak_device_bytes=met.peak_device_bytes)
         self.step_count += 1
         return met
 

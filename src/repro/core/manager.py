@@ -197,6 +197,14 @@ class ChunkManager:
         elif new is not TensorState.FREE:
             self._chunk_hold[chunk_id] += 1
         self._tensor_state[name] = new
+        tel = self.pool.telemetry
+        if tel is not None:
+            tl = self.pool.timeline
+            tel.state(name, old=old.name, new=new.name, stream=self.name,
+                      tenant=self.tenant.name, chunk_id=chunk_id,
+                      ts=tl.now if tl is not None else None,
+                      moment=self.tenant.current_moment,
+                      rank=self.pool.telemetry_rank)
 
     # -------------------------------------------------------------- schedule
     def register_moments(self, moments: dict[int, list[int]]) -> None:

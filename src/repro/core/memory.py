@@ -67,6 +67,7 @@ from typing import TYPE_CHECKING, Callable, Iterable, Literal
 import numpy as np
 
 from repro.core.state import ChunkState
+from repro.core.telemetry import Telemetry, default_hub
 from repro.core.timeline import TransferTimeline
 
 if TYPE_CHECKING:  # pragma: no cover - import cycle with manager.py
@@ -314,6 +315,12 @@ class Tenant:
         self._step_peak_device_bytes = self._device_used
         return peak
 
+    def snapshot(self) -> tuple[TransferStats, PrefetchStats]:
+        """Point-in-time copies of this tenant's transfer and prefetch
+        counters — the per-step delta baseline both engines take."""
+        return (dataclasses.replace(self.stats),
+                dataclasses.replace(self.prefetch))
+
     # -------------------------------------------------------------- schedule
     def set_moment(self, moment: int) -> None:
         """Advance this tenant's moment cursor (and its namespace on the
@@ -408,6 +415,14 @@ class HeteroMemory:
         # >0 while the staging path runs: evictions it cascades are
         # overlappable (issued ahead of demand), not consumer waits.
         self._staging = 0
+        # telemetry hub (None == disabled, one predicate per call site).
+        # An explicit set_telemetry wins; the module-level default hub —
+        # installed e.g. by the benchmark runner's --trace-dir — is
+        # picked up at construction so unmodified call sites emit too.
+        self.telemetry: Telemetry | None = default_hub()
+        self.telemetry_rank: int | None = None
+        if self.telemetry is not None:
+            self.telemetry.attach_pool(self)
 
     # --------------------------------------------------------------- tenants
     @property
@@ -627,6 +642,13 @@ class HeteroMemory:
             key = ("gather", group) if (hidden and group is not None) else None
             self.timeline.record_collective(nbytes, critical=not hidden,
                                             key=key)
+        tel = self.telemetry
+        if tel is not None:
+            ts, dur = self._last_window()
+            tel.collective("allgather", nbytes=nbytes, stream="param",
+                           tenant=None, hidden=hidden, ts=ts, dur=dur,
+                           moment=self._current_moment,
+                           rank=self.telemetry_rank, group=group)
 
     def account_reduce_scatter(self, nbytes: int) -> None:
         """Book grad bytes this rank sent to chunk owners (Algorithm 2).
@@ -637,6 +659,13 @@ class HeteroMemory:
         self.collectives.reduce_scatter_count += 1
         if self.timeline is not None:
             self.timeline.record_collective(nbytes, critical=False)
+        tel = self.telemetry
+        if tel is not None:
+            ts, dur = self._last_window()
+            tel.collective("reduce_scatter", nbytes=nbytes, stream="param",
+                           tenant=None, hidden=True, ts=ts, dur=dur,
+                           moment=self._current_moment,
+                           rank=self.telemetry_rank)
 
     def account_allreduce(self, nbytes: int) -> None:
         """Book non-chunk (stem) grad all-reduce bytes."""
@@ -644,6 +673,13 @@ class HeteroMemory:
         if self.timeline is not None:
             self.timeline.record_collective(nbytes, critical=False,
                                             stream="stem")
+        tel = self.telemetry
+        if tel is not None:
+            ts, dur = self._last_window()
+            tel.collective("allreduce", nbytes=nbytes, stream="stem",
+                           tenant=None, hidden=True, ts=ts, dur=dur,
+                           moment=self._current_moment,
+                           rank=self.telemetry_rank)
 
     # -------------------------------------------------------------- schedule
     def register_moments(self, stream: str, moments: dict[int, list[int]]) -> None:
@@ -660,6 +696,40 @@ class HeteroMemory:
         """Attach a transfer timeline: every tier move (and collective)
         from here on is enqueued on its DMA engines."""
         self.timeline = timeline
+        if timeline is not None and self.telemetry is not None:
+            timeline.set_telemetry(self.telemetry, rank=self.telemetry_rank)
+
+    def set_telemetry(self, telemetry: Telemetry | None, *,
+                      rank: int | None = None) -> None:
+        """Attach a telemetry hub: every tier move, eviction decision,
+        prefetch phase, collective and OOM from here on emits a
+        structured event, and the hub's flight recorder is appended to
+        OutOfMemory reports.  ``rank`` tags every event (and Chrome-trace
+        track) on distributed pools.  Re-pointing a pool (e.g. an explicit
+        ``telemetry=`` overriding an adopted default hub) detaches it from
+        the previous hub so each hub's counter ground truth covers exactly
+        the pools whose events it holds."""
+        if self.telemetry is not None and self.telemetry is not telemetry:
+            self.telemetry.detach_pool(self)
+        self.telemetry = telemetry
+        self.telemetry_rank = rank
+        if telemetry is not None:
+            telemetry.attach_pool(self)
+        if self.timeline is not None:
+            self.timeline.set_telemetry(telemetry, rank=rank)
+
+    def _now(self) -> float | None:
+        """Event timestamp: the simulated clock when a timeline is
+        attached, None (moment-index ordering) otherwise."""
+        return self.timeline.now if self.timeline is not None else None
+
+    def _last_window(self) -> tuple[float | None, float]:
+        """(start ts, duration) of the transfer the timeline recorded
+        last — the slice the matching telemetry event occupies."""
+        if self.timeline is None:
+            return None, 0.0
+        start, end = self.timeline.last_window
+        return start, end - start
 
     def set_chunkable_memory_fn(self, fn: Callable[[], int | None],
                                 tenant: Tenant | None = None,
@@ -743,6 +813,13 @@ class HeteroMemory:
                 self._staged.discard(key)
                 if self.timeline is not None:
                     self.timeline.cancel(key)
+                tel = self.telemetry
+                if tel is not None:
+                    tel.prefetch("stale", stream=mgr.name,
+                                 tenant=mgr.tenant.name, chunk_id=chunk_id,
+                                 nbytes=mgr.chunk_bytes, ts=self._now(),
+                                 moment=mgr.tenant.current_moment,
+                                 rank=self.telemetry_rank, why="left-device")
             # moves run between adjacent tiers only: a slow<->device
             # demand routes through host (s2h + h2d, both legs waited on).
             # Pin across the route: ``exclude`` shields the chunk from
@@ -776,6 +853,13 @@ class HeteroMemory:
                 # wire stalls it for the remainder — hidden bytes beyond
                 # the overlap window surface instead of disappearing.
                 self.timeline.wait_for(key)
+            tel = self.telemetry
+            if tel is not None:
+                tel.prefetch("hit", stream=mgr.name, tenant=mgr.tenant.name,
+                             chunk_id=chunk_id, nbytes=mgr.chunk_bytes,
+                             ts=self._now(),
+                             moment=mgr.tenant.current_moment,
+                             rank=self.telemetry_rank)
         return rec
 
     def release_payload(self, mgr: "ChunkManager", chunk_id: int) -> None:
@@ -897,6 +981,31 @@ class HeteroMemory:
                           else self.timeline.record_h2s)
                 end = record(mgr.chunk_bytes, stream=mgr.name,
                              critical=self._staging == 0, start_after=after)
+        tel = self.telemetry
+        if tel is not None:
+            # "bounce": an eviction moving UP the tier stack (the
+            # bottom-tier overflow escape, e.g. host->device on two-tier
+            # pools) rather than demoting down it.
+            cause = ("bounce" if kind == "evict"
+                     and TIER_ORDER.index(to_dev)
+                     < TIER_ORDER.index(rec.location) else kind)
+            if link == "h2d":
+                crit = kind != "stage"
+            elif link == "s2h":
+                crit = kind != "stage" and self._staging == 0
+            else:
+                crit = self._staging == 0
+            ts, dur = self._last_window()
+            tel.move(link, stream=mgr.name, tenant=mgr.tenant.name,
+                     chunk_id=rec.chunk_id, nbytes=mgr.chunk_bytes,
+                     cause=cause, critical=crit, ts=ts, dur=dur,
+                     moment=mgr.tenant.current_moment,
+                     rank=self.telemetry_rank)
+            if link == "h2d" and kind == "demand":
+                tel.prefetch("miss", stream=mgr.name, tenant=mgr.tenant.name,
+                             chunk_id=rec.chunk_id, nbytes=mgr.chunk_bytes,
+                             ts=ts, moment=mgr.tenant.current_moment,
+                             rank=self.telemetry_rank)
         self._uncharge(mgr, rec.location, mgr.chunk_bytes)
         rec.location = to_dev
         self._charge(mgr, to_dev, mgr.chunk_bytes)
@@ -943,6 +1052,19 @@ class HeteroMemory:
             return mgr._device_used
         return mgr._host_used if dev == "host" else mgr._slow_used
 
+    def _oom(self, reason: str, detail: str) -> OutOfMemory:
+        """Build an :class:`OutOfMemory`: the usage report as always, plus
+        — with a hub attached — an ``oom`` event (naming any shielding
+        tenants) and the flight recorder's last 32 events, so eviction-
+        shield deadlocks are diagnosable post-mortem."""
+        msg = f"{detail}\n{self._usage_report()}"
+        tel = self.telemetry
+        if tel is not None:
+            tel.oom(reason, ts=self._now(), rank=self.telemetry_rank,
+                    blocked_by=sorted(self._blocked_by))
+            msg = f"{msg}\n{tel.flight_report(32)}"
+        return OutOfMemory(msg)
+
     def make_room(
         self, dev: Device, nbytes: int, *, exclude: tuple[str, int]
     ) -> None:
@@ -982,19 +1104,19 @@ class HeteroMemory:
                         "; candidates remain but are shielded by the soft "
                         "budget of higher-priority tenant(s): "
                         + ", ".join(sorted(self._blocked_by)))
-                raise OutOfMemory(
+                raise self._oom(
+                    "no-evictable",
                     f"unified pool: cannot fit {nbytes} bytes on {dev}: "
                     f"used={self._used(dev)} cap={cap} and no evictable "
                     f"chunk (every resident is pinned, in COMPUTE, or the "
-                    f"incoming chunk itself){blocked}\n{self._usage_report()}"
-                )
+                    f"incoming chunk itself){blocked}")
             if rounds <= 0:
-                raise OutOfMemory(
+                raise self._oom(
+                    "no-progress",
                     f"unified pool: cannot fit {nbytes} bytes on {dev}: "
                     f"used={self._used(dev)} cap={cap}; evictable chunks "
                     f"remain but eviction made no net progress (cascades "
-                    f"bounce between full tiers)\n{self._usage_report()}"
-                )
+                    f"bounce between full tiers)")
             rounds -= 1
             self._evict(*victim, from_dev=dev, by=req)
 
@@ -1072,10 +1194,9 @@ class HeteroMemory:
         if _depth > sum(len(m._records) for m in self._streams.values()):
             # cascades bouncing between full tiers would otherwise
             # recurse forever; this is a genuine capacity fail
-            raise OutOfMemory(
-                "unified pool: eviction cascade cycled — every tier full\n"
-                + self._usage_report()
-            )
+            raise self._oom(
+                "cascade-cycle",
+                "unified pool: eviction cascade cycled — every tier full")
         key = (mgr.name, rec.chunk_id)
         if key in self._staged:
             for pf in (self.prefetch, mgr.tenant.prefetch):
@@ -1083,6 +1204,13 @@ class HeteroMemory:
             self._staged.discard(key)
             if self.timeline is not None:
                 self.timeline.cancel(key)
+            tel = self.telemetry
+            if tel is not None:
+                tel.prefetch("stale", stream=mgr.name, tenant=mgr.tenant.name,
+                             chunk_id=rec.chunk_id, nbytes=mgr.chunk_bytes,
+                             ts=self._now(),
+                             moment=mgr.tenant.current_moment,
+                             rank=self.telemetry_rank, why="evicted")
         if mgr.chunk_state(rec.chunk_id) is ChunkState.FREE:
             self.release_payload(mgr, rec.chunk_id)
             return
@@ -1091,6 +1219,18 @@ class HeteroMemory:
             # and are not evictions in the accountable sense)
             self.evictions[(mgr.tenant.name, by.name)] += 1
         to_dev = self._evict_target(from_dev)
+        tel = self.telemetry
+        if tel is not None:
+            vt = mgr.tenant
+            tel.evict(victim=vt.name,
+                      requester=by.name if by is not None else vt.name,
+                      policy=self.policy,
+                      urgency=("over-budget" if vt.over_budget(from_dev)
+                               else "in-budget"),
+                      stream=mgr.name, chunk_id=rec.chunk_id,
+                      nbytes=mgr.chunk_bytes, src=from_dev, dst=to_dev,
+                      ts=self._now(), moment=vt.current_moment,
+                      rank=self.telemetry_rank)
         # spill destination bound: a bottom-tier bounce (two-tier:
         # host->device, the paper's margin-space overflow of Fig. 10's
         # host-too-small case) is limited by the *static* tier capacity,
@@ -1108,16 +1248,15 @@ class HeteroMemory:
                 victim = self._pick_victim(to_dev, exclude=key,
                                            by=mgr.tenant)
                 if victim is None:
-                    raise OutOfMemory(
+                    raise self._oom(
+                        "target-full",
                         f"unified pool: eviction target {to_dev} full and "
-                        f"no victim\n{self._usage_report()}"
-                    )
+                        f"no victim")
                 if rounds <= 0:
-                    raise OutOfMemory(
+                    raise self._oom(
+                        "target-no-progress",
                         f"unified pool: eviction target {to_dev} full and "
-                        f"cascades make no net progress\n"
-                        f"{self._usage_report()}"
-                    )
+                        f"cascades make no net progress")
                 rounds -= 1
                 self._evict(*victim, from_dev=to_dev, by=mgr.tenant,
                             _depth=_depth + 1)
@@ -1229,6 +1368,12 @@ class HeteroMemory:
             after = self._move(mgr, rec, "host", kind="stage")
         self._move(mgr, rec, "device", kind="stage", after=after)
         self._staged.add(key)
+        tel = self.telemetry
+        if tel is not None:
+            tel.prefetch("issue", stream=mgr.name, tenant=mgr.tenant.name,
+                         chunk_id=rec.chunk_id, nbytes=mgr.chunk_bytes,
+                         ts=self._now(), moment=mgr.tenant.current_moment,
+                         rank=self.telemetry_rank, use_at=t_use)
         return True
 
 

@@ -88,6 +88,7 @@ from repro.core.memory import (
     acquire_pool,
 )
 from repro.core.state import TensorState
+from repro.core.telemetry import Telemetry
 from repro.core.timeline import StepTimeline, TransferTimeline
 
 # shared with the training engine: leaf names MUST be byte-identical
@@ -170,6 +171,7 @@ class ServingEngine:
         prefetch: bool = True,
         prefetch_lookahead: int = 8,
         timeline: TransferTimeline | None = None,
+        telemetry: Telemetry | None = None,
         bandwidth_aware_prefetch: bool = True,
         max_decode_batch: int | None = None,
         max_prefill_batch: int | None = None,
@@ -247,6 +249,8 @@ class ServingEngine:
         self.cmap = build_chunk_map(specs, chunk_size)
         self.pool = self._lease.pool
         self.timeline = self._lease.timeline
+        if telemetry is not None:
+            self.pool.set_telemetry(telemetry)
         self.params_mgr = self._lease.stream("param", self.cmap)
         for name, val in named:
             view = self.params_mgr.access_tensor(name, "host")
@@ -664,6 +668,13 @@ class ServingEngine:
         m, planned = self._planned.popleft()
         assert planned == op, (planned, op)
         self.tenant.set_moment(m)
+        tel = self.pool.telemetry
+        if tel is not None:
+            tel.switch_span(self.tenant.qualify("ops"),
+                            " ".join(str(x) for x in op),
+                            ts=self.pool._now(), moment=m,
+                            tenant=self.tenant.name,
+                            rank=self.pool.telemetry_rank)
         if self.prefetcher is not None:
             self.prefetcher.advance(m)
 
@@ -976,8 +987,13 @@ class ServingEngine:
         if not self._queue and not self._active:
             return None
         t0 = time.perf_counter()
-        st0 = dataclasses.replace(self.tenant.stats)
-        pf0 = dataclasses.replace(self.tenant.prefetch)
+        tel = self.pool.telemetry
+        if tel is not None:
+            tel.begin_span(self.tenant.qualify("round"),
+                           f"round{self.rounds}", ts=self.pool._now(),
+                           tenant=self.tenant.name,
+                           rank=self.pool.telemetry_rank)
+        st0, pf0 = self.tenant.snapshot()
         prefill0 = self.total_prefill_tokens
         decode0 = self.total_decode_tokens
         newly = self._admit()
@@ -999,7 +1015,11 @@ class ServingEngine:
         completed = self._retire_finished()
         self.rounds += 1
         pf = self.tenant.prefetch
-        return ServeRoundMetrics(
+        # close the round on the timeline FIRST: the drain stalls booked
+        # inside take_step belong before the round span's end timestamp
+        tl_step = (self.pool.timeline.take_step()
+                   if self.pool.timeline is not None else None)
+        met = ServeRoundMetrics(
             round_index=self.rounds - 1,
             admitted=len(newly),
             completed=completed,
@@ -1015,9 +1035,27 @@ class ServingEngine:
             demand_misses=pf.demand_misses - pf0.demand_misses,
             peak_device_bytes=self.tenant.take_step_peak_device_bytes(),
             wall_s=time.perf_counter() - t0,
-            timeline=(self.pool.timeline.take_step()
-                      if self.pool.timeline is not None else None),
+            timeline=tl_step,
         )
+        tel = self.pool.telemetry
+        if tel is not None:
+            ts = self.pool._now()
+            rank = self.pool.telemetry_rank
+            tel.close_span(self.tenant.qualify("ops"), ts=ts, rank=rank)
+            tel.close_span(self.tenant.qualify("round"), ts=ts, rank=rank)
+            tel.snapshot(
+                f"{self.tenant.name}:round{met.round_index}", ts=ts,
+                rank=rank, admitted=met.admitted, completed=met.completed,
+                active=met.active, queued=met.queued,
+                prefill_tokens=met.prefill_tokens,
+                decode_tokens=met.decode_tokens,
+                h2d_bytes=met.h2d_bytes, d2h_bytes=met.d2h_bytes,
+                hidden_h2d_bytes=met.hidden_h2d_bytes,
+                critical_h2d_bytes=met.critical_h2d_bytes,
+                prefetch_hits=met.prefetch_hits,
+                demand_misses=met.demand_misses,
+                peak_device_bytes=met.peak_device_bytes)
+        return met
 
     def _execute_round(self, cohorts, batches) -> None:
         """Run one planned round eagerly: per-cohort prefill passes, then

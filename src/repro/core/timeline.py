@@ -201,6 +201,16 @@ class TransferTimeline:
         # key -> (engine name, completion time, stream)
         self._pending: dict[Hashable, tuple[str, float, str]] = {}
         self._step = StepTimeline()
+        # telemetry hub (None == disabled: one predicate per call site);
+        # the pool's set_telemetry propagates here with its rank tag
+        self.telemetry = None
+        self.telemetry_rank: int | None = None
+        # (start, end) of the most recent _record — the pool reads it
+        # right after recording a move to timestamp the telemetry event
+        self.last_window: tuple[float, float] = (0.0, 0.0)
+        # whole-run per-lane stall seconds (never reset by take_step):
+        # the conservation ground truth the event log is checked against
+        self.total_stalls: dict[str, float] = {n: 0.0 for n in self._engines}
 
     @classmethod
     def calibrated(cls) -> "TransferTimeline":
@@ -214,6 +224,14 @@ class TransferTimeline:
         return cls(h2d_bandwidth=HOST_LINK_BW, d2h_bandwidth=HOST_LINK_BW,
                    h2s_bandwidth=NVME_BW, s2h_bandwidth=NVME_BW,
                    collective_bandwidth=ICI_BW)
+
+    def set_telemetry(self, telemetry, *, rank: int | None = None) -> None:
+        if self.telemetry is not None and self.telemetry is not telemetry:
+            self.telemetry.detach_timeline(self)
+        self.telemetry = telemetry
+        self.telemetry_rank = rank
+        if telemetry is not None:
+            telemetry.attach_timeline(self)
 
     # ------------------------------------------------------------- durations
     def _ns(self, tenant: str | None) -> _Schedule:
@@ -261,26 +279,36 @@ class TransferTimeline:
         (and the shared engines behind it) advances for everyone."""
         ns = self._ns(tenant)
         if ns.cur is not None and moment != ns.cur:
-            self._run_compute(ns, ns.cur)
+            self._run_compute(ns, ns.cur, tenant)
         ns.cur = moment
         self._active = tenant
 
-    def _run_compute(self, ns: _Schedule, moment: int) -> None:
+    def _run_compute(self, ns: _Schedule, moment: int,
+                     tenant: str | None) -> None:
         dur = ns.durations.get(moment, 0.0)
         if dur > 0.0:
+            tel = self.telemetry
+            if tel is not None:
+                tel.compute(moment=moment, seconds=dur, tenant=tenant,
+                            ts=self.now, rank=self.telemetry_rank)
             self.now += dur
             self._step.compute_s += dur
 
     def _stall(self, engine: str, stream: str, seconds: float) -> None:
         if seconds <= 0.0:
             return
+        cur = self._sched[self._active].cur if self._active in self._sched \
+            else None
+        tel = self.telemetry
+        if tel is not None:
+            tel.stall(engine, stream=stream, seconds=seconds, ts=self.now,
+                      moment=cur, rank=self.telemetry_rank)
+        self.total_stalls[engine] += seconds
         self.now += seconds
         setattr(self._step, _STALL_FIELD[engine],
                 getattr(self._step, _STALL_FIELD[engine]) + seconds)
         by_s = self._step.stall_by_stream
         by_s[stream] = by_s.get(stream, 0.0) + seconds
-        cur = self._sched[self._active].cur if self._active in self._sched \
-            else None
         if cur is not None:
             by_m = self._step.stall_by_moment
             by_m[cur] = by_m.get(cur, 0.0) + seconds
@@ -320,7 +348,11 @@ class TransferTimeline:
                 critical: bool, key: Hashable | None,
                 start_after: float | None = None) -> float:
         eng = self._engines[engine]
+        start = max(self.now, eng.busy_until)
+        if start_after is not None:
+            start = max(start, start_after)
         end = eng.enqueue(self.now, nbytes, start_after)
+        self.last_window = (start, end)
         if critical:
             # the consumer waits for queue position + wire time (FIFO:
             # hidden backlog ahead of it delays it — engine contention)
@@ -374,14 +406,25 @@ class TransferTimeline:
         cursor is armed at a time), drain residual queue backlog
         (marginal attribution in completion order), return this step's
         decomposition and re-arm."""
-        for ns in self._sched.values():
+        for tenant, ns in self._sched.items():
             if ns.cur is not None:
-                self._run_compute(ns, ns.cur)
+                self._run_compute(ns, ns.cur, tenant)
                 ns.cur = None
         for eng in sorted(self._engines.values(), key=lambda e: e.busy_until):
             self._stall(eng.name, _DRAIN_STREAM, eng.busy_until - self.now)
         rep = self._step
         rep.wall_s = self.now - self._step_start
+        tel = self.telemetry
+        if tel is not None:
+            # the mark closes a per-step event segment and carries the
+            # step's lane totals, so event-derived per-step stalls can be
+            # compared against the StepTimeline bit-for-bit
+            tel.mark("take_step", ts=self.now, rank=self.telemetry_rank,
+                     compute_s=rep.compute_s, h2d_stall_s=rep.h2d_stall_s,
+                     d2h_stall_s=rep.d2h_stall_s,
+                     h2s_stall_s=rep.h2s_stall_s,
+                     s2h_stall_s=rep.s2h_stall_s,
+                     gather_stall_s=rep.gather_stall_s, wall_s=rep.wall_s)
         self._step = StepTimeline()
         self._step_start = self.now
         return rep

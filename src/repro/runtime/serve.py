@@ -308,8 +308,27 @@ class CompiledServingEngine(ServingEngine):
         garbage harmless."""
         self._ensure_slot_capacity()
         decode_reqs = [r for b in batches for r in b]
+        tel = self.pool.telemetry
+        if tel is not None:
+            # compiled rounds split into two phases: the jitted compute
+            # (decode + prefill) and the pool replay that walks the
+            # planned op order — the replay is where every move/eviction
+            # event of the round is emitted.
+            tel.begin_span(self.tenant.qualify("compiled"), "compute",
+                           ts=self.pool._now(), tenant=self.tenant.name,
+                           rank=self.pool.telemetry_rank)
         if decode_reqs:
             self._compiled_decode(decode_reqs)
         for cohort in cohorts:
             self._compiled_prefill(cohort)
+        tel = self.pool.telemetry
+        if tel is not None:
+            tel.switch_span(self.tenant.qualify("compiled"), "replay",
+                            ts=self.pool._now(), tenant=self.tenant.name,
+                            rank=self.pool.telemetry_rank)
         self._replay_round_ops(cohorts, decode_reqs)
+        tel = self.pool.telemetry
+        if tel is not None:
+            tel.close_span(self.tenant.qualify("compiled"),
+                           ts=self.pool._now(),
+                           rank=self.pool.telemetry_rank)

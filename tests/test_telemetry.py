@@ -1,0 +1,348 @@
+"""Unified telemetry plane (core/telemetry.py): event<->counter
+conservation through the training / serving / compiled / distributed
+engines, exact per-step stall attribution via ``take_step`` marks,
+Chrome trace export round-trip, the OutOfMemory flight recorder, the
+``Tenant.snapshot`` helper, and the disabled-hub byte-identity
+guarantee (``telemetry=None`` changes nothing)."""
+
+import dataclasses
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import tracereport
+from repro.configs import get_config, model_class
+from repro.core.chunk import TensorSpec, build_chunk_map
+from repro.core.engine import PatrickStarEngine
+from repro.core.manager import ChunkManager
+from repro.core.memory import HeteroMemory, OutOfMemory
+from repro.core.serving import ServingEngine
+from repro.core.state import TensorState
+from repro.core.telemetry import Telemetry, default_hub, set_default_hub
+from repro.core.timeline import TransferTimeline
+from repro.runtime.serve import CompiledServingEngine
+
+BUDGET = 4_000_000
+_LANE_FIELD = {"h2d": "h2d_stall_s", "d2h": "d2h_stall_s",
+               "h2s": "h2s_stall_s", "s2h": "s2h_stall_s",
+               "coll": "gather_stall_s"}
+
+
+def _cfg(layers=4):
+    return get_config("gpt2-paper-1b", smoke=True).replace(
+        num_layers=layers, param_dtype="float32", compute_dtype="float32")
+
+
+def _lm_batch(cfg, b, s, seed=1):
+    tok = jax.random.randint(jax.random.key(seed), (b, s), 0, cfg.vocab_size)
+    return {"tokens": tok, "labels": jnp.roll(tok, -1, 1),
+            "global_tokens": jnp.float32(b * s)}
+
+
+def _train(hub, *, steps=3, layers=4, bw=2e8):
+    cfg = _cfg(layers)
+    tl = TransferTimeline(h2d_bandwidth=bw, d2h_bandwidth=bw)
+    eng = PatrickStarEngine(
+        model_class(cfg), cfg, device_memory_bytes=BUDGET, policy="opt",
+        device_aware_placement=True, timeline=tl, telemetry=hub)
+    batch = _lm_batch(cfg, 2, 32)
+    mets = [eng.step(batch) for _ in range(steps)]
+    eng.pool.check_invariants()
+    return eng, mets
+
+
+# ---------------------------------------------------------------------------
+# conservation: events == counters, exactly
+# ---------------------------------------------------------------------------
+
+
+def test_train_conservation_exact():
+    """3-step train under tight bandwidth: event-derived per-lane byte
+    totals, move counts, hidden/critical split, prefetch lifecycle
+    counts and stall seconds all equal the live counters exactly."""
+    hub = Telemetry()
+    eng, _ = _train(hub)
+    assert hub.events, "hub recorded nothing"
+    hub.assert_conservation()
+    hub.assert_balanced_spans()
+    # spot-check the byte identity by hand as well
+    assert hub.lane_bytes()["h2d"] == eng.pool.stats.h2d_bytes
+    assert hub.lane_bytes()["d2h"] == eng.pool.stats.d2h_bytes
+    hidden, critical = hub.h2d_split()
+    assert hidden == eng.pool.prefetch.hidden_h2d_bytes
+    assert critical == eng.pool.prefetch.critical_h2d_bytes
+
+
+def test_per_step_stall_attribution_is_exact():
+    """Each ``take_step`` mark carries the StepTimeline lane totals, and
+    the stall events inside that step's segment sum to them bit-for-bit
+    (identical left-folds of the same float sequence)."""
+    hub = Telemetry()
+    _, mets = _train(hub)
+    marks = [seg for seg in hub.step_segments()
+             if seg and seg[-1].kind == "mark"
+             and seg[-1].name == "take_step"]
+    assert len(marks) == len(mets)
+    total_stall = 0.0
+    for seg, met in zip(marks, mets):
+        mark = seg[-1]
+        step = met.timeline
+        for lane, field in _LANE_FIELD.items():
+            got = 0.0
+            for ev in seg:
+                if ev.kind == "stall" and ev.name == lane:
+                    got += ev.dur
+            assert got == mark.attrs[field] == getattr(step, field), (
+                lane, got, mark.attrs[field], getattr(step, field))
+        assert mark.attrs["compute_s"] == step.compute_s
+        assert mark.attrs["wall_s"] == step.wall_s
+        total_stall += sum(mark.attrs[f] for f in _LANE_FIELD.values())
+    assert total_stall > 0.0, "scenario must actually stall"
+
+
+@pytest.mark.parametrize("cls", [ServingEngine, CompiledServingEngine])
+def test_serving_burst_conservation(cls):
+    """A serving burst (eager and compiled) conserves bytes and stalls,
+    closes every round/op span, and snapshots per-round metrics."""
+    cfg = get_config("qwen3-0.6b", smoke=True).replace(
+        param_dtype="float32", compute_dtype="float32")
+    prompts = np.asarray(jax.random.randint(
+        jax.random.key(2), (4, 8), 0, cfg.vocab_size))
+    hub = Telemetry()
+    tl = TransferTimeline(h2d_bandwidth=2e8, d2h_bandwidth=2e8)
+    eng = cls(model_class(cfg), cfg, device_memory_bytes=1_200_000,
+              host_memory_bytes=8_000_000, max_seq_len=24,
+              timeline=tl, telemetry=hub)
+    rids = [eng.submit(p, 5) for p in prompts]
+    rounds = list(eng.run())
+    assert all(eng.result(r) is not None for r in rids)
+    eng.check_invariants()
+    assert hub.events
+    hub.assert_conservation()
+    hub.assert_balanced_spans()
+    # one per-round snapshot per completed round, in order
+    snaps = [s for s in hub.snapshots if s["label"].startswith("serve")
+             or ":round" in s["label"]]
+    assert len(snaps) == len(rounds)
+    trace = hub.chrome_trace()
+    assert trace["otherData"]["clock"] == "timeline"
+    tracereport.validate(trace)
+
+
+def test_distributed_rank_tracks():
+    """Per-rank cores share one hub: every placeable event is rank-
+    tagged after construction, per-rank stall conservation is exact, and
+    rank-prefixed tracks stay monotone in the export."""
+    from repro.core.distributed import DistributedPatrickStarEngine
+
+    cfg = _cfg(2)
+    hub = Telemetry()
+    eng = DistributedPatrickStarEngine(
+        model_class(cfg), cfg, nproc=2, device_memory_bytes=BUDGET,
+        device_aware_placement=False,
+        timeline_factory=lambda: TransferTimeline(collective_bandwidth=5e9),
+        telemetry=hub)
+    batch = _lm_batch(cfg, 4, 32)
+    for _ in range(2):
+        eng.step(batch)
+    eng.check_invariants()
+    hub.assert_conservation()
+    hub.assert_balanced_spans()
+    ranks = {ev.rank for ev in hub.events if ev.kind == "move"}
+    assert ranks == {0, 1}
+    trace = hub.chrome_trace()
+    tracereport.validate(trace)
+    tracks = {e["args"]["name"] for e in trace["traceEvents"]
+              if e.get("ph") == "M"}
+    assert any(t.startswith("rank0/") for t in tracks)
+    assert any(t.startswith("rank1/") for t in tracks)
+
+
+# ---------------------------------------------------------------------------
+# chrome trace export
+# ---------------------------------------------------------------------------
+
+
+def test_chrome_trace_roundtrips(tmp_path):
+    """The exported JSON is a valid trace_event object that survives a
+    json round-trip unchanged, with monotone per-track timestamps and
+    balanced spans; counters ride along in otherData."""
+    hub = Telemetry()
+    _train(hub, steps=2)
+    path = tmp_path / "train.json"
+    trace = hub.dump_chrome_trace(str(path))
+    loaded = tracereport.load(str(path))
+    assert loaded == json.loads(json.dumps(trace))
+    tracereport.validate(loaded)
+    assert loaded["otherData"]["clock"] == "timeline"
+    assert loaded["otherData"]["counters"]["lane_bytes"]["h2d"] > 0
+    phases = {e["ph"] for e in loaded["traceEvents"]}
+    assert {"X", "B", "E", "i", "M"} <= phases
+
+
+def test_tracereport_cli(tmp_path, capsys):
+    hub = Telemetry()
+    _train(hub, steps=2)
+    path = tmp_path / "train.json"
+    hub.dump_chrome_trace(str(path))
+    assert tracereport.main([str(path), "--top", "3"]) == 0
+    out = capsys.readouterr().out
+    assert "valid" in out
+    assert "top 3 chunks by transferred bytes" in out
+    assert "stall attribution" in out
+    assert "eviction churn" in out
+
+
+def test_span_discipline():
+    hub = Telemetry()
+    hub.begin_span("t", "outer")
+    hub.begin_span("t", "inner")
+    hub.end_span("t")
+    with pytest.raises(AssertionError, match="unclosed"):
+        hub.assert_balanced_spans()
+    hub.end_span("t")
+    hub.assert_balanced_spans()
+    with pytest.raises(AssertionError):
+        hub.end_span("t")  # nothing open
+
+
+# ---------------------------------------------------------------------------
+# flight recorder on OutOfMemory
+# ---------------------------------------------------------------------------
+
+SIZE = 8
+CB = SIZE * 4
+
+
+def _cmap(n):
+    return build_chunk_map([TensorSpec(f"t{i}", (SIZE,)) for i in range(n)],
+                           SIZE)
+
+
+def _hold(mgr, i, dev="device"):
+    mgr.access_tensor(f"t{i}", dev)
+    mgr.release_tensor(f"t{i}", TensorState.HOLD_AFTER_FWD)
+
+
+def test_oom_report_appends_flight_recorder():
+    """A shielded refusal dumps the last telemetry events into the
+    OutOfMemory report, next to the per-tenant usage table — and the
+    recorded oom event names the shielding tenants."""
+    pool = HeteroMemory(device_capacity_bytes=2 * CB,
+                        host_capacity_bytes=2 * CB, policy="fifo")
+    hub = Telemetry()
+    pool.set_telemetry(hub)
+    serve = pool.create_tenant("serve", priority=10,
+                               device_budget_bytes=2 * CB,
+                               host_budget_bytes=2 * CB)
+    kv = ChunkManager(_cmap(2), name="kv", pool=pool, tenant=serve)
+    train = ChunkManager(_cmap(4), name="os", pool=pool)
+    _hold(kv, 0)
+    _hold(kv, 1)             # serve fills the device tier, within budget
+    _hold(train, 0, "host")
+    _hold(train, 1, "host")  # host full too: no cascade escape
+    with pytest.raises(OutOfMemory) as ei:
+        _hold(train, 2)
+    msg = str(ei.value)
+    # the existing tenant-grouped usage table is still there...
+    assert "shielded by the soft budget of higher-priority tenant(s): serve" \
+        in msg
+    assert "serve[64/64]" in msg
+    # ...and the flight recorder rides along, with real event lines
+    assert "flight recorder (last" in msg
+    assert "move h2d" in msg or "state" in msg
+    # the recorded oom event names the shielded blockers
+    ooms = [ev for ev in hub.events if ev.kind == "oom"]
+    assert ooms and ooms[-1].attrs["blocked_by"] == ["serve"]
+    assert ooms[-1].name == "no-evictable"
+    # the ring is bounded
+    assert len(hub.flight_record(8)) <= 8
+
+
+def test_flight_recorder_ring_is_bounded():
+    hub = Telemetry(ring_capacity=16)
+    for i in range(100):
+        hub.mark(f"m{i}")
+    assert len(hub.ring) == 16
+    rec = hub.flight_record(32)
+    assert len(rec) == 16 and rec[-1].name == "m99"
+    assert "m99" in hub.flight_report(4)
+
+
+# ---------------------------------------------------------------------------
+# disabled hub: byte-identity; default hub; Tenant.snapshot
+# ---------------------------------------------------------------------------
+
+
+def test_disabled_hub_is_byte_identical():
+    """telemetry=None must not change a single decision: same losses,
+    same victims, same counters as a hub-attached run."""
+    eng_off, mets_off = _train(None, steps=2)
+    eng_on, mets_on = _train(Telemetry(), steps=2)
+    assert [m.loss for m in mets_off] == [m.loss for m in mets_on]
+    assert eng_off.pool.evictions == eng_on.pool.evictions
+    assert eng_off.pool.stats == eng_on.pool.stats
+    assert eng_off.pool.prefetch == eng_on.pool.prefetch
+    off_t, on_t = mets_off[-1].timeline, mets_on[-1].timeline
+    assert off_t.wall_s == on_t.wall_s
+    assert off_t.h2d_stall_s == on_t.h2d_stall_s
+
+
+def test_default_hub_adopted_at_pool_construction():
+    hub = Telemetry()
+    prev = set_default_hub(hub)
+    try:
+        pool = HeteroMemory(device_capacity_bytes=4 * CB)
+        assert pool.telemetry is hub
+        assert default_hub() is hub
+    finally:
+        set_default_hub(prev)
+    pool2 = HeteroMemory(device_capacity_bytes=4 * CB)
+    assert pool2.telemetry is None
+
+
+def test_explicit_hub_detaches_pool_from_default_hub():
+    """An explicit telemetry= overriding an adopted default hub detaches
+    the pool from it: each hub's counter ground truth covers exactly the
+    pools whose events it holds, so BOTH still conserve."""
+    default = Telemetry()
+    prev = set_default_hub(default)
+    try:
+        local = Telemetry()
+        eng, _ = _train(local, steps=1)
+    finally:
+        set_default_hub(prev)
+    assert eng.pool.telemetry is local
+    local.assert_conservation()
+    assert local.lane_bytes()["d2h"] > 0
+    default.assert_conservation()  # no stranded pools: trivially empty
+    assert not [ev for ev in default.events if ev.kind == "move"]
+    assert default.counter_totals()["lane_bytes"]["h2d"] == 0
+
+
+def test_capture_states_off_suppresses_state_events():
+    hub = Telemetry(capture_states=False)
+    pool = HeteroMemory(device_capacity_bytes=4 * CB)
+    pool.set_telemetry(hub)
+    mgr = ChunkManager(_cmap(2), name="s", pool=pool)
+    _hold(mgr, 0)
+    _hold(mgr, 0, "host")  # a real d2h hop
+    assert [ev for ev in hub.events if ev.kind == "move"]
+    assert not [ev for ev in hub.events if ev.kind == "state"]
+
+
+def test_tenant_snapshot_returns_independent_copies():
+    pool = HeteroMemory(device_capacity_bytes=4 * CB)
+    mgr = ChunkManager(_cmap(2), name="s", pool=pool)
+    _hold(mgr, 0)
+    tenant = pool.default_tenant
+    st, pf = tenant.snapshot()
+    assert st == tenant.stats and st is not tenant.stats
+    assert pf == tenant.prefetch and pf is not tenant.prefetch
+    before = st.d2h_bytes
+    _hold(mgr, 0, "host")  # a real d2h hop
+    assert tenant.stats.d2h_bytes > before  # live object moved on...
+    assert st.d2h_bytes == before           # ...the snapshot did not

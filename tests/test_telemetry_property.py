@@ -1,0 +1,152 @@
+"""Hypothesis property tests for the telemetry plane: under random
+multi-stream / multi-tenant chunk traffic with a (bandwidth-aware)
+prefetcher and a transfer timeline attached, the event log conserves
+everything it mirrors — per-lane byte totals equal the ``TransferStats``
+counters (globally AND per tenant), event-derived stall seconds equal
+the timeline's whole-run ledger and the ``StepTimeline`` lanes
+bit-for-bit, prefetch lifecycle counts match, and span events always
+nest (every begin has a matching end, no interleaving within a track)."""
+
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.analysis import tracereport
+from repro.core.chunk import TensorSpec, build_chunk_map
+from repro.core.manager import ChunkManager
+from repro.core.memory import HeteroMemory, OutOfMemory, SchedulePrefetcher
+from repro.core.state import TensorState
+from repro.core.telemetry import MOVE_LANES, Telemetry
+from repro.core.timeline import TransferTimeline
+
+SIZE = 8  # elements per tensor == per chunk (one tensor per chunk)
+CB = SIZE * 4  # chunk bytes (fp32)
+
+
+@st.composite
+def telemetry_traffic(draw):
+    n = draw(st.integers(2, 6))
+    n_streams = draw(st.integers(1, 3))
+    ops = draw(st.lists(
+        st.tuples(st.integers(0, n_streams - 1), st.integers(0, n - 1),
+                  st.sampled_from(["hold", "free"])),
+        min_size=5, max_size=60))
+    policy = draw(st.sampled_from(["opt", "lru", "fifo"]))
+    device_chunks = draw(st.integers(1, n * n_streams))
+    bw = lambda: draw(st.one_of(
+        st.none(), st.floats(1.0, 1e6, allow_nan=False, allow_infinity=False)))
+    h2d_bw, d2h_bw = bw(), bw()
+    durations = draw(st.lists(
+        st.floats(0.0, 2.0, allow_nan=False, allow_infinity=False),
+        min_size=len(ops), max_size=len(ops)))
+    aware = draw(st.booleans())
+    two_tenants = draw(st.booleans())
+    return n, n_streams, ops, policy, device_chunks, h2d_bw, d2h_bw, \
+        durations, aware, two_tenants
+
+
+def _run(n, n_streams, ops, policy, device_chunks, h2d_bw, d2h_bw,
+         durations, aware, two_tenants):
+    """Replay one traffic sequence through a hub-attached pool; odd
+    streams belong to a second (higher-priority) tenant when drawn."""
+    hub = Telemetry()
+    streams = [f"s{i}" for i in range(n_streams)]
+    specs = [TensorSpec(f"t{i}", (SIZE,)) for i in range(n)]
+    cmap = build_chunk_map(specs, SIZE)
+    pool = HeteroMemory(
+        device_capacity_bytes=device_chunks * CB,
+        host_capacity_bytes=(n * n_streams + 2) * CB, policy=policy)
+    pool.set_telemetry(hub)
+    tl = TransferTimeline(h2d_bandwidth=h2d_bw, d2h_bandwidth=d2h_bw)
+    pool.set_timeline(tl)
+    serve = (pool.create_tenant("serve", priority=5)
+             if two_tenants and n_streams > 1 else None)
+    mgrs = {}
+    for i, s in enumerate(streams):
+        if serve is not None and i % 2 == 1:
+            mgrs[s] = ChunkManager(cmap, name=s, pool=pool, tenant=serve)
+        else:
+            mgrs[s] = ChunkManager(cmap, name=s, pool=pool)
+    per_stream: dict[str, dict[int, list[int]]] = {}
+    refs = []
+    for m, (s_idx, t_idx, _rel) in enumerate(ops):
+        name = mgrs[streams[s_idx]].name
+        per_stream.setdefault(name, {}).setdefault(t_idx, []).append(m)
+        refs.append((m, name, t_idx))
+    for s, sched in per_stream.items():
+        pool.register_moments(s, sched)
+    tl.install_durations({m: d for m, d in enumerate(durations) if d > 0})
+    pf = SchedulePrefetcher(pool, lookahead=4, max_inflight=2,
+                            timeline=tl if aware else None)
+    pf.install(refs)
+    hub.begin_span("traffic", "run", ts=tl.now)
+    for m, (s_idx, t_idx, rel) in enumerate(ops):
+        mgr = mgrs[streams[s_idx]]
+        pool.set_moment(m)
+        pf.advance(m)
+        hub.switch_span("ops", f"m{m}", ts=tl.now, moment=m)
+        try:
+            mgr.access_tensor(f"t{t_idx}")
+        except OutOfMemory:
+            break
+        mgr.release_tensor(
+            f"t{t_idx}",
+            TensorState.HOLD_AFTER_FWD if rel == "hold" else TensorState.FREE)
+    pool.check_invariants()
+    rep = tl.take_step()
+    hub.close_span("ops", ts=tl.now)
+    hub.end_span("traffic", ts=tl.now)
+    return pool, tl, hub, rep
+
+
+@given(telemetry_traffic())
+@settings(max_examples=40, deadline=None)
+def test_event_bytes_equal_counters_globally_and_per_tenant(t):
+    """Per-lane event byte/count totals == TransferStats, exactly —
+    for the pool and for every tenant's accounting mirror."""
+    pool, _tl, hub, _rep = _run(*t)
+    hub.assert_conservation()
+    lane = hub.lane_bytes()
+    assert lane["h2d"] == pool.stats.h2d_bytes
+    assert lane["d2h"] == pool.stats.d2h_bytes
+    for name, tenant in pool.tenants.items():
+        for ln in MOVE_LANES:
+            got = sum(ev.nbytes for ev in hub.events
+                      if ev.kind == "move" and ev.name == ln
+                      and ev.tenant == name)
+            assert got == getattr(tenant.stats, f"{ln}_bytes"), (name, ln)
+
+
+@given(telemetry_traffic())
+@settings(max_examples=40, deadline=None)
+def test_event_stalls_equal_timeline_ledgers_exactly(t):
+    """Event-derived stall seconds == the timeline's whole-run ledger ==
+    the StepTimeline lanes, bit-for-bit (identical left-folds of the
+    same float sequence — no tolerance)."""
+    pool, tl, hub, rep = _run(*t)
+    stalls = hub.stall_totals()
+    assert stalls == tl.total_stalls
+    # one step taken => whole-run totals ARE the step's lanes
+    assert stalls["h2d"] == rep.h2d_stall_s
+    assert stalls["d2h"] == rep.d2h_stall_s
+    assert stalls["coll"] == rep.gather_stall_s
+    if tl.h2d.bandwidth is None and tl.d2h.bandwidth is None:
+        assert sum(stalls.values()) == 0.0
+
+
+@given(telemetry_traffic())
+@settings(max_examples=40, deadline=None)
+def test_spans_nest_and_trace_validates(t):
+    """Every span begin has a matching end with no interleaving, and the
+    exported Chrome trace passes structural validation (monotone
+    timestamps per track, balanced B/E, byte conservation)."""
+    _pool, _tl, hub, _rep = _run(*t)
+    hub.assert_balanced_spans()
+    assert not hub.open_spans()
+    tracereport.validate(hub.chrome_trace())
+    counts = hub.prefetch_counts()
+    assert counts["issue"] == _pool.prefetch.staged_transfers
+    assert counts["hit"] == _pool.prefetch.hits
+    assert counts["miss"] == _pool.prefetch.demand_misses
+    assert counts["stale"] == _pool.prefetch.wasted_stages
